@@ -1,0 +1,64 @@
+"""Paper Figs. 4-5: DGO vs gradient descent on the ANN objectives.
+
+Fig. 4: the 8-variable XOR network; Fig. 5: the ~688-variable 8-class
+remote-sensing MLP (synthetic Gaussian-cluster stand-in for the Landsat
+scene). Reports final errors and the error-trace advantage of DGO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dgo
+from repro.core.dgo import DGOConfig
+from repro.core.encoding import Encoding
+from repro.core.objectives import (
+    RS_NVARS, remote_sensing_objective, xor_objective,
+)
+from repro.optim import gd_minimize
+
+
+def run(fast: bool = True):
+    out = []
+    # ---- XOR (Fig. 4) ----
+    obj = xor_objective()
+    res = dgo.run_clustered(
+        obj.fn, DGOConfig(encoding=Encoding(8, 2, -8.0, 8.0), max_bits=16),
+        n_clusters=16, key=jax.random.PRNGKey(0))
+    gd_vals = [float(gd_minimize(obj.fn, obj.encoding,
+                                 jax.random.PRNGKey(s), steps=3000)[1])
+               for s in range(4)]
+    out.append(("bench_ann.xor_dgo_mse", float(res.value),
+                f"trace_len={len(res.trace)}"))
+    out.append(("bench_ann.xor_gd_best_mse", min(gd_vals),
+                "best of 4 starts"))
+    out.append(("bench_ann.xor_dgo_beats_gd",
+                float(float(res.value) < min(gd_vals)), "paper Fig.4"))
+
+    # ---- remote sensing (Fig. 5) ----
+    obj = remote_sensing_objective(n_per_class=8 if fast else 32)
+    cfg = DGOConfig(encoding=obj.encoding, max_bits=5 if fast else 6,
+                    bits_step=1, max_iters_per_resolution=6 if fast else 24)
+    res = dgo.run(obj.fn, cfg, key=jax.random.PRNGKey(1))
+    gd_vals = [float(gd_minimize(obj.fn, obj.encoding,
+                                 jax.random.PRNGKey(s),
+                                 steps=400 if fast else 2000, lr=0.05)[1])
+               for s in range(2)]
+    out.append(("bench_ann.rs_nvars", float(RS_NVARS),
+                "paper says 688; closest standard 7-42-8 topology"))
+    out.append(("bench_ann.rs_dgo_ce", float(res.value),
+                f"evals={res.evaluations}"))
+    out.append(("bench_ann.rs_gd_best_ce", min(gd_vals),
+                "best of 2; NOTE tuned modern GD beats DGO on this smooth "
+                "synthetic CE (the paper's 1995 Landsat result does not "
+                "transfer) - reported honestly, see EXPERIMENTS"))
+    out.append(("bench_ann.rs_dgo_trace_drop",
+                float(res.trace[0] - res.trace[-1]),
+                "error trace decrease (Fig.5 shape)"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, note in run(fast=False):
+        print(f"{name},{val},{note}")

@@ -1,0 +1,62 @@
+"""Paper Figs. 2-3 + text: "DGO was found to be the only algorithm which
+successfully discovered the global optimum point of each test function."
+
+Success-rate table over the formulated test functions: DGO (clustered,
+the paper's MP-1 mode) vs matlab-fmin (Nelder-Mead), gradient descent,
+GA and simulated annealing — each given multiple seeds and a comparable
+evaluation budget.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import dgo
+from repro.core.dgo import DGOConfig
+from repro.core.objectives import TEST_FUNCTIONS
+from repro.optim import ga_minimize, gd_minimize, nelder_mead_minimize, sa_minimize
+
+
+def _success(val, obj):
+    return abs(float(val) - obj.f_opt) < obj.tol
+
+
+def run(fast: bool = True):
+    seeds = range(3 if fast else 8)
+    objs = TEST_FUNCTIONS[:5] if fast else TEST_FUNCTIONS
+    out = []
+    methods = {
+        "dgo": lambda o, k: dgo.run_clustered(
+            o.fn, DGOConfig(encoding=o.encoding, max_bits=16),
+            n_clusters=32, key=k).value,
+        "nelder_mead": lambda o, k: nelder_mead_minimize(
+            o.fn, o.encoding, k, iters=300)[1],
+        "grad_descent": lambda o, k: gd_minimize(
+            o.fn, o.encoding, k, steps=3000)[1],
+        "ga": lambda o, k: ga_minimize(
+            o.fn, o.encoding, k, pop_size=64, generations=150)[1],
+        "sim_anneal": lambda o, k: sa_minimize(
+            o.fn, o.encoding, k, steps=8000)[1],
+    }
+    table = {}
+    for mname, fn in methods.items():
+        rates = []
+        for obj in objs:
+            ok = sum(_success(fn(obj, jax.random.PRNGKey(s)), obj)
+                     for s in seeds)
+            rates.append(ok / len(list(seeds)))
+        table[mname] = rates
+        out.append((f"bench_testfunctions.{mname}_mean_success",
+                    float(np.mean(rates)),
+                    ";".join(f"{o.name}={r:.2f}"
+                             for o, r in zip(objs, rates))))
+    # the paper's headline: DGO solves everything the others don't
+    out.append(("bench_testfunctions.dgo_solves_all",
+                float(all(r == 1.0 for r in table["dgo"])),
+                "paper: DGO was the only method to find every optimum"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, note in run(fast=False):
+        print(f"{name},{val},{note}")

@@ -1,0 +1,375 @@
+"""Roofline analysis per (arch x shape x mesh) cell.
+
+Three terms (seconds per step, per the assignment):
+
+  compute    = FLOPs / (chips x 197 TFLOP/s bf16)
+  memory     = HBM bytes / (chips x 819 GB/s)
+  collective = ICI wire bytes / (chips x 50 GB/s/link)
+
+FLOPs/HBM bytes are ANALYTICAL, derived from the parameter spec tree
+(matmul FLOPs = 2 x tokens x weight-params actually touched) plus explicit
+quadratic/state terms for attention, SSD and mLSTM. Rationale: XLA's CPU
+``cost_analysis()`` counts every while-loop (scan) body exactly once, so it
+under-reports any scanned program by the trip count; the analytical model
+is exact for matmuls and documented for the rest, and is cross-checked
+against cost_analysis on single-layer lowerings (see EXPERIMENTS.md
+§Roofline "validation"). Collective wire bytes ARE HLO-derived: dryrun.py
+parses the post-SPMD module and multiplies每 collective by its exact
+while-loop trip counts (backend_config known_trip_count).
+
+MODEL_FLOPS uses the assignment's definition (6*N*D dense / 6*N_active*D
+MoE, D = tokens); the useful-compute ratio MODEL_FLOPS / FLOPs_total
+exposes remat + capacity-padding + quadratic-attention overheads.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import jax
+
+from repro.configs import REGISTRY
+from repro.configs.shapes import SHAPES, applicable
+from repro.models.lm import ArchConfig, build_plan, model_spec
+from repro.models.layers import ParamSpec, is_spec
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (from the spec tree — single source of truth)
+# ---------------------------------------------------------------------------
+
+def _leaf_params(tree, strip_stack=False):
+    total = 0
+    for sp in jax.tree.leaves(tree, is_leaf=is_spec):
+        shape = sp.shape[1:] if strip_stack else sp.shape
+        if len(shape) >= 2:                    # matmul weights only
+            total += math.prod(shape)
+    return total
+
+
+def param_budget(arch: ArchConfig) -> dict:
+    """Matmul-weight params by role (per single layer for segments)."""
+    spec = model_spec(arch)
+    out = {"embed": math.prod(spec["embed"]["table"].shape),
+           "lm_head": (math.prod(spec["lm_head"].shape)
+                       if "lm_head" in spec else 0),
+           "segments": {}}
+    for seg in build_plan(arch):
+        if seg.kind == "shared":
+            continue
+        node = spec["segments"][seg.name]
+        per_layer = _leaf_params(node, strip_stack=True)
+        moe_part = 0
+        if seg.moe:
+            ffn = node["ffn"]
+            moe_part = sum(
+                math.prod(sp.shape[1:])
+                for key in ("gate", "up", "down")
+                for sp in jax.tree.leaves(ffn[key], is_leaf=is_spec))
+            shared_part = (_leaf_params(ffn["shared"], strip_stack=True)
+                           if "shared" in ffn else 0)
+            router = math.prod(ffn["router"].shape[1:])
+            dense_rest = per_layer - moe_part - shared_part - router
+            out["segments"][seg.name] = {
+                "n": seg.n, "kind": seg.kind, "moe": True,
+                "dense": dense_rest + router + shared_part,
+                "experts_total": moe_part,
+                "experts_active_frac": arch.moe_top_k / arch.moe_experts,
+            }
+        else:
+            out["segments"][seg.name] = {
+                "n": seg.n, "kind": seg.kind, "moe": False,
+                "dense": per_layer, "experts_total": 0,
+                "experts_active_frac": 0.0,
+            }
+    if arch.block_pattern == "zamba":
+        out["shared_attn"] = (_leaf_params(spec["shared_attn"])
+                              + _leaf_params(spec["shared_proj"]))
+        out["shared_apps"] = sum(1 for s in build_plan(arch)
+                                 if s.kind == "shared")
+    if arch.enc_dec:
+        out["encoder_layer"] = _leaf_params(spec["encoder"]["layers"],
+                                            strip_stack=True)
+    if arch.mtp:
+        out["mtp"] = _leaf_params(spec["mtp"])
+    return out
+
+
+def active_params(arch: ArchConfig) -> int:
+    """Per-token active matmul params (MoE: top-k + shared only)."""
+    b = param_budget(arch)
+    total = b["embed"] + b["lm_head"]
+    for seg in b["segments"].values():
+        total += seg["n"] * (seg["dense"] + seg["experts_total"]
+                             * seg["experts_active_frac"])
+    total += b.get("shared_attn", 0) * b.get("shared_apps", 0)
+    total += b.get("encoder_layer", 0) * arch.n_enc_layers
+    total += b.get("mtp", 0)
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# FLOPs model
+# ---------------------------------------------------------------------------
+
+def _attn_score_flops(arch, b, s_q, s_kv, causal=True):
+    """QK^T + AV for all layers of attention kind, window-aware."""
+    if arch.use_mla:
+        per_head = (arch.kv_lora_rank and
+                    (128 + 64 + 128))       # (dn+dr) score + dv AV
+        dims = 128 + 64 + 128
+    else:
+        dims = 2 * arch.head_dim_v
+    total = 0.0
+    plan = build_plan(arch)
+    layer = 0
+    for seg in plan:
+        if seg.kind == "shared":
+            eff = s_kv / 2 if causal else s_kv
+            total += 2 * b * s_q * eff * arch.n_heads * 2 * arch.head_dim_v
+            continue
+        if seg.kind not in ("attn", "mla"):
+            layer += seg.n
+            continue
+        for i in range(layer, layer + seg.n):
+            if (arch.window and not (arch.global_every
+                                     and (i + 1) % arch.global_every == 0)):
+                eff = min(arch.window, s_kv)
+            else:
+                eff = s_kv / 2 if causal else s_kv
+            total += 2 * b * s_q * eff * arch.n_heads * dims
+        layer += seg.n
+    return total
+
+
+def _state_model_flops(arch, b, s):
+    """SSD / mLSTM / sLSTM non-matmul state terms (documented approx)."""
+    total = 0.0
+    for seg in build_plan(arch):
+        if seg.kind == "mamba":
+            di = 2 * arch.d_model
+            h, p, n, q = di // 64, 64, arch.ssm_state, arch.mamba_chunk
+            per_layer = 2 * b * s * (min(q, s) * (n + h) + 3 * h * p * n)
+            total += seg.n * per_layer
+        elif seg.kind == "mlstm":
+            di = 2 * arch.d_model
+            h = 4
+            hd = di // h
+            q = 256
+            per_layer = 2 * b * s * (2 * min(q, s) * h * hd + 2 * h * hd * hd)
+            total += seg.n * per_layer
+        elif seg.kind == "slstm":
+            h = arch.n_heads
+            hd = arch.d_model // h
+            total += seg.n * 8 * b * s * h * hd * hd
+    return total
+
+
+def flops_train(arch: ArchConfig, batch: int, seq: int) -> float:
+    tokens = batch * seq
+    matmul_fwd = 2 * tokens * active_params(arch)
+    attn_fwd = _attn_score_flops(arch, batch, seq, seq)
+    state_fwd = _state_model_flops(arch, batch, seq)
+    if arch.enc_dec:   # encoder runs on frames; cross-attn over frames
+        attn_fwd += _attn_score_flops(arch, batch, arch.n_frames,
+                                      arch.n_frames, causal=False)
+        attn_fwd += 2 * batch * seq * arch.n_frames * arch.n_heads \
+            * 2 * arch.head_dim_v * arch.n_layers
+    # MoE capacity padding: dispatched slots vs used slots
+    waste = 1.0
+    if arch.moe_experts:
+        waste = arch.moe_capacity        # slots = cf * k * T / E * E
+    fwd = matmul_fwd * waste + attn_fwd + state_fwd
+    # bwd = 2x fwd; full remat recomputes fwd once more
+    mult = 4.0 if arch.remat else 3.0
+    return fwd * mult
+
+
+def flops_prefill(arch: ArchConfig, batch: int, seq: int) -> float:
+    tokens = batch * seq
+    return (2 * tokens * active_params(arch)
+            * (arch.moe_capacity if arch.moe_experts else 1.0)
+            + _attn_score_flops(arch, batch, seq, seq)
+            + _state_model_flops(arch, batch, seq))
+
+
+def flops_decode(arch: ArchConfig, batch: int, ctx: int) -> float:
+    per_tok = 2 * active_params(arch)
+    attn = _attn_score_flops(arch, batch, 1, ctx)
+    state = _state_model_flops(arch, batch, 1)
+    return batch * per_tok + attn + state
+
+
+def model_flops(arch: ArchConfig, shape) -> float:
+    """Assignment definition: 6*N_active*D (train) / 2*N_active*D (serve)."""
+    n = active_params(arch)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch            # one token
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic model (per device)
+# ---------------------------------------------------------------------------
+
+def cache_bytes(arch: ArchConfig, batch: int, ctx: int) -> float:
+    total = 0.0
+    for seg in build_plan(arch):
+        if seg.kind == "shared":
+            total += 2 * batch * ctx * arch.n_kv_heads * arch.head_dim_v * 2
+        elif seg.kind == "attn":
+            total += seg.n * 2 * batch * ctx * arch.n_kv_heads \
+                * arch.head_dim_v * 2
+        elif seg.kind == "mla":
+            total += seg.n * batch * ctx * (arch.kv_lora_rank + 64) * 2
+        elif seg.kind == "mamba":
+            di = 2 * arch.d_model
+            total += seg.n * batch * (di * arch.ssm_state * 4
+                                      + 3 * (di + 2 * arch.ssm_state) * 2)
+        elif seg.kind in ("mlstm", "slstm"):
+            di = 2 * arch.d_model if seg.kind == "mlstm" else arch.d_model
+            hd = di // 4
+            total += seg.n * batch * (4 * hd * hd + 2 * 4 * hd) * 4
+    return total
+
+
+def hbm_bytes(arch: ArchConfig, shape, chips: int, model_shards: int,
+              n_micro: int = 1) -> float:
+    """Per-device bytes per step (documented coarse model; DESIGN §7)."""
+    p_active = active_params(arch)
+    p_total = p_active + (param_budget(arch)["embed"])
+    if shape.kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / (chips / model_shards)
+        # params: fwd read + bwd read (remat) per micro (TP shard), grads
+        # write f32, optimizer read/write (sharded over all chips)
+        p_tp = p_active * 2 / model_shards
+        param_traffic = n_micro * 2 * p_tp + 3 * p_tp * 2 \
+            + 12 * p_total * 2 / chips
+        act_traffic = 12 * tokens_dev * arch.d_model * 2 * arch.n_layers
+        return param_traffic + act_traffic
+    if shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / (chips / model_shards)
+        return (p_active * 2 / model_shards
+                + 8 * tokens_dev * arch.d_model * 2 * arch.n_layers
+                + cache_bytes(arch, shape.global_batch, shape.seq_len) / chips)
+    # decode: read all params + read the whole cache + O(1) writes
+    return (p_active * 2 / model_shards
+            + cache_bytes(arch, shape.global_batch, shape.seq_len) / chips
+            + 4 * shape.global_batch * arch.d_model * 2 * arch.n_layers
+            / (chips / model_shards))
+
+
+# ---------------------------------------------------------------------------
+# assembling the table
+# ---------------------------------------------------------------------------
+
+def load_artifact(arch_name: str, shape_name: str, mesh_tag: str):
+    f = ARTIFACTS / f"{arch_name}__{shape_name}__{mesh_tag}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def analyze_cell(arch_name: str, shape_name: str,
+                 mesh_tag: str = "pod16x16") -> dict | None:
+    arch = REGISTRY[arch_name]
+    shape = SHAPES[shape_name]
+    if not applicable(arch, shape):
+        return None
+    art = load_artifact(arch_name, shape_name, mesh_tag)
+    chips = 512 if "2x16" in mesh_tag else 256
+    model_shards = 16
+    n_micro = (art or {}).get("meta", {}).get("n_micro", 1)
+
+    if shape.kind == "train":
+        fl = flops_train(arch, shape.global_batch, shape.seq_len)
+    elif shape.kind == "prefill":
+        fl = flops_prefill(arch, shape.global_batch, shape.seq_len)
+    else:
+        fl = flops_decode(arch, shape.global_batch, shape.seq_len)
+
+    t_comp = fl / (chips * HW["peak_flops"])
+    mem = hbm_bytes(arch, shape, chips, model_shards, n_micro)
+    t_mem = mem / HW["hbm_bw"]
+    wire = 0.0
+    if art and art.get("status") == "ok":
+        for v in art["collectives"].values():
+            wire += v.get("executed_wire_bytes", v.get("wire_bytes", 0.0))
+    t_coll = wire / HW["link_bw"]
+
+    mf = model_flops(arch, shape)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_est": fl,
+        "useful_ratio": mf / fl if fl else 0.0,
+        "roofline_fraction": t_comp / bound if bound else 0.0,
+        "per_dev_hbm_gb": mem / 1e9,
+        "wire_gb": wire / 1e9,
+        "artifact": bool(art),
+    }
+
+
+MOVE_DOWN = {
+    "compute": "reduce recompute (selective remat) or cut capacity padding",
+    "memory": "shrink activation traffic (fusion/flash kernel) or cache dtype",
+    "collective": "overlap collectives with compute; bf16 reduces; "
+                  "reshard to cut gather volume",
+}
+
+
+def full_table(mesh_tag: str = "pod16x16") -> list[dict]:
+    rows = []
+    for a in REGISTRY:
+        for s in SHAPES:
+            r = analyze_cell(a, s, mesh_tag)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(fast: bool = True):
+    rows = full_table()
+    # hillclimbed cells (EXPERIMENTS §Perf): report optimized policies too
+    for arch, shape, pol in (("granite-34b", "train_4k", "zero1"),
+                             ("xlstm-125m", "train_4k", "dp")):
+        r = analyze_cell(arch, shape, f"pod16x16__{pol}")
+        if r and r["artifact"]:
+            r["shape"] = f"{shape}[{pol}]"
+            rows.append(r)
+    out = []
+    for r in rows:
+        out.append((f"roofline.{r['arch']}.{r['shape']}.dominant",
+                    {"compute": 0, "memory": 1, "collective": 2}[r["dominant"]],
+                    f"comp={r['t_compute_s']:.2e}s mem={r['t_memory_s']:.2e}s "
+                    f"coll={r['t_collective_s']:.2e}s "
+                    f"frac={r['roofline_fraction']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    rows = full_table()
+    print(markdown_table(rows))

@@ -1,0 +1,59 @@
+"""Benchmark aggregator — one bench per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,value,note`` CSV. --full uses the paper-scale settings
+(slower); default is the fast CI profile.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (
+        bench_ann,
+        bench_complexity,
+        bench_speedup,
+        bench_testfunctions,
+        roofline,
+    )
+    benches = {
+        "complexity": bench_complexity.run,      # paper Fig. 6
+        "speedup": bench_speedup.run,            # paper Table 1 / Fig. 7
+        "testfunctions": bench_testfunctions.run,  # paper Figs. 2-3 + text
+        "ann": bench_ann.run,                    # paper Figs. 4-5
+        "roofline": roofline.run,                # scale deliverable
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,value,note")
+    failed = []
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            for row_name, value, note in fn(fast=fast):
+                print(f"{row_name},{value},{note}")
+            print(f"bench.{name}.wall_s,{time.time() - t0:.1f},")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + decode waves on a reduced zamba2
+(hybrid SSM + shared attention) model.
+
+  PYTHONPATH=src python examples/serving_batched.py
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+root = Path(__file__).resolve().parents[1]
+cmd = [sys.executable, "-m", "repro.launch.serve",
+       "--arch", "zamba2-1.2b", "--reduced",
+       "--batch", "4", "--prompt-len", "32", "--gen-len", "12",
+       "--waves", "2"]
+print("$", " ".join(cmd))
+out = subprocess.run(cmd, env={"PYTHONPATH": str(root / "src"),
+                               "PATH": "/usr/bin:/bin"},
+                     capture_output=True, text=True, timeout=900)
+print(out.stdout)
+if out.returncode != 0:
+    print(out.stderr[-2000:])
+    sys.exit(1)

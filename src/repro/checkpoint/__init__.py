@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.store import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,14 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (MQA kv=1) d_ff=24576
+vocab=49152 — llama-arch code model [arXiv:2405.04324].
+
+MQA: the single KV head is replicated across the TP axis (not shardable);
+Q heads shard 48/16. Deepest assigned stack (88 layers) — scan-over-layers
+keeps the HLO flat.
+"""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+    d_ff=24_576, vocab_size=49_152, head_dim=128,
+)

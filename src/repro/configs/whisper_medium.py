@@ -1,0 +1,19 @@
+"""whisper-medium [audio]: enc-dec, 24L each side, d_model=1024 16H
+d_ff=4096 vocab=51865 [arXiv:2212.04356].
+
+Conv frontend is a STUB per the assignment: input_specs() provides
+precomputed (B, 1500, d_model) frame embeddings. Encoder uses learned
+positional embeddings + bidirectional attention; decoder is causal with
+cross-attention. Decoder positions use RoPE (adaptation: whisper's learned
+448-position table cannot index the assigned 32k decode shapes; DESIGN §9).
+"""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=51_865,
+    enc_dec=True, n_enc_layers=24, n_frames=1500,
+    mlp_kind="gelu", norm_kind="layernorm",
+    tie_embeddings=True,
+)

@@ -1,0 +1,16 @@
+"""xlstm-125m [ssm]: 12L d_model=768 4H d_ff=0 vocab=50304.
+
+sLSTM + mLSTM blocks [arXiv:2405.04517]. d_ff=0: blocks carry their own
+projections, no separate FFN. sLSTM every 4th layer (interleave choice
+documented in DESIGN.md §9 — the paper's [7:1]-style ratios vary by size).
+Recurrent/matrix state => sub-quadratic => runs long_500k.
+"""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m", family="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50_304,
+    block_pattern="xlstm", slstm_every=4,
+    tie_embeddings=True, sub_quadratic=True,
+)

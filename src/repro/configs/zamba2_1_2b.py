@@ -1,0 +1,14 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H d_ff=8192 vocab=32000,
+ssm_state=64 — Mamba2 blocks + one SHARED attention block applied every 6
+mamba layers (same parameters each application, output re-projected)
+[arXiv:2411.15242]. Mamba state is O(1) per token => runs long_500k.
+"""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=32_000,
+    block_pattern="zamba", shared_attn_every=6, ssm_state=64,
+    sub_quadratic=True,
+)

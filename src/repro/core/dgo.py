@@ -1,0 +1,318 @@
+"""DGO drivers: sequential (SPARC-baseline analogue), vectorized-jit, and
+clustered multi-start.
+
+The paper's algorithm (its "Outline of DGO", steps 1-6):
+
+  1. pick an initial parent string, evaluate it;
+  2. generate 2N-1 children by Gray-code segment inversion;
+  3. take the child with the lowest function value;
+  4. if it improves on the parent -> new parent, goto 2;
+  5. else increase the resolution (bits per variable);
+  6. stop past the maximum resolution.
+
+Three drivers live here:
+
+* ``run_sequential`` — literal one-child-at-a-time Python/numpy loop. This is
+  the O(n^2)-per-iteration baseline used by ``benchmarks/bench_complexity``
+  (paper Fig. 6) and the denominator of every speedup number (the paper's
+  SPARC IV role).
+* ``run`` — single-device vectorized driver: each resolution level runs a
+  jitted ``lax.while_loop`` whose body generates + evaluates the whole
+  population at once (a TPU chip's VPU/MXU lanes play the role of MasPar's
+  PE array). Resolution escalation is a tiny host loop (it re-jits only
+  once per (N, bits) shape, which changes a handful of times).
+* ``run_clustered`` — vmap over independent start points, the paper's
+  "cluster" mode on MP-1 (16K PEs >> 2N-1 for small problems).
+
+The multi-device population distribution (shard_map over the mesh) lives in
+``core/distributed.py`` and reuses ``dgo_resolution_step`` below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import (
+    Encoding,
+    binary_to_gray,
+    decode,
+    encode,
+    gray_to_binary,
+    reencode,
+)
+from repro.core.population import (
+    generate_population,
+    population_size,
+    segment_mask,
+    segment_table,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DGOConfig:
+    """Resolution schedule + iteration caps (paper steps 5/6)."""
+
+    encoding: Encoding                 # starting resolution
+    max_bits: int = 16                 # maximum resolution (paper step 6)
+    bits_step: int = 2                 # resolution increment on stall
+    max_iters_per_resolution: int = 512  # safety cap on step-4 loops
+
+    def resolutions(self) -> list[int]:
+        return list(range(self.encoding.bits, self.max_bits + 1, self.bits_step))
+
+
+class DGOState(NamedTuple):
+    """Carried across iterations at a fixed resolution."""
+
+    parent_bits: jax.Array   # (N,) int8
+    parent_val: jax.Array    # () f32
+    improved: jax.Array      # () bool — did the last step improve?
+    iters: jax.Array         # () i32
+
+
+class DGOResult(NamedTuple):
+    x: jax.Array             # (n_vars,) best point found
+    value: jax.Array         # () f32
+    bits: jax.Array          # final parent bits (N,) at final resolution
+    evaluations: int         # total function evaluations
+    iterations: int          # total accepted/attempted steps
+    trace: np.ndarray        # (iterations,) best value after each step
+
+
+# ---------------------------------------------------------------------------
+# one DGO iteration (paper steps 2-4) — the unit every driver shares
+# ---------------------------------------------------------------------------
+
+def dgo_iteration(f_batch: Callable[[jax.Array], jax.Array],
+                  enc: Encoding,
+                  parent_bits: jax.Array,
+                  parent_val: jax.Array) -> DGOState:
+    """Generate all 2N-1 children, evaluate, select (steps 2-4).
+
+    ``f_batch`` maps (P, n_vars) -> (P,). Selection keeps the parent when no
+    child is strictly better (paper step 4/5 boundary).
+    """
+    children = generate_population(parent_bits)          # (P, N)
+    xs = decode(children, enc)                            # (P, n_vars)
+    vals = f_batch(xs)                                    # (P,)
+    best = jnp.argmin(vals)
+    best_val = vals[best]
+    improved = best_val < parent_val
+    new_bits = jnp.where(improved, children[best], parent_bits)
+    new_val = jnp.where(improved, best_val, parent_val)
+    return DGOState(new_bits.astype(jnp.int8), new_val, improved, jnp.int32(1))
+
+
+def dgo_resolution_step(f_batch: Callable[[jax.Array], jax.Array],
+                        enc: Encoding,
+                        max_iters: int,
+                        parent_bits: jax.Array,
+                        parent_val: jax.Array) -> tuple[DGOState, jax.Array]:
+    """Run step-2..4 loop at one resolution until stall (jit-friendly).
+
+    Returns the final state and a (max_iters,) trace of parent values
+    (padded with the final value after the stall point).
+    """
+
+    def cond(carry):
+        state, _ = carry
+        return jnp.logical_and(state.improved, state.iters < max_iters)
+
+    def body(carry):
+        state, trace = carry
+        nxt = dgo_iteration(f_batch, enc, state.parent_bits, state.parent_val)
+        trace = trace.at[state.iters].set(nxt.parent_val)
+        return (DGOState(nxt.parent_bits, nxt.parent_val, nxt.improved,
+                         state.iters + 1), trace)
+
+    trace0 = jnp.full((max_iters,), parent_val, dtype=jnp.float32)
+    state0 = DGOState(parent_bits, parent_val, jnp.bool_(True), jnp.int32(0))
+    (state, trace) = jax.lax.while_loop(cond, body, (state0, trace0))
+    # pad the tail of the trace with the final value for clean plotting
+    idx = jnp.arange(max_iters)
+    trace = jnp.where(idx < state.iters, trace, state.parent_val)
+    return state, trace
+
+
+# ---------------------------------------------------------------------------
+# vectorized single-device driver (resolution schedule on host)
+# ---------------------------------------------------------------------------
+
+def run(f: Callable[[jax.Array], jax.Array],
+        cfg: DGOConfig,
+        x0: jax.Array | None = None,
+        key: jax.Array | None = None) -> DGOResult:
+    """Full DGO: resolution schedule over jitted per-resolution loops.
+
+    ``f`` maps (n_vars,) -> scalar; it is vmapped over the population.
+    """
+    enc0 = cfg.encoding
+    if x0 is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        x0 = jax.random.uniform(key, (enc0.n_vars,), minval=enc0.lo,
+                                maxval=enc0.hi)
+    f_batch = jax.vmap(f)
+
+    total_evals = 0
+    total_iters = 0
+    traces: list[np.ndarray] = []
+
+    bits = encode(jnp.asarray(x0, jnp.float32), enc0)
+    val = f(decode(bits, enc0))
+
+    prev_enc = enc0
+    for res in cfg.resolutions():
+        enc = enc0.with_bits(res)
+        if enc.bits != prev_enc.bits:
+            bits = reencode(bits, prev_enc, enc)
+            val = f(decode(bits, enc))
+        step = jax.jit(partial(dgo_resolution_step, f_batch, enc,
+                               cfg.max_iters_per_resolution))
+        state, trace = step(bits, val)
+        iters = int(state.iters)
+        total_iters += iters
+        total_evals += iters * enc.population
+        traces.append(np.asarray(trace[:iters]))
+        bits, val = state.parent_bits, state.parent_val
+        prev_enc = enc
+
+    x = decode(bits, prev_enc)
+    trace = np.concatenate(traces) if traces else np.asarray([float(val)])
+    return DGOResult(x=x, value=val, bits=bits, evaluations=total_evals,
+                     iterations=total_iters, trace=trace)
+
+
+# ---------------------------------------------------------------------------
+# clustered multi-start (paper's MP-1 cluster mode)
+# ---------------------------------------------------------------------------
+
+def run_clustered(f: Callable[[jax.Array], jax.Array],
+                  cfg: DGOConfig,
+                  n_clusters: int,
+                  key: jax.Array) -> DGOResult:
+    """Independent DGO instances from random starts; best-of wins.
+
+    vmap over the cluster axis — on hardware the cluster axis is laid over
+    spare devices (see core/distributed.py: the pod axis).
+    """
+    enc0 = cfg.encoding
+    keys = jax.random.split(key, n_clusters)
+    x0s = jax.vmap(lambda k: jax.random.uniform(
+        k, (enc0.n_vars,), minval=enc0.lo, maxval=enc0.hi))(keys)
+    f_batch = jax.vmap(f)
+
+    bits = jax.vmap(lambda x: encode(x, enc0))(x0s)          # (C, N)
+    vals = jax.vmap(f)(jax.vmap(lambda b: decode(b, enc0))(bits))
+
+    total_iters = 0
+    total_evals = 0
+    prev_enc = enc0
+    for res in cfg.resolutions():
+        enc = enc0.with_bits(res)
+        if enc.bits != prev_enc.bits:
+            bits = jax.vmap(lambda b: reencode(b, prev_enc, enc))(bits)
+            vals = f_batch(jax.vmap(lambda b: decode(b, enc))(bits))
+        step = jax.jit(jax.vmap(
+            partial(dgo_resolution_step, f_batch, enc,
+                    cfg.max_iters_per_resolution)))
+        states, _ = step(bits, vals)
+        bits, vals = states.parent_bits, states.parent_val
+        total_iters += int(jnp.max(states.iters))
+        total_evals += int(jnp.sum(states.iters)) * enc.population
+        prev_enc = enc
+
+    winner = int(jnp.argmin(vals))
+    x = decode(bits[winner], prev_enc)
+    return DGOResult(x=x, value=vals[winner], bits=bits[winner],
+                     evaluations=total_evals, iterations=total_iters,
+                     trace=np.asarray(vals))
+
+
+# ---------------------------------------------------------------------------
+# sequential reference — the paper's SPARC-IV-style baseline
+# ---------------------------------------------------------------------------
+
+def run_sequential(f: Callable[[np.ndarray], float],
+                   cfg: DGOConfig,
+                   x0: np.ndarray,
+                   time_budget_s: float | None = None) -> DGOResult:
+    """One-child-at-a-time DGO in plain numpy.
+
+    This is deliberately *not* vectorized: per iteration it does 2N-1
+    sequential (transform + evaluate) passes of O(N) work each — the O(n^2)
+    structure of the paper's Fig. 6. Used as the speedup denominator.
+    """
+    enc0 = cfg.encoding
+
+    def np_b2g(b):
+        g = b.copy()
+        g[1:] ^= b[:-1]
+        return g
+
+    def np_g2b(g):
+        return np.cumsum(g) % 2
+
+    def np_decode(b, enc):
+        lv = b.reshape(enc.n_vars, enc.bits)
+        weights = 2 ** np.arange(enc.bits - 1, -1, -1)
+        level = (lv * weights).sum(axis=-1).astype(np.float64)
+        return enc.lo + level * ((enc.hi - enc.lo) / (enc.levels - 1))
+
+    def np_encode(x, enc):
+        level = np.clip(np.round((x - enc.lo) / (enc.hi - enc.lo)
+                                 * (enc.levels - 1)), 0, enc.levels - 1)
+        level = level.astype(np.int64)
+        shifts = np.arange(enc.bits - 1, -1, -1)
+        return ((level[:, None] >> shifts) & 1).reshape(-1).astype(np.int8)
+
+    t_start = time.perf_counter()
+    bits = np_encode(np.asarray(x0, np.float64), enc0)
+    val = float(f(np_decode(bits, enc0)))
+    evals, iters = 1, 0
+    trace = [val]
+
+    prev_enc = enc0
+    for res in cfg.resolutions():
+        enc = enc0.with_bits(res)
+        if enc.bits != prev_enc.bits:
+            bits = np_encode(np_decode(bits, prev_enc), enc)
+            val = float(f(np_decode(bits, enc)))
+        n = enc.n_bits
+        table = segment_table(n)
+        improved = True
+        it = 0
+        while improved and it < cfg.max_iters_per_resolution:
+            improved = False
+            gray = np_b2g(bits)
+            best_val, best_bits = val, bits
+            for c in range(2 * n - 1):           # the sequential hot loop
+                mask = np.zeros(n, np.int8)
+                mask[table[c, 0]: table[c, 1]] = 1
+                child = np_g2b(gray ^ mask)       # O(N) transform
+                v = float(f(np_decode(child, enc)))
+                evals += 1
+                if v < best_val:
+                    best_val, best_bits = v, child
+            if best_val < val:
+                val, bits = best_val, best_bits
+                improved = True
+            it += 1
+            iters += 1
+            trace.append(val)
+            if time_budget_s and time.perf_counter() - t_start > time_budget_s:
+                break
+        prev_enc = enc
+        if time_budget_s and time.perf_counter() - t_start > time_budget_s:
+            break
+
+    return DGOResult(x=jnp.asarray(np_decode(bits, prev_enc)),
+                     value=jnp.float32(val), bits=jnp.asarray(bits),
+                     evaluations=evals, iterations=iters,
+                     trace=np.asarray(trace))

@@ -1,0 +1,147 @@
+"""Distributed DGO: the paper's MP-1/NCUBE population distribution on a mesh.
+
+Mapping (DESIGN.md §2):
+
+  MasPar PE array          -> mesh shards (shard_map over population axes)
+                              x per-chip vector lanes (vmap inside the shard)
+  ACU broadcast of parent  -> parent string replicated into every shard
+                              (in_specs=P()); the *winner* is never broadcast
+                              as bits — only its child-id travels (cheaper
+                              than the paper's string broadcast; children are
+                              deterministic so every shard can regenerate it)
+  rank() / cube-reduction  -> all_gather of per-shard (value, child-id) pairs
+                              — a few bytes per shard, O(log P) on the torus
+  NCUBE virtual processing -> ceil(P / n_shards) children per shard, chunked
+                              by an inner scan when the per-shard block
+                              exceeds ``virtual_block`` (the paper's
+                              "each PE simulates ceil((2n-1)/64) processors")
+  dropped / straggling PE  -> shard quorum mask: masked shards contribute
+                              +inf; the round proceeds and the missed
+                              children are regenerated next round (DESIGN §6)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.encoding import Encoding, decode
+from repro.core.population import generate_children
+
+
+def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
+    """Row-major flat index of this shard across the given mesh axes."""
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def _axis_prod(mesh: Mesh, axis_names: Sequence[str]) -> int:
+    n = 1
+    for name in axis_names:
+        n *= mesh.shape[name]
+    return n
+
+
+def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
+                          enc: Encoding,
+                          mesh: Mesh,
+                          pop_axes: Sequence[str] = ("data",),
+                          virtual_block: int = 256,
+                          donate: bool = False):
+    """Build a jitted one-iteration DGO step sharded over ``pop_axes``.
+
+    Returns ``step(parent_bits, parent_val, quorum_mask) ->
+    (new_bits, new_val, improved)`` where ``quorum_mask`` is a (n_shards,)
+    bool array (all-True for the no-failure path).
+
+    ``f_batch``: (B, n_vars) -> (B,), pure; evaluated inside each shard, so if
+    the objective itself is model-sharded its collectives must use *other*
+    mesh axes than ``pop_axes`` (the LM path passes a model-axis-sharded loss).
+    """
+    n_shards = _axis_prod(mesh, pop_axes)
+    pop = enc.population
+    chunk = math.ceil(pop / n_shards)
+    # inner virtual-processing blocks (paper's ceil((2n-1)/P) per PE)
+    n_blocks = math.ceil(chunk / virtual_block)
+    block = math.ceil(chunk / n_blocks)
+
+    def shard_fn(parent_bits: jax.Array, parent_val: jax.Array,
+                 quorum_mask: jax.Array):
+        shard = _flat_axis_index(pop_axes)
+        base = shard * chunk
+        alive = quorum_mask[shard]
+
+        def eval_block(carry, b):
+            best_val, best_id = carry
+            ids = base + b * block + jnp.arange(block)
+            valid = (ids < pop) & alive
+            ids_c = jnp.minimum(ids, pop - 1)
+            children = generate_children(parent_bits, ids_c)     # (block, N)
+            xs = decode(children, enc)                           # (block, n)
+            vals = jnp.where(valid, f_batch(xs), jnp.inf)
+            i = jnp.argmin(vals)
+            better = vals[i] < best_val
+            return (jnp.where(better, vals[i], best_val),
+                    jnp.where(better, ids_c[i], best_id)), None
+
+        init = (jnp.asarray(jnp.inf, jnp.float32), jnp.int32(0))
+        (local_val, local_id), _ = jax.lax.scan(
+            eval_block, init, jnp.arange(n_blocks))
+
+        # cube-reduction analogue: gather tiny (val, id) pairs over pop axes
+        all_vals, all_ids = local_val, local_id
+        for ax in pop_axes:
+            all_vals = jax.lax.all_gather(all_vals, ax).reshape(-1)
+            all_ids = jax.lax.all_gather(all_ids, ax).reshape(-1)
+        w = jnp.argmin(all_vals)
+        win_val, win_id = all_vals[w], all_ids[w]
+
+        improved = win_val < parent_val
+        # regenerate the winner locally from its id (no bit broadcast needed)
+        win_bits = generate_children(parent_bits, win_id[None])[0]
+        new_bits = jnp.where(improved, win_bits, parent_bits).astype(jnp.int8)
+        new_val = jnp.where(improved, win_val, parent_val)
+        return new_bits, new_val, improved
+
+    replicated = P()
+    mapped = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(replicated, replicated, replicated),
+        out_specs=(replicated, replicated, replicated),
+        check_vma=False)
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+
+
+def run_distributed(f: Callable[[jax.Array], jax.Array],
+                    enc: Encoding,
+                    mesh: Mesh,
+                    x0: jax.Array,
+                    pop_axes: Sequence[str] = ("data",),
+                    max_iters: int = 256,
+                    virtual_block: int = 256,
+                    quorum_mask=None):
+    """Host-driven distributed DGO at a fixed resolution (loop on host so
+    failure injection / elastic re-mesh can interpose between iterations)."""
+    from repro.core.encoding import encode
+
+    f_batch = jax.vmap(f)
+    step = make_distributed_step(f_batch, enc, mesh, pop_axes, virtual_block)
+    n_shards = _axis_prod(mesh, pop_axes)
+    if quorum_mask is None:
+        quorum_mask = jnp.ones((n_shards,), bool)
+
+    bits = encode(jnp.asarray(x0, jnp.float32), enc)
+    val = f(decode(bits, enc))
+    history = [float(val)]
+    for _ in range(max_iters):
+        bits, val, improved = step(bits, val, quorum_mask)
+        history.append(float(val))
+        if not bool(improved):
+            break
+    return bits, val, history

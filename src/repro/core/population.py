@@ -1,0 +1,82 @@
+"""Population generation: 2N-1 deterministic children of an N-bit parent.
+
+Paper step 2 transformation, per child:
+  1. two's-complement -> Gray code            (whole string)
+  2. invert one bit segment                   (segment id = child id)
+  3. inverse Gray -> two's-complement
+
+Segment scheme (DESIGN.md §1 "Segment-scheme note"): the paper defers the
+segment enumeration to ref. [13] but shows the population generated "in a
+tree like structure" (Fig. 1) and sizes it at exactly 2N-1. A binary
+*segment tree* over the N bit positions has exactly 2N-1 nodes for every N
+(N leaves + N-1 internal nodes) — child c inverts the Gray-code segment of
+tree node c. Leaves are single-bit Gray flips (= binary suffix reflections
+at every scale); internal nodes invert dyadic runs (= localized
+reflections). When bits-per-variable is a power of two the tree aligns with
+variable boundaries, so per-variable moves emerge naturally from the
+concatenated string. This matches the paper's population size, its O(n^2)
+sequential complexity (2N-1 children x O(N) work), and its hypercube
+remark (N a power of 2 => 2N a power of 2).
+
+The table of (start, end) segments is a static host-side constant -> chunks
+of the population can be generated independently from child ids alone (the
+paper's "virtual processing"; also what the Pallas kernel tiles over).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import binary_to_gray, gray_to_binary
+
+
+@lru_cache(maxsize=None)
+def segment_table(n_bits: int) -> np.ndarray:
+    """(2N-1, 2) int32 array of [start, end) Gray segments, preorder."""
+    segs: list[tuple[int, int]] = []
+
+    def build(lo: int, hi: int) -> None:
+        segs.append((lo, hi))
+        if hi - lo > 1:
+            mid = (lo + hi + 1) // 2
+            build(lo, mid)
+            build(mid, hi)
+
+    build(0, n_bits)
+    table = np.asarray(segs, dtype=np.int32)
+    assert table.shape[0] == 2 * n_bits - 1
+    return table
+
+
+def segment_mask(child_ids: jax.Array, n_bits: int) -> jax.Array:
+    """(P,) child ids -> (P, N) int8 inversion masks via the segment tree."""
+    table = jnp.asarray(segment_table(n_bits))
+    ids = jnp.clip(child_ids.astype(jnp.int32), 0, 2 * n_bits - 2)
+    start = table[ids, 0][:, None]
+    end = table[ids, 1][:, None]
+    i = jnp.arange(n_bits, dtype=jnp.int32)[None, :]
+    return ((i >= start) & (i < end)).astype(jnp.int8)
+
+
+def generate_children(parent_bits: jax.Array,
+                      child_ids: jax.Array) -> jax.Array:
+    """Children for an arbitrary subset of ids — used for chunked /
+    virtual-processing generation. parent_bits: (N,), child_ids: (P,)."""
+    n = parent_bits.shape[-1]
+    gray = binary_to_gray(parent_bits)
+    masks = segment_mask(child_ids, n)
+    children_gray = jnp.bitwise_xor(gray[None, :], masks)
+    return gray_to_binary(children_gray)
+
+
+def generate_population(parent_bits: jax.Array) -> jax.Array:
+    """All 2N-1 children. (N,) -> (2N-1, N) int8."""
+    n = parent_bits.shape[-1]
+    return generate_children(parent_bits, jnp.arange(2 * n - 1))
+
+
+def population_size(n_bits: int) -> int:
+    return 2 * n_bits - 1

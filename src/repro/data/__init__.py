@@ -1,0 +1,2 @@
+"""Data pipelines: deterministic synthetic LM tokens + paper datasets."""
+from repro.data.pipeline import DataConfig, SyntheticTokenPipeline, lm_synthetic_batch

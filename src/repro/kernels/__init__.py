@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+The paper's inner O(n^2) loop — Gray-code transform + segment inversion +
+inverse-Gray over the whole population — is the DGO-side hot-spot
+(``graycode``), followed by fixed-point decode (``fixedpoint``) and the
+population min/argmin reduction (``popmin``, the MasPar ``rank()``
+analogue). The evaluation side of LM-scale objectives is dominated by
+attention, covered by ``flash_attention``.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes and
+assert allclose in interpret mode (this container is CPU-only; TPU is the
+target).
+"""

@@ -1,0 +1,75 @@
+"""Pallas kernel: fixed-point decode of packed bit-strings to float vectors.
+
+(P, W) uint32 children -> (P, n_vars) float32 search points. Each variable
+is a ``bits``-wide MSB-first field that may straddle a word boundary; the
+field is re-assembled with data-dependent shifts (VPU integer ops) and
+scaled to the [lo, hi] box. Grid over population tiles; the variable axis
+is vectorized across lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _srl(x, n):
+    nn = jnp.minimum(n, jnp.uint32(31))
+    shifted = jax.lax.shift_right_logical(x, nn)
+    return jnp.where(n < 32, shifted, jnp.uint32(0))
+
+
+def _sll(x, n):
+    nn = jnp.minimum(n, jnp.uint32(31))
+    shifted = jax.lax.shift_left(x, nn)
+    return jnp.where(n < 32, shifted, jnp.uint32(0))
+
+
+def _fixedpoint_kernel(words_ref, out_ref, *, n_vars: int, bits: int,
+                       lo: float, hi: float):
+    words = words_ref[...]                          # (TP, W) uint32
+    tp, w = words.shape
+
+    vi = jax.lax.broadcasted_iota(jnp.int32, (tp, n_vars), 1)
+    s0 = vi * bits                                  # start bit of var
+    w0 = s0 // 32                                   # first word index
+    off = (s0 % 32).astype(jnp.uint32)
+
+    # gather the (up to) two words covering the field
+    word0 = jnp.take_along_axis(words, w0, axis=1)
+    w1_idx = jnp.minimum(w0 + 1, w - 1)
+    word1 = jnp.take_along_axis(words, w1_idx, axis=1)
+
+    b = jnp.uint32(bits)
+    # srl(sll(w0, off), 32-bits) leaves the word0 part of the field already
+    # shifted left by the spill amount (the bits that live in word1)
+    part0 = _srl(_sll(word0, off), jnp.uint32(32 - bits))
+    need = off + b                                  # bits consumed if > 32
+    spill = jnp.where(need > 32, need - 32, jnp.uint32(0))
+    part1 = jnp.where(spill > 0, _srl(word1, jnp.uint32(32) - spill),
+                      jnp.uint32(0))
+    level = (part0 | part1).astype(jnp.float32)
+
+    span = (hi - lo) / float(2 ** bits - 1)
+    out_ref[...] = lo + level * span
+
+
+@functools.partial(jax.jit, static_argnames=("n_vars", "bits", "lo", "hi",
+                                             "tile_p", "interpret"))
+def fixedpoint_decode(words: jax.Array, *, n_vars: int, bits: int,
+                      lo: float, hi: float, tile_p: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """(P, W) uint32 -> (P, n_vars) float32. P must be tile-aligned."""
+    p_total, w = words.shape
+    assert p_total % tile_p == 0
+    return pl.pallas_call(
+        functools.partial(_fixedpoint_kernel, n_vars=n_vars, bits=bits,
+                          lo=lo, hi=hi),
+        grid=(p_total // tile_p,),
+        in_specs=[pl.BlockSpec((tile_p, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_p, n_vars), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_total, n_vars), jnp.float32),
+        interpret=interpret,
+    )(words)

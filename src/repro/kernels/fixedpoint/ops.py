@@ -1,0 +1,21 @@
+"""Public wrapper: packed population -> float search points."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Encoding
+from repro.kernels.fixedpoint.kernel import fixedpoint_decode
+
+
+def decode_packed(words: jax.Array, enc: Encoding, *, tile_p: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """(P, W) uint32 -> (P, n_vars) f32, padding P to the tile size."""
+    p = words.shape[0]
+    pad = (-p) % tile_p
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+    out = fixedpoint_decode(words, n_vars=enc.n_vars, bits=enc.bits,
+                            lo=enc.lo, hi=enc.hi, tile_p=tile_p,
+                            interpret=interpret)
+    return out[:p]

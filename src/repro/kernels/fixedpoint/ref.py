@@ -1,0 +1,11 @@
+"""Oracle: unpack words to bit arrays and decode via core.encoding."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.encoding import Encoding, decode, unpack_bits
+
+
+def fixedpoint_decode_ref(words: jax.Array, enc: Encoding) -> jax.Array:
+    bits = unpack_bits(words, enc.n_bits)
+    return decode(bits, enc)

@@ -1,0 +1,114 @@
+"""Pallas flash-attention forward (causal / sliding-window / GQA).
+
+Online-softmax over KV blocks: grid (batch*q_heads, q_blocks, kv_blocks)
+with the KV axis innermost; running (m, l, acc) live in VMEM scratch and the
+output block is written on the last KV step — the canonical TPU pattern
+(HBM->VMEM streaming of K/V tiles, (Bq, Bk) score tile resident in VMEM,
+MXU-aligned block sizes of 128).
+
+GQA folds into the index map: q head h reads kv head h // (Hq // Hkv).
+This kernel is the real-TPU replacement for the XLA-chunked ``sdpa`` path
+in models/attention.py (same contract; validated against ref.py in
+interpret mode — this container has no TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_kv_blocks: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (Bq, hd)
+    k = k_ref[0]                                   # (Bk, hd)
+    v = v_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (Bq, 1)
+    m_cur = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_cur = alpha * l_scr[...] + jnp.sum(p, axis=1)[:, None]
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "causal", "window", "block_q",
+                              "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float | None = None, causal: bool = True,
+                    window: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, S, hd); k/v: (B, Hkv, S, hd) -> (B, Hq, S, hd).
+
+    S must be a multiple of the block sizes (ops.py pads).
+    """
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    assert s % block_q == 0 and s % block_k == 0
+    nq, nk = s // block_q, s // block_k
+    scale = scale if scale is not None else hd ** -0.5
+
+    qr = q.reshape(b * hq, s, hd)
+    kr = k.reshape(b * hkv, s, hd)
+    vr = v.reshape(b * hkv, s, hd)
+
+    def kv_map(h, iq, ik):
+        return (h // g, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_kv_blocks=nk),
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s, hd)

@@ -1,0 +1,32 @@
+"""Public wrapper: pads sequence to block multiples, handles (B,S,H,hd)
+layout used by models/attention.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def flash_sdpa(q, k, v, *, scale=None, causal=True, window=0,
+               block_q=128, block_k=128, interpret=True):
+    """q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd) -> (B, S, Hq, hd).
+
+    Matches models.attention.sdpa's layout. Pads S up to block multiples;
+    padded queries are discarded, padded keys are masked by causality
+    (pad positions come after every real query).
+    """
+    b, s, hq, hd = q.shape
+    blk = max(block_q, block_k)
+    pad = (-s) % blk
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention(qt, kt, vt, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return jnp.moveaxis(out[:, :, :s], 2, 1)

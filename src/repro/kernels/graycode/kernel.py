@@ -1,0 +1,86 @@
+"""Pallas kernel: generate a tile of DGO children on packed uint32 words.
+
+One grid cell produces ``tile_p`` children of the parent: build the segment
+inversion mask from the (start, end) tables, XOR against the parent's Gray
+code, and inverse-Gray back to binary — all in VMEM, no HBM round-trips
+between the three transform stages (on MP-1 these were three plural ops over
+the PE array; on TPU they fuse into one VMEM-resident kernel).
+
+Bit layout matches ``core.encoding.pack_bits``: string bit i lives in word
+i//32 at bit position 31 - i%32 (MSB-first). Inverse Gray = prefix-XOR over
+the string: 5 shift-XOR steps give the within-word prefix; an exclusive
+cumulative word-parity along the lane axis supplies the word-to-word carry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _srl(x, n):
+    """Logical right shift with n in [0, 32] (n >= 32 -> 0)."""
+    nn = jnp.minimum(n, jnp.uint32(31))
+    shifted = jax.lax.shift_right_logical(x, nn)
+    return jnp.where(n < 32, shifted, jnp.uint32(0))
+
+
+def _graycode_kernel(parent_gray_ref, start_ref, end_ref, out_ref,
+                     *, n_words: int, n_bits: int):
+    g = parent_gray_ref[...]                       # (1, W) uint32
+    start = start_ref[...]                         # (TP, 1) int32
+    end = end_ref[...]                             # (TP, 1) int32
+    tp = start.shape[0]
+
+    ones = jnp.full((tp, n_words), 0xFFFFFFFF, jnp.uint32)
+    wi = jax.lax.broadcasted_iota(jnp.int32, (tp, n_words), 1)
+    lo = jnp.clip(start - 32 * wi, 0, 32).astype(jnp.uint32)
+    hi = jnp.clip(end - 32 * wi, 0, 32).astype(jnp.uint32)
+    # MSB-first: ones >> k has string-local bits [k, 32) set
+    mask = _srl(ones, lo) ^ _srl(ones, hi)         # bits [lo, hi)
+
+    gc = g ^ mask                                  # (TP, W) children in Gray
+
+    # inverse Gray: within-word prefix-XOR (5 halving steps)
+    p = gc
+    for s in (1, 2, 4, 8, 16):
+        p = p ^ jax.lax.shift_right_logical(p, jnp.uint32(s))
+    # word parity = LSB of prefixed word; exclusive cumulative carry
+    par = (p & jnp.uint32(1)).astype(jnp.int32)
+    carry = (jnp.cumsum(par, axis=1) - par) % 2
+    out = p ^ jnp.where(carry == 1, ones, jnp.uint32(0))
+    # zero the pad bits (string indices >= n_bits) so packed layout is canonical
+    valid = jnp.clip(n_bits - 32 * wi, 0, 32).astype(jnp.uint32)
+    out_ref[...] = out & (ones ^ _srl(ones, valid))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_bits", "tile_p", "n_words", "interpret"))
+def graycode_children(parent_gray: jax.Array, starts: jax.Array,
+                      ends: jax.Array, *, n_bits: int,
+                      tile_p: int = 128,
+                      n_words: int | None = None,
+                      interpret: bool = True) -> jax.Array:
+    """(W,) parent Gray words + (P,) segment bounds -> (P, W) children bits.
+
+    P must be padded to a multiple of tile_p by the caller (ops.py does).
+    """
+    w = n_words or parent_gray.shape[-1]
+    p_total = starts.shape[0]
+    assert p_total % tile_p == 0, (p_total, tile_p)
+    grid = (p_total // tile_p,)
+
+    return pl.pallas_call(
+        functools.partial(_graycode_kernel, n_words=w, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (0, 0)),         # parent (bcast)
+            pl.BlockSpec((tile_p, 1), lambda i: (i, 0)),    # starts
+            pl.BlockSpec((tile_p, 1), lambda i: (i, 0)),    # ends
+        ],
+        out_specs=pl.BlockSpec((tile_p, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_total, w), jnp.uint32),
+        interpret=interpret,
+    )(parent_gray[None, :], starts[:, None].astype(jnp.int32),
+      ends[:, None].astype(jnp.int32))

@@ -1,0 +1,35 @@
+"""Public wrapper: parent bit-array -> packed population via the kernel.
+
+Handles Gray pre-encoding of the parent (O(N), once per iteration — the
+kernel does the per-child O(P*N) work), segment-table lookup, and padding P
+to the tile size.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import binary_to_gray, pack_bits
+from repro.core.population import segment_table
+from repro.kernels.graycode.kernel import graycode_children
+
+
+def generate_population_packed(parent_bits: jax.Array, *,
+                               tile_p: int = 128,
+                               interpret: bool = True) -> jax.Array:
+    """(N,) int8 parent -> (2N-1, W) uint32 packed children."""
+    n = parent_bits.shape[-1]
+    w = (n + 31) // 32
+    pop = 2 * n - 1
+    table = np.asarray(segment_table(n))
+    pad = (-pop) % tile_p
+    starts = jnp.asarray(np.pad(table[:, 0], (0, pad)))
+    ends = jnp.asarray(np.pad(table[:, 1], (0, pad)))
+
+    parent_gray = pack_bits(binary_to_gray(parent_bits), w)
+    out = graycode_children(parent_gray, starts, ends, n_bits=n,
+                            tile_p=tile_p, n_words=w, interpret=interpret)
+    return out[:pop]

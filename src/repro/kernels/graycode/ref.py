@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the graycode kernel: generate children via the
+unpacked bit-array path (core.population) and pack the result."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import pack_bits
+from repro.core.population import generate_children
+
+
+def graycode_children_ref(parent_bits: jax.Array, child_ids: jax.Array,
+                          n_words: int) -> jax.Array:
+    """parent_bits: (N,) int8 0/1; child_ids: (P,) -> (P, W) uint32 packed."""
+    children = generate_children(parent_bits, child_ids)      # (P, N)
+    return pack_bits(children, n_words)

@@ -1,0 +1,51 @@
+"""Pallas kernel: fused population min/argmin — the MasPar ``rank()``
+analogue (paper step 4: "find the minimum of the values").
+
+Sequential-grid reduction: each cell reduces one tile in VMEM and folds it
+into a running (min, argmin) carried in the output refs (TPU grid cells on
+the same core run in order, the standard Pallas accumulation pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popmin_kernel(vals_ref, min_ref, idx_ref, *, tile: int):
+    i = pl.program_id(0)
+    vals = vals_ref[...]                          # (1, tile)
+    local = jnp.min(vals, axis=1)                 # (1,)
+    local_i = jnp.argmin(vals, axis=1).astype(jnp.int32) + i * tile
+
+    @pl.when(i == 0)
+    def _init():
+        min_ref[...] = local
+        idx_ref[...] = local_i
+
+    @pl.when(i > 0)
+    def _fold():
+        better = local < min_ref[...]
+        min_ref[...] = jnp.where(better, local, min_ref[...])
+        idx_ref[...] = jnp.where(better, local_i, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def popmin(vals: jax.Array, *, tile: int = 1024,
+           interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(P,) f32 -> (min value, argmin). P padded to tile by caller."""
+    p = vals.shape[0]
+    assert p % tile == 0
+    mn, idx = pl.pallas_call(
+        functools.partial(_popmin_kernel, tile=tile),
+        grid=(p // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1,), lambda i: (0,)),
+                   pl.BlockSpec((1,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        interpret=interpret,
+    )(vals[None, :])
+    return mn[0], idx[0]

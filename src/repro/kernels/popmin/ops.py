@@ -1,0 +1,19 @@
+"""Public wrapper for the fused min/argmin reduction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.popmin.kernel import popmin
+
+
+def population_min(vals: jax.Array, *, tile: int = 1024,
+                   interpret: bool = True):
+    """(P,) -> (min, argmin); pads with +inf to the tile size."""
+    p = vals.shape[0]
+    t = min(tile, max(128, 1 << (p - 1).bit_length()))
+    pad = (-p) % t
+    if pad:
+        vals = jnp.pad(vals.astype(jnp.float32), (0, pad),
+                       constant_values=jnp.inf)
+    return popmin(vals.astype(jnp.float32), tile=t, interpret=interpret)

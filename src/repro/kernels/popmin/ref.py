@@ -1,0 +1,6 @@
+"""Oracle for popmin."""
+import jax.numpy as jnp
+
+
+def popmin_ref(vals):
+    return jnp.min(vals), jnp.argmin(vals).astype(jnp.int32)

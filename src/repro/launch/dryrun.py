@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+# NOTE: the XLA_FLAGS lines above intentionally precede every other import
+# (and preclude `from __future__ import annotations`) — jax locks the device
+# count at first init, and this module (only) needs 512 placeholder host
+# devices to build the production meshes.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Per cell this emits a JSON artifact under benchmarks/artifacts/ with:
+  - memory_analysis (per-device bytes: args/outputs/temps/peak)
+  - cost_analysis   (HLO FLOPs, bytes accessed)
+  - collective table parsed from the post-SPMD HLO (op kind, dtype, shape,
+    group size, wire-byte model) -> the roofline's collective term
+  - step metadata (microbatching, shardings summary)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, get_arch
+from repro.configs.shapes import SHAPES, applicable, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.optim.gradient import AdamWConfig
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+# ICI wire-byte models (ring algorithms on the torus), bytes on the wire
+# per participating device for a tensor of `size` bytes in a group of k.
+WIRE = {
+    "all-gather": lambda size, k: size * (k - 1) / k,
+    "all-reduce": lambda size, k: 2 * size * (k - 1) / k,
+    "reduce-scatter": lambda size, k: size * (k - 1) / k,
+    "all-to-all": lambda size, k: size * (k - 1) / k,
+    "collective-permute": lambda size, k: size,
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COMPUTATION_RE = re.compile(r"^\s*(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?condition=([%\w\.\-]+),\s*body=([%\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict:
+    """computation name -> list of lines."""
+    comps = {}
+    current = None
+    for line in hlo.splitlines():
+        if current is None and "{" in line and ("->" in line or
+                                                line.lstrip().startswith(("%", "ENTRY"))):
+            m = _COMPUTATION_RE.match(line)
+            if m:
+                current = m.group(1).lstrip("%")
+                comps[current] = []
+                continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def _while_multipliers(comps: dict) -> dict:
+    """Exact execution multiplier per computation.
+
+    lax.scan lowers to while(cond=%c, body=%b); the trip count is the s32
+    constant in the condition computation (iter < T). Multipliers compose
+    across nesting (micro-accumulation scan x layer scan x chunk map).
+    """
+    edges = []                     # (parent, child, trip)
+    for name, lines in comps.items():
+        for line in lines:
+            w = _WHILE_RE.search(line)
+            if not w:
+                continue
+            cond, body = w.group(1).lstrip("%"), w.group(2).lstrip("%")
+            t = _TRIP_RE.search(line)
+            trip = int(t.group(1)) if t else 1
+            edges.append((name, body, trip))
+            edges.append((name, cond, trip))
+
+    mult = {name: 0 for name in comps}
+    children = {b for _, b, _ in edges}
+    for name in comps:
+        if name not in children:
+            mult[name] = 1         # entry / fused / top-level computations
+    for _ in range(16):            # fixpoint over nesting depth
+        updated = dict(mult)
+        for parent, body, trip in edges:
+            contrib = mult.get(parent, 0) * trip
+            if contrib > updated.get(body, 0):
+                updated[body] = contrib
+        if updated == mult:
+            break
+        mult = updated
+    return mult
+
+
+def parse_collectives(hlo: str) -> list[dict]:
+    """Collective ops with exact while-nesting multipliers applied."""
+    comps = _split_computations(hlo)
+    mult = _while_multipliers(comps)
+    out = []
+    for cname, lines in comps.items():
+        m_exec = max(mult.get(cname, 1), 1)
+        for line in lines:
+            m = re.search(r"=\s*((?:\([^)]*\)|\S+)?)\s*"
+                          r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                          r"collective-permute)(?:-start)?\(", line)
+            if not m or "-done(" in line:
+                continue
+            kind = m.group(2)
+            out_bytes = _shape_bytes(m.group(1))
+            g = _GROUPS_RE.search(line)
+            if g:
+                k = int(g.group(2))
+            else:
+                gl = _GROUPS_LIST_RE.search(line)
+                k = len(gl.group(1).split(",")) if gl else 1
+            if kind == "reduce-scatter":
+                size = out_bytes * k               # input size
+            else:
+                size = out_bytes
+            # CPU backend promotes bf16 reduction accumulators to f32
+            # ("to_apply=%..._promoted"); TPU keeps bf16 on the wire —
+            # count promoted reduces at their true element width.
+            if "_promoted" in line and "f32[" in line:
+                size *= 0.5
+            wire = WIRE[kind](size, max(k, 2)) if k > 1 else 0.0
+            out.append({"kind": kind, "bytes": size, "group": k,
+                        "wire_bytes": wire, "mult": m_exec,
+                        "comp": cname})
+    return out
+
+
+def summarize_collectives(colls: list[dict]) -> dict:
+    summary: dict = {}
+    for c in colls:
+        s = summary.setdefault(c["kind"], {"count": 0, "bytes": 0.0,
+                                           "wire_bytes": 0.0,
+                                           "executed_count": 0,
+                                           "executed_wire_bytes": 0.0})
+        s["count"] += 1
+        s["bytes"] += c["bytes"]
+        s["wire_bytes"] += c["wire_bytes"]
+        s["executed_count"] += c["mult"]
+        s["executed_wire_bytes"] += c["wire_bytes"] * c["mult"]
+    return summary
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = ARTIFACTS, dump_hlo: bool = False,
+             arch_override=None, policy=None) -> dict:
+    arch = arch_override or get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    if policy and policy != "fsdp":
+        mesh_tag = f"{mesh_tag}__{policy}"
+    record: dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag}
+    reason = skip_reason(arch, shape)
+    if reason:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch_name}__{shape_name}__{mesh_tag}.json"
+         ).write_text(json.dumps(record, indent=1))
+        return record
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt = AdamWConfig(moment_dtype="bfloat16")
+    with mesh:
+        cell = build_cell(arch, shape, mesh, opt_cfg=opt, policy=policy)
+        step = jax.jit(cell.step,
+                       in_shardings=cell.in_shardings,
+                       out_shardings=cell.out_shardings,
+                       donate_argnums=cell.donate_argnums)
+        lowered = step.lower(*cell.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_rec[attr] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_rec = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "bytes accessed output",
+                 "utilization operand 0", "transcendentals")}
+
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    record.update({
+        "status": "ok",
+        "mesh_shape": dict(mesh.shape),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_rec,
+        "cost_analysis": cost_rec,
+        "collectives": summarize_collectives(colls),
+        "meta": cell.meta,
+        "hlo_bytes": len(hlo),
+    })
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = out_dir / f"{arch_name}__{shape_name}__{mesh_tag}.json"
+    fname.write_text(json.dumps(record, indent=1))
+    if dump_hlo:
+        (out_dir / f"{arch_name}__{shape_name}__{mesh_tag}.hlo.txt"
+         ).write_text(hlo)
+    return record
+
+
+def run_dgo_cell(multi_pod: bool, out_dir: Path = ARTIFACTS) -> dict:
+    """Lower+compile the PAPER'S technique at production scale: one
+    subspace-DGO training iteration for xlstm-125m with the population
+    sharded over every device (pod x data x model all carry population —
+    the MP-1 'PE array' structure; params/batch replicated, each shard
+    evaluates ceil((2N-1)/P) children sequentially = NCUBE virtual
+    processing). The artifact's collective table demonstrates the paper's
+    headline property: inter-iteration traffic is one all-gather of
+    (value, child-id) pairs — O(P * 8 bytes) — regardless of model size.
+    """
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.encoding import Encoding
+    from repro.core.subspace import make_dgo_train_step
+    from repro.models.layers import abstract_params
+    from repro.models.lm import lm_loss, model_spec
+
+    arch = get_arch("xlstm-125m")
+    mesh_tag = ("pod2x16x16" if multi_pod else "pod16x16") + "__dgo"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pop_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    d_sub, bits = 64, 4
+    enc = Encoding(n_vars=d_sub, bits=bits, lo=-1.0, hi=1.0)
+    batch, seq = 8, 512
+
+    def loss_fn(params, b):
+        return lm_loss(params, arch, b, dtype=jnp.bfloat16)
+
+    t0 = time.time()
+    with mesh:
+        step_fn = make_dgo_train_step(loss_fn, enc, mesh,
+                                      pop_axes=pop_axes, alpha=2.0)
+        rep = NamedSharding(mesh, jax.sharding.PartitionSpec())
+        mapped = jax.jit(jax.shard_map(
+            step_fn, mesh=mesh,
+            in_specs=(jax.sharding.PartitionSpec(),) * 5,
+            out_specs=(jax.sharding.PartitionSpec(),) * 3,
+            check_vma=False))
+        params_abs = abstract_params(model_spec(arch), dtype=jnp.bfloat16)
+        batch_abs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        args = (params_abs, batch_abs,
+                jax.ShapeDtypeStruct((enc.n_bits,), jnp.int8),
+                jax.ShapeDtypeStruct((), jnp.float32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        lowered = mapped.lower(*args)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    n_shards = 1
+    for a in pop_axes:
+        n_shards *= mesh.shape[a]
+    record = {
+        "arch": "xlstm-125m+subspace-dgo", "shape": f"b{batch}xs{seq}",
+        "mesh": mesh_tag, "status": "ok",
+        "population": enc.population, "subspace_dims": d_sub,
+        "shards": n_shards,
+        "children_per_shard": -(-enc.population // n_shards),
+        "compile_s": round(time.time() - t0, 1),
+        "collectives": summarize_collectives(colls),
+        "cost_analysis": {k: float(v)
+                          for k, v in (compiled.cost_analysis() or {}).items()
+                          if isinstance(v, (int, float))
+                          and k in ("flops", "bytes accessed")},
+        "hlo_bytes": len(hlo),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"dgo-subspace-xlstm__{mesh_tag}.json").write_text(
+        json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--policy", default="fsdp",
+                    choices=["fsdp", "zero1", "dp", "auto"])
+    ap.add_argument("--dgo-cell", action="store_true",
+                    help="lower the subspace-DGO production cell instead")
+    args = ap.parse_args()
+
+    if args.dgo_cell:
+        for mp in meshes if False else ([False, True] if args.both_meshes
+                                        else [args.multi_pod]):
+            rec = run_dgo_cell(mp)
+            w = sum(v["executed_wire_bytes"]
+                    for v in rec["collectives"].values())
+            print(f"[ok] dgo-subspace-xlstm {rec['mesh']}: "
+                  f"pop={rec['population']} shards={rec['shards']} "
+                  f"children/shard={rec['children_per_shard']} "
+                  f"compile={rec['compile_s']}s wire={w/1e9:.3f}GB")
+        return
+
+    archs = list(REGISTRY) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                tag = "pod2x16x16" if mp else "pod16x16"
+                f = ARTIFACTS / f"{a}__{s}__{tag}.json"
+                if args.skip_done and f.exists():
+                    print(f"[skip-done] {a} {s} {tag}")
+                    continue
+                try:
+                    pol = None if args.policy == "auto" else args.policy
+                    rec = run_cell(a, s, mp, dump_hlo=args.dump_hlo,
+                                   policy=pol)
+                    if rec["status"] == "ok":
+                        ca = rec["cost_analysis"]
+                        print(f"[ok] {a:20s} {s:12s} {tag}: "
+                              f"compile={rec['compile_s']}s "
+                              f"flops={ca.get('flops', 0):.3e} "
+                              f"hlo={rec['hlo_bytes']>>20}MB")
+                    else:
+                        print(f"[skipped] {a} {s}: {rec['reason'][:60]}")
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((a, s, tag, repr(e)))
+                    print(f"[FAIL] {a} {s} {tag}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         f"{[(a, s, t) for a, s, t, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh builders.
+
+A function, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Single pod: (16, 16) = 256 chips, axes (data, model) — v5e pod.
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the ``pod``
+axis carries DCN-level data parallelism (and DGO cluster parallelism).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch/population dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_shards(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

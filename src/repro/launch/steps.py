@@ -1,0 +1,349 @@
+"""Step builders: train / prefill / decode with production shardings.
+
+``build_cell(arch, shape, mesh, ...)`` returns everything the dry-run,
+trainer and server need for one (architecture x input-shape x mesh) cell:
+the step callable, abstract input specs (ShapeDtypeStruct — no allocation)
+and the matching in/out shardings.
+
+Training memory policy: bf16 parameters and optimizer moments (documented
+low-precision state, DESIGN.md §6), f32 gradient accumulation, microbatched
+gradient accumulation sized by an activation-budget heuristic (scan-over-
+layers carries ~ mb*S*D*2*L bytes with full remat).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import abstract_params, is_spec, logical_axes
+from repro.models.moe import CURRENT_MESH
+from repro.models.lm import ArchConfig, lm_decode, lm_loss, lm_prefill, model_spec
+from repro.optim.gradient import AdamWConfig, adamw_init, adamw_update
+from repro.launch.mesh import batch_axes, data_shards
+from repro.launch.sharding import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    reshard_fwd_bwd,
+    spec_for,
+    batch_sharding,
+    cache_shardings,
+    param_shardings,
+    replicated,
+)
+
+
+def choose_microbatch(arch: ArchConfig, seq: int, local_batch: int,
+                      budget_bytes: int = 2 << 30) -> int:
+    """Largest power-of-2 microbatch whose remat carry fits the budget."""
+    per_item = seq * arch.d_model * 2 * max(arch.n_layers, 1)
+    mb = max(1, budget_bytes // max(per_item, 1))
+    mb = 1 << (mb.bit_length() - 1)
+    return max(1, min(mb, local_batch))
+
+
+def batch_struct(arch: ArchConfig, batch: int, seq: int,
+                 dtype=jnp.bfloat16, with_labels: bool = True,
+                 n_micro: int = 0):
+    """n_micro > 0 prepends the accumulation axis: (n_micro, batch, ...)."""
+    lead = (n_micro,) if n_micro else ()
+    s: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct(lead + (batch, seq), jnp.int32)}
+    if with_labels:
+        s["labels"] = jax.ShapeDtypeStruct(lead + (batch, seq), jnp.int32)
+    if arch.vision_tokens:
+        s["images"] = jax.ShapeDtypeStruct(
+            lead + (batch, arch.vision_tokens, arch.d_frontend), dtype)
+    if arch.enc_dec:
+        s["frames"] = jax.ShapeDtypeStruct(
+            lead + (batch, arch.n_frames, arch.d_model), dtype)
+    return s
+
+
+def batch_shardings(arch: ArchConfig, mesh: Mesh, spec: dict,
+                    batch_dim: int = 0):
+    return {k: batch_sharding(mesh, v.ndim, batch_dim)
+            for k, v in spec.items()}
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def mesh_scoped(fn, mesh):
+    """Run ``fn`` with the EP-pin contextvar set (applies at trace time)."""
+    def wrapped(*a, **k):
+        tok = CURRENT_MESH.set(mesh)
+        try:
+            return fn(*a, **k)
+        finally:
+            CURRENT_MESH.reset(tok)
+    return wrapped
+
+
+def make_constrainer(arch: ArchConfig, mesh: Mesh):
+    """FSDP use-site resharding: storage is (pod,data)-sharded; at each use
+    the parameter (or its per-layer slice inside a scan body) is constrained
+    to the TP-only layout, which GSPMD realizes as a per-layer all-gather in
+    forward/backward and a reduce-scatter of gradients — classic FSDP."""
+    spec_tree = model_spec(arch)
+
+    def to_named(sp, sliced, rules):
+        shape = sp.shape[1:] if sliced else sp.shape
+        axes = sp.axes[1:] if sliced else sp.axes
+        # Expert tensors: NEVER gather — the (EP x TP)-sharded storage IS
+        # the compute layout (an FSDP gather of a 671B MoE layer would be
+        # 10s of GB per device); their grads contract only unsharded dims
+        # so they stay local too.
+        if "experts" in axes:
+            rules = TRAIN_RULES
+        return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+    def constrain(path, sub, sliced=False):
+        node = spec_tree
+        for k in path:
+            node = node[k]
+        use = jax.tree.map(lambda sp: to_named(sp, sliced, SERVE_RULES),
+                           node, is_leaf=is_spec)
+        grad = jax.tree.map(lambda sp: to_named(sp, sliced, TRAIN_RULES),
+                            node, is_leaf=is_spec)
+        return jax.tree.map(reshard_fwd_bwd, sub, use, grad)
+
+    return constrain
+
+
+def make_train_step(arch: ArchConfig, opt_cfg: AdamWConfig, n_micro: int,
+                    dtype=jnp.bfloat16, constrain=None, grad_shardings=None):
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    ``batch`` arrays are pre-shaped (n_micro, micro_batch, ...) so the
+    accumulation scan iterates the leading axis directly — the batch axis
+    stays sharded over (pod, data) throughout (a dynamic_slice along a
+    sharded axis would force an all-gather; see EXPERIMENTS.md §Perf).
+    """
+
+    def loss_fn(params, microbatch):
+        return lm_loss(params, arch, microbatch, dtype=dtype,
+                       constrain=constrain)
+
+    def shard_grads(g):
+        # pin gradients to the FSDP storage layout at the point they leave
+        # backward — GSPMD then emits reduce-scatter (not all-reduce+slice)
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            squeezed = jax.tree.map(lambda a: a[0], batch)
+            loss, grads = jax.value_and_grad(loss_fn)(params, squeezed)
+            grads = shard_grads(grads)
+        else:
+            def micro(carry, microbatch):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, microbatch)
+                g = shard_grads(g)
+                gacc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, lsum), _ = jax.lax.scan(micro, (gz, jnp.float32(0.0)),
+                                            batch)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = lsum / n_micro
+        params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(arch: ArchConfig, cache_len: int, dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        return lm_prefill(params, arch, batch, cache_len=cache_len,
+                          dtype=dtype)
+    return prefill_step
+
+
+def make_decode_step(arch: ArchConfig, dtype=jnp.bfloat16):
+    def decode_step(params, token, cache):
+        return lm_decode(params, arch, token, cache, dtype=dtype)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    step: Any
+    arg_specs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _head_counts(arch: ArchConfig) -> tuple[int, ...]:
+    counts = {arch.n_heads, arch.n_kv_heads}
+    counts.add(2 * arch.d_model // 64)       # mamba2 value heads
+    return tuple(counts)
+
+
+def build_cell(arch: ArchConfig, shape, mesh: Mesh, *,
+               dtype=jnp.bfloat16, opt_cfg: AdamWConfig | None = None,
+               prompt_len: int = 128, policy: str | None = None) -> Cell:
+    """shape: configs.shapes.ShapeSpec; policy: fsdp | zero1 | dp | None."""
+    spec_tree = model_spec(arch)
+    axes_tree = logical_axes(spec_tree)
+    params_abs = abstract_params(spec_tree, dtype=dtype)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        # ---- parallelism policy (auto; overridable) ---------------------
+        # fsdp : params FSDP-stored, per-layer gather via use-site reshard
+        #        (mandatory for MoE/giant models)
+        # zero1: params live TP-resident (replicated over batch axes) so
+        #        the micro loop re-gathers NOTHING; only optimizer moments
+        #        are FSDP-sharded; grads reduce-scatter; updated params
+        #        all-gather ONCE per step (ZeRO stage 1)
+        # dp   : small models — everything replicated, batch sharded over
+        #        every divisible mesh axis (the TP axis joins data
+        #        parallelism instead of idling)
+        from repro.models.lm import n_params as _n_params
+        p_bytes = 2 * _n_params(arch)
+        model_size = mesh.shape["model"]
+        if policy is None:
+            if arch.moe_experts or p_bytes / 256 > 5e9:
+                policy = "fsdp"
+            elif p_bytes <= 1.5e9:
+                policy = "dp"
+            elif p_bytes / model_size <= 5e9:
+                policy = "zero1"
+            else:
+                policy = "fsdp"
+
+        moment_shard = param_shardings(axes_tree, params_abs, mesh,
+                                       TRAIN_RULES)
+        if policy == "fsdp":
+            pshard = moment_shard
+            constrain = make_constrainer(arch, mesh)
+            grad_shardings = pshard
+            batch_axes_used = None          # default (pod, data)
+        elif policy == "zero1":
+            pshard = param_shardings(axes_tree, params_abs, mesh,
+                                     SERVE_RULES)
+            constrain = None
+            grad_shardings = moment_shard   # reduce-scatter into moments
+            batch_axes_used = None
+        else:                               # dp
+            pshard = jax.tree.map(lambda _: replicated(mesh), moment_shard)
+            constrain = None
+            grad_shardings = moment_shard
+            # batch over every axis whose product divides global_batch
+            axes = []
+            prod = 1
+            for a in ("pod", "data", "model"):
+                if a in mesh.shape and shape.global_batch %                         (prod * mesh.shape[a]) == 0:
+                    axes.append(a)
+                    prod *= mesh.shape[a]
+            batch_axes_used = tuple(axes)
+
+        opt_abs = jax.eval_shape(
+            partial(adamw_init, moment_dtype=jnp.dtype(opt_cfg.moment_dtype)),
+            params_abs)
+        oshard = type(opt_abs)(step=replicated(mesh), mu=moment_shard,
+                               nu=moment_shard)
+        n_batch_shards = (data_shards(mesh) if batch_axes_used is None
+                          else math.prod(mesh.shape[a]
+                                         for a in batch_axes_used))
+        local_b = max(shape.global_batch // n_batch_shards, 1)
+        mb = choose_microbatch(arch, shape.seq_len, local_b)
+        n_micro = max(1, local_b // mb)
+        mb_global = shape.global_batch // n_micro
+        bspec = batch_struct(arch, mb_global, shape.seq_len, dtype,
+                             n_micro=n_micro)
+        if batch_axes_used is None:
+            bshard = batch_shardings(arch, mesh, bspec, batch_dim=1)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            def _bs(v):
+                parts = [None] * v.ndim
+                parts[1] = (batch_axes_used if len(batch_axes_used) > 1
+                            else batch_axes_used[0])
+                return NamedSharding(mesh, P(*parts))
+            bshard = {k: _bs(v) for k, v in bspec.items()}
+        step = mesh_scoped(
+            make_train_step(arch, opt_cfg, n_micro, dtype,
+                            constrain=constrain,
+                            grad_shardings=grad_shardings), mesh)
+        return Cell(
+            name=f"{arch.name}:{shape.name}",
+            step=step,
+            arg_specs=(params_abs, opt_abs, bspec),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, replicated(mesh)),
+            donate_argnums=(0, 1),
+            meta={"n_micro": n_micro, "microbatch": mb,
+                  "local_batch": local_b, "policy": policy},
+        )
+
+    pshard = param_shardings(axes_tree, params_abs, mesh, SERVE_RULES)
+    if shape.kind == "prefill":
+        step = mesh_scoped(
+            make_prefill_step(arch, cache_len=shape.seq_len, dtype=dtype),
+            mesh)
+        bspec = batch_struct(arch, shape.global_batch, shape.seq_len, dtype,
+                             with_labels=False)
+        bshard = batch_shardings(arch, mesh, bspec)
+        cache_abs = jax.eval_shape(step, params_abs, bspec)[1]
+        cshard = cache_shardings(cache_abs, mesh, batch=shape.global_batch,
+                                 cache_len=shape.seq_len,
+                                 head_counts=_head_counts(arch))
+        logit_shard = batch_sharding(mesh, 2)
+        return Cell(
+            name=f"{arch.name}:{shape.name}",
+            step=step,
+            arg_specs=(params_abs, bspec),
+            in_shardings=(pshard, bshard),
+            out_shardings=(logit_shard, cshard),
+            meta={},
+        )
+
+    # decode: one new token against a cache of shape.seq_len
+    prefill = make_prefill_step(arch, cache_len=shape.seq_len, dtype=dtype)
+    bspec_p = batch_struct(arch, shape.global_batch, prompt_len, dtype,
+                           with_labels=False)
+    cache_abs = jax.eval_shape(prefill, params_abs, bspec_p)[1]
+    step = mesh_scoped(make_decode_step(arch, dtype), mesh)
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    cshard = cache_shardings(cache_abs, mesh, batch=shape.global_batch,
+                             cache_len=shape.seq_len,
+                             head_counts=_head_counts(arch))
+    tshard = batch_sharding(mesh, 1) if shape.global_batch % \
+        data_shards(mesh) == 0 else replicated(mesh)
+    logit_shard = tshard if shape.global_batch % data_shards(mesh) == 0 \
+        else replicated(mesh)
+    return Cell(
+        name=f"{arch.name}:{shape.name}",
+        step=step,
+        arg_specs=(params_abs, tok_spec, cache_abs),
+        in_shardings=(pshard, tshard, cshard),
+        out_shardings=(replicated(mesh) if shape.global_batch == 1
+                       else logit_shard, cshard),
+        donate_argnums=(2,),
+        meta={},
+    )

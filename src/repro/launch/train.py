@@ -1,0 +1,142 @@
+"""Training driver: end-to-end LM training with checkpoint/restart,
+failure injection, and optional DGO (subspace) or compressed-DP modes.
+
+CPU-scale usage (reduced configs; the production mesh path is exercised by
+dryrun.py):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \\
+      --steps 50 --global-batch 8 --seq-len 64 --ckpt-every 20 \\
+      --inject-failure-rate 0.02 --ckpt-dir /tmp/ck
+
+The restart loop is the fault-tolerance contract: any step may die
+(SimulatedFailure stands in for a lost node); the driver reloads the newest
+valid checkpoint and continues. Data is a pure function of step, so the
+token stream is identical across restarts.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import REGISTRY, get_arch, reduced
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_model, lm_loss
+from repro.optim.gradient import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import FailureInjector, SimulatedFailure
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(REGISTRY))
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) variant on CPU")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--inject-failure-rate", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dtype", default="float32")
+    return ap
+
+
+def run_training(args) -> dict:
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = reduced(arch)
+    mesh = make_host_mesh(model=args.model_shards)
+    dtype = jnp.dtype(args.dtype)
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                          total_steps=args.steps, weight_decay=0.01)
+    data = SyntheticTokenPipeline(
+        DataConfig(vocab_size=arch.vocab_size, seq_len=args.seq_len,
+                   global_batch=args.global_batch, seed=args.seed),
+        extras=_extras(arch, dtype))
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, arch, batch, dtype=dtype))(params)
+        params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss
+
+    injector = FailureInjector(args.inject_failure_rate, seed=args.seed + 1)
+    ckpt_dir = Path(args.ckpt_dir)
+    losses: list[float] = []
+    restarts = 0
+
+    def fresh_state():
+        params = init_model(arch, jax.random.PRNGKey(args.seed), dtype)
+        return params, adamw_init(params)
+
+    params, opt_state = fresh_state()
+    start = latest_step(ckpt_dir)
+    step = 0
+    if start is not None:
+        params, opt_state = restore_checkpoint(
+            ckpt_dir, start, (params, opt_state))
+        step = start
+        print(f"[train] resumed from checkpoint step {step}")
+
+    t0 = time.time()
+    while step < args.steps:
+        try:
+            batch = data.batch_at(step)
+            injector.maybe_fail(step)
+            params, opt_state, loss = train_step(params, opt_state, batch)
+            loss = float(loss)
+            losses.append(loss)
+            step += 1
+            if step % args.log_every == 0:
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"({(time.time() - t0) / step:.2f}s/step)")
+            if step % args.ckpt_every == 0 or step == args.steps:
+                save_checkpoint(ckpt_dir, step, (params, opt_state))
+        except SimulatedFailure as e:
+            restarts += 1
+            print(f"[train] {e} -> restarting from latest checkpoint")
+            start = latest_step(ckpt_dir)
+            if start is None:
+                params, opt_state = fresh_state()
+                step = 0
+            else:
+                params, opt_state = restore_checkpoint(
+                    ckpt_dir, start, (params, opt_state))
+                step = start
+    data.close()
+    return {"final_loss": losses[-1] if losses else None,
+            "first_loss": losses[0] if losses else None,
+            "steps": step, "restarts": restarts,
+            "injected_failures": injector.injected}
+
+
+def _extras(arch, dtype):
+    extras = {}
+    if arch.vision_tokens:
+        extras["images"] = ((arch.vision_tokens, arch.d_frontend), dtype)
+    if arch.enc_dec:
+        extras["frames"] = ((arch.n_frames, arch.d_model), dtype)
+    return extras
+
+
+def main():
+    args = build_argparser().parse_args()
+    result = run_training(args)
+    print(json.dumps(result))
+
+
+if __name__ == "__main__":
+    main()

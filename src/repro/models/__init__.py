@@ -1,0 +1,12 @@
+"""Model zoo: composable JAX blocks covering all ten assigned architectures."""
+from repro.models.lm import (
+    ArchConfig,
+    build_plan,
+    init_model,
+    lm_decode,
+    lm_loss,
+    lm_prefill,
+    model_axes,
+    model_spec,
+    n_params,
+)

@@ -1,0 +1,224 @@
+"""Attention: MHA/GQA/MQA with RoPE, bias, qk-norm, sliding window; causal,
+bidirectional and cross variants; full-sequence (train/prefill) and
+single-token (decode) paths.
+
+Memory strategy: for long sequences the full-sequence path chunks queries
+with ``lax.map`` (flash-attention-style online structure in plain XLA — the
+(Cq, T) score block is the only materialized score tensor). A Pallas flash
+kernel with the same contract lives in ``kernels/flash_attention`` for the
+real-TPU deployment; the XLA chunked path is what the dry-run rooflines
+(DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_rope, dense_spec, rmsnorm
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    causal: bool = True
+    window: int | None = None          # sliding-window size (None = global)
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    chunk_q: int = 512                 # query block for the chunked path
+    softmax_scale: float | None = None
+    # route full-sequence attention through the Pallas flash kernel
+    # (kernels/flash_attention). Static-window/causal only; dynamic
+    # per-layer windows fall back to the XLA chunked path. interpret=True
+    # on CPU, compiled Mosaic on TPU.
+    use_flash: bool = False
+    flash_interpret: bool = True
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale or self.head_dim ** -0.5
+
+
+def attn_spec(cfg: AttnConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((hq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((hq, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        spec["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return spec
+
+
+def _qkv(p, cfg: AttnConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q)
+        k = rmsnorm({"scale": p["k_norm"]}, k)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(cfg: AttnConfig, q_pos, k_pos, window=None):
+    """(..., Sq, Sk) bool mask from absolute positions.
+
+    ``window``: traced scalar override (0 = global) so one scanned layer body
+    can serve mixed local/global patterns; falls back to static cfg.window.
+    """
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if cfg.causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        m &= jnp.where(w > 0, k_pos[None, :] > q_pos[:, None] - w, True)
+    elif cfg.window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - cfg.window
+    return m
+
+
+def sdpa(cfg: AttnConfig, q, k, v, q_pos, k_pos, window=None):
+    """Scaled dot-product attention, GQA-grouped, query-chunked.
+
+    q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd); *_pos: (S,) absolute positions.
+    """
+    if (cfg.use_flash and window is None and q.shape[1] == k.shape[1]
+            and q.shape[1] >= 128):
+        from repro.kernels.flash_attention.ops import flash_sdpa
+        return flash_sdpa(q, k, v, scale=cfg.scale, causal=cfg.causal,
+                          window=cfg.window or 0,
+                          interpret=cfg.flash_interpret)
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+
+    def block(args):
+        qb, qp = args                                   # (B, Cq, Hkv, G, hd)
+        s = jnp.einsum("bqhgk,bshk->bhgqs", qb, k) * cfg.scale
+        s = jnp.where(_mask(cfg, qp, k_pos, window)[None, None, None],
+                      s, NEG_INF)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return jnp.einsum("bhgqs,bshk->bqhgk", w, v)
+
+    if sq <= cfg.chunk_q:
+        out = block((qg, q_pos))
+    else:
+        n_chunks = -(-sq // cfg.chunk_q)
+        pad = n_chunks * cfg.chunk_q - sq
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qp_p = jnp.pad(q_pos, (0, pad))
+        qg_c = jnp.moveaxis(
+            qg_p.reshape(b, n_chunks, cfg.chunk_q, hkv, g, hd), 1, 0)
+        qp_c = qp_p.reshape(n_chunks, cfg.chunk_q)
+        out = jax.lax.map(block, (qg_c, qp_c))          # (n, B, Cq, Hkv, G, hd)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, n_chunks * cfg.chunk_q,
+                                              hkv, g, hd)[:, :sq]
+    return out.reshape(b, sq, hq, hd)
+
+
+def attn_forward(p, cfg: AttnConfig, x, positions=None, window=None):
+    """Full-sequence self-attention. x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = sdpa(cfg, q, k, v, positions, positions, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attn_prefill(p, cfg: AttnConfig, x, cache_len: int, window=None):
+    """Forward + produce a (B, T, Hkv, hd) kv cache padded to cache_len."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = sdpa(cfg, q, k, v, positions, positions, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+    return y, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+def attn_decode(p, cfg: AttnConfig, x, cache_k, cache_v, pos, window=None):
+    """One-token decode. x: (B, 1, D); cache: (B, T, Hkv, hd); pos: () i32.
+
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    b, _, _ = x.shape
+    positions = pos[None].astype(jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    t = cache_k.shape[1]
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg,
+                   cache_k.astype(x.dtype)) * cfg.scale
+    valid = k_pos <= pos
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        valid &= jnp.where(w > 0, k_pos > pos - w, True)
+    elif cfg.window is not None:
+        valid &= k_pos > pos - cfg.window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w, cache_v.astype(x.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out.reshape(b, 1, hq, hd),
+                   p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (enc-dec; whisper)
+# ---------------------------------------------------------------------------
+
+def cross_attn_spec(cfg: AttnConfig) -> dict:
+    return attn_spec(cfg)
+
+
+def cross_attn(p, cfg: AttnConfig, x, enc_kv):
+    """x: (B, S, D) queries; enc_kv: (k, v) each (B, T, Hkv, hd) precomputed."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    k, v = enc_kv
+    cfg_x = dataclasses.replace(cfg, causal=False, window=None, use_rope=False)
+    q_pos = jnp.arange(s, dtype=jnp.int32)
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    out = sdpa(cfg_x, q, k.astype(x.dtype), v.astype(x.dtype), q_pos, k_pos)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_kv(p, cfg: AttnConfig, enc_out):
+    """Precompute cross-attention k/v from encoder output (cached once)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k, v

@@ -1,0 +1,183 @@
+"""Parameter-spec system + shared layers (norms, RoPE, MLPs, embeddings).
+
+Single source of truth for parameter shapes AND logical sharding axes: every
+module builds a tree of ``ParamSpec``s; ``init_params`` materializes arrays
+and ``logical_axes`` materializes the matching tree of axis-name tuples that
+``launch/sharding.py`` turns into NamedShardings (MaxText-style rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis name per dim
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float | None = None            # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, key: jax.Array, dtype=jnp.float32):
+    """Materialize a ParamSpec tree into arrays (deterministic per-leaf)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        else:
+            if spec.scale is not None:
+                std = spec.scale
+            elif spec.init == "embed":
+                std = 0.02
+            else:  # fan-in
+                fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+                std = 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (std * jax.random.normal(k, spec.shape)).astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree,
+        is_leaf=is_spec)
+
+
+def logical_axes(spec_tree):
+    """Tree of logical-axis tuples mirroring the params tree."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str | None = "layers"):
+    """Prepend a stacking dim (scan-over-layers parameter layout)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes,
+                            s.init, s.scale),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(spec_tree, is_leaf=is_spec))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"].astype(dt)
+
+
+def layernorm_spec(d: int):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["scale"].astype(dt) + p["bias"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+def dense_spec(d_in: int, d_out: int, axes: tuple[str | None, str | None],
+               bias: bool = False, scale: float | None = None):
+    spec = {"w": ParamSpec((d_in, d_out), axes, scale=scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (axes[1],), init="zeros")
+    return spec
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_spec(vocab: int, d: int):
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Tied / untied readout: x (..., d) @ table^T -> (..., vocab)."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_spec(d: int, d_ff: int):
+    return {"gate": dense_spec(d, d_ff, ("embed", "mlp")),
+            "up": dense_spec(d, d_ff, ("embed", "mlp")),
+            "down": dense_spec(d_ff, d, ("mlp", "embed"))}
+
+
+def swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def gelu_mlp_spec(d: int, d_ff: int, bias: bool = True):
+    return {"up": dense_spec(d, d_ff, ("embed", "mlp"), bias=bias),
+            "down": dense_spec(d_ff, d, ("mlp", "embed"), bias=bias)}
+
+
+def gelu_mlp(p, x):
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32. Half-split convention."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,572 @@
+"""LM assembly: ArchConfig -> parameter spec -> train / prefill / decode.
+
+A model is a *plan*: an ordered list of segments, each a run of identical
+layers scanned with stacked parameters (scan-over-layers keeps HLO size
+O(unique block kinds), which is what makes 61-88-layer dry-runs tractable).
+Hybrid patterns (zamba2's shared attention, xLSTM's sLSTM interleave,
+DeepSeek's leading dense layers) become multiple segments; gemma3's 5:1
+local:global pattern stays a single segment with a per-layer traced window.
+
+Paths:
+  lm_loss(params, arch, batch)                -> scalar (train objective)
+  lm_prefill(params, arch, batch)             -> (logits_last, cache)
+  lm_decode(params, arch, token, cache, pos)  -> (logits, cache)
+
+The vocabulary readout is sequence-chunked (``chunked_ce``): the (B, S, V)
+logits tensor is never materialized — decisive for gemma3's 262k vocab.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.layers import (
+    ParamSpec,
+    dense,
+    dense_spec,
+    embed,
+    embedding_spec,
+    init_params,
+    logical_axes,
+    param_count,
+    stack_specs,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma: embeddings * sqrt(d)
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    mlp_kind: str = "swiglu"
+    norm_kind: str = "rmsnorm"
+    # sliding-window pattern
+    window: int | None = None
+    global_every: int | None = None  # layer i global iff (i+1) % global_every == 0
+    # MLA
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared: int = 0
+    moe_dense_layers: int = 0
+    moe_d_ff_dense: int = 0
+    moe_capacity: float = 1.25
+    # SSM / hybrid
+    block_pattern: str = "attn"      # attn | xlstm | mamba | zamba
+    ssm_state: int = 64
+    slstm_every: int = 0
+    shared_attn_every: int = 0
+    # enc-dec / frontends (stubs provide precomputed embeddings)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    n_frames: int = 1500
+    vision_tokens: int = 0
+    d_frontend: int = 1024           # CLIP embedding width (vlm stub)
+    # MTP
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    # compute
+    remat: bool = True
+    use_flash_attention: bool = False   # Pallas flash kernel (TPU target)
+    attn_chunk_q: int = 512
+    mamba_chunk: int = 256
+    loss_chunk: int = 512
+    sub_quadratic: bool = False      # qualifies for long_500k
+
+    @property
+    def head_dim_v(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str                        # attn | mla | mamba | mlstm | slstm | shared
+    n: int
+    moe: bool = False
+    d_ff: int | None = None          # dense-FFN override
+    cross: bool = False
+    name: str = "seg0"
+
+
+def build_plan(arch: ArchConfig) -> list[Segment]:
+    if arch.block_pattern == "xlstm":
+        segs, run, idx = [], 0, 0
+        for i in range(arch.n_layers):
+            is_s = arch.slstm_every and (i + 1) % arch.slstm_every == 0
+            if is_s:
+                if run:
+                    segs.append(Segment("mlstm", run, name=f"seg{idx}")); idx += 1
+                    run = 0
+                segs.append(Segment("slstm", 1, name=f"seg{idx}")); idx += 1
+            else:
+                run += 1
+        if run:
+            segs.append(Segment("mlstm", run, name=f"seg{idx}"))
+        return segs
+    if arch.block_pattern == "zamba":
+        segs, idx = [], 0
+        i = 0
+        while i < arch.n_layers:
+            segs.append(Segment("shared", 1, name=f"shared{idx}"))
+            n = min(arch.shared_attn_every, arch.n_layers - i)
+            segs.append(Segment("mamba", n, name=f"seg{idx}"))
+            i += n
+            idx += 1
+        return segs
+    if arch.block_pattern == "mamba":
+        return [Segment("mamba", arch.n_layers)]
+    kind = "mla" if arch.use_mla else "attn"
+    if arch.moe_experts:
+        segs = []
+        if arch.moe_dense_layers:
+            segs.append(Segment(kind, arch.moe_dense_layers, moe=False,
+                                d_ff=arch.moe_d_ff_dense, name="dense"))
+        segs.append(Segment(kind, arch.n_layers - arch.moe_dense_layers,
+                            moe=True, name="moe"))
+        return segs
+    return [Segment(kind, arch.n_layers, cross=arch.enc_dec)]
+
+
+def layer_windows(arch: ArchConfig, seg_start: int, n: int) -> jax.Array:
+    """Per-layer window sizes (0 = global) for an attention segment."""
+    if arch.window is None:
+        return jnp.zeros((n,), jnp.int32)
+    idx = jnp.arange(seg_start, seg_start + n)
+    if arch.global_every:
+        return jnp.where((idx + 1) % arch.global_every == 0, 0,
+                         arch.window).astype(jnp.int32)
+    return jnp.full((n,), arch.window, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# parameter spec
+# ---------------------------------------------------------------------------
+
+def _segment_spec(arch: ArchConfig, seg: Segment):
+    if seg.kind == "attn":
+        one = blk.attn_block_spec(arch, moe=seg.moe, cross=seg.cross,
+                                  d_ff=seg.d_ff)
+    elif seg.kind == "mla":
+        one = blk.mla_block_spec(arch, moe=seg.moe, d_ff=seg.d_ff)
+    elif seg.kind == "mamba":
+        one = blk.mamba_block_spec(arch)
+    elif seg.kind == "mlstm":
+        one = blk.mlstm_block_spec(arch)
+    elif seg.kind == "slstm":
+        one = blk.slstm_block_spec(arch)
+    else:
+        raise ValueError(seg.kind)
+    return stack_specs(one, seg.n)
+
+
+def model_spec(arch: ArchConfig) -> dict:
+    spec: dict[str, Any] = {"embed": embedding_spec(arch.vocab_size,
+                                                    arch.d_model)}
+    spec["segments"] = {
+        seg.name: _segment_spec(arch, seg)
+        for seg in build_plan(arch) if seg.kind != "shared"
+    }
+    if arch.block_pattern == "zamba":
+        spec["shared_attn"] = blk.attn_block_spec(arch)
+        spec["shared_proj"] = dense_spec(arch.d_model, arch.d_model,
+                                         ("embed", "embed"), scale=0.02)
+    if arch.enc_dec:
+        spec["encoder"] = {
+            "pos": ParamSpec((arch.n_frames, arch.d_model), (None, "embed"),
+                             scale=0.02),
+            "layers": stack_specs(
+                blk.attn_block_spec(arch), arch.n_enc_layers),
+            "norm": blk._norm_spec(arch),
+        }
+    if arch.vision_tokens:
+        spec["img_proj"] = dense_spec(arch.d_frontend, arch.d_model,
+                                      (None, "embed"))
+    spec["final_norm"] = blk._norm_spec(arch)
+    if not arch.tie_embeddings:
+        spec["lm_head"] = ParamSpec((arch.d_model, arch.vocab_size),
+                                    ("embed", "vocab"), scale=0.02)
+    if arch.mtp:
+        spec["mtp"] = {
+            "proj": dense_spec(2 * arch.d_model, arch.d_model,
+                               (None, "embed")),
+            "block": (blk.mla_block_spec(arch, d_ff=arch.moe_d_ff_dense
+                                         or arch.d_ff)
+                      if arch.use_mla else blk.attn_block_spec(arch)),
+            "norm": blk._norm_spec(arch),
+        }
+    return spec
+
+
+def init_model(arch: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    return init_params(model_spec(arch), key, dtype)
+
+
+def model_axes(arch: ArchConfig):
+    return logical_axes(model_spec(arch))
+
+
+def n_params(arch: ArchConfig) -> int:
+    return param_count(model_spec(arch))
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper backbone; frame embeddings from the stub frontend)
+# ---------------------------------------------------------------------------
+
+def encode_frames(params, arch: ArchConfig, frames, constrain=None):
+    """frames: (B, F, D) precomputed frame embeddings -> encoder output."""
+    cons = constrain or _identity_constrain
+    enc = params["encoder"]
+    x = frames + enc["pos"].astype(frames.dtype)[None, :frames.shape[1]]
+
+    def body(x, p):
+        p = cons(("encoder", "layers"), p, sliced=True)
+        y, _ = blk.attn_block_train(p, arch, x, causal=False)
+        return y, None
+
+    fn = jax.checkpoint(body) if arch.remat else body
+    x, _ = jax.lax.scan(fn, x, enc["layers"])
+    return blk._norm(arch, enc["norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# hidden-state forward (train path)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, arch: ArchConfig, batch, dtype, constrain=None):
+    """Returns (x, extra_prefix_len). Merges frontend stubs."""
+    cons = constrain or _identity_constrain
+    tokens = batch["tokens"]
+    x = embed(cons(("embed",), params["embed"]), tokens).astype(dtype)
+    if arch.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(arch.d_model, dtype))
+    prefix = 0
+    if arch.vision_tokens:
+        img = dense(cons(("img_proj",), params["img_proj"]),
+                    batch["images"].astype(dtype))
+        x = jnp.concatenate([img, x], axis=1)
+        prefix = img.shape[1]
+    return x, prefix
+
+
+def _identity_constrain(path, sub, sliced=False):
+    return sub
+
+
+def forward_hidden(params, arch: ArchConfig, x, enc_out=None, constrain=None):
+    """(B, S, D) -> (B, S, D) through all segments. Returns (h, aux).
+
+    ``constrain(path, subtree, sliced)`` re-shards parameters at their use
+    site (FSDP: storage sharded over the batch axes, gathered to TP-only
+    layout per layer inside the scan body — see launch.steps.make_constrainer).
+    """
+    cons = constrain or _identity_constrain
+    aux_total = jnp.float32(0.0)
+    layer_idx = 0
+    for seg in build_plan(arch):
+        if seg.kind == "shared":
+            p = cons(("shared_attn",), params["shared_attn"])
+            y, _ = blk.attn_block_train(p, arch, x)
+            proj = cons(("shared_proj",), params["shared_proj"])
+            x = x + dense(proj, y - x)  # project the delta
+            continue
+        p = params["segments"][seg.name]
+        path = ("segments", seg.name)
+        if seg.kind in ("attn", "mla"):
+            if seg.kind == "attn":
+                wins = layer_windows(arch, layer_idx, seg.n)
+                if seg.cross and enc_out is not None:
+                    cfg = blk.attn_cfg(arch, causal=False)
+                    def body(carry, pw):
+                        xc, aux = carry
+                        pl, w = pw
+                        pl = cons(path, pl, sliced=True)
+                        from repro.models.attention import cross_kv
+                        ekv = cross_kv(pl["xattn"], cfg, enc_out)
+                        y, a = blk.attn_block_train(pl, arch, xc, window=w,
+                                                    moe=seg.moe, enc_kv=ekv)
+                        return (y, aux + a), None
+                else:
+                    def body(carry, pw):
+                        xc, aux = carry
+                        pl, w = pw
+                        pl = cons(path, pl, sliced=True)
+                        y, a = blk.attn_block_train(pl, arch, xc, window=w,
+                                                    moe=seg.moe)
+                        return (y, aux + a), None
+                fn = jax.checkpoint(body) if arch.remat else body
+                (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total),
+                                                 (p, wins))
+            else:
+                def body(carry, pl):
+                    xc, aux = carry
+                    pl = cons(path, pl, sliced=True)
+                    y, a = blk.mla_block_train(pl, arch, xc, moe=seg.moe)
+                    return (y, aux + a), None
+                fn = jax.checkpoint(body) if arch.remat else body
+                (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total), p)
+        else:
+            train_fn = {"mamba": blk.mamba_block_train,
+                        "mlstm": blk.mlstm_block_train,
+                        "slstm": blk.slstm_block_train}[seg.kind]
+
+            def body(xc, pl):
+                pl = cons(path, pl, sliced=True)
+                y, _ = train_fn(pl, arch, xc)
+                return y, None
+            fn = jax.checkpoint(body) if arch.remat else body
+            x, _ = jax.lax.scan(fn, x, p)
+        layer_idx += seg.n
+    return blk._norm(arch, params["final_norm"], x), aux_total
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materializes (B, S, V))
+# ---------------------------------------------------------------------------
+
+def _readout_table(params, arch: ArchConfig):
+    if arch.tie_embeddings:
+        return params["embed"]["table"]
+    return params["lm_head"]
+
+
+def chunked_ce(h, table, labels, chunk: int, transpose: bool):
+    """h: (B,S,D); labels: (B,S) with -1 = ignore. Mean CE over valid."""
+    b, s, d = h.shape
+    cs = min(chunk, s)
+    nc = -(-s // cs)
+    if nc * cs != s:
+        pad = nc * cs - s
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s = nc * cs
+
+    def blk_fn(args):
+        hb, lb = args                           # (B,C,D), (B,C)
+        t = table.astype(jnp.float32)
+        logits = (hb.astype(jnp.float32) @ (t.T if transpose else t))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        return jnp.where(lb >= 0, logz - ll, 0.0), (lb >= 0).astype(jnp.float32)
+
+    blk_fn = jax.checkpoint(blk_fn)
+    hc = jnp.moveaxis(h.reshape(b, nc, cs, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, cs), 1, 0)
+    losses, valid = jax.lax.map(blk_fn, (hc, lc))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# training objective
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, arch: ArchConfig, batch, dtype=jnp.bfloat16,
+            constrain=None):
+    """batch: tokens (B,S), labels (B,S); + images/frames for stubs."""
+    cons = constrain or _identity_constrain
+    x, prefix = _embed_inputs(params, arch, batch, dtype, cons)
+    enc_out = None
+    if arch.enc_dec:
+        enc_out = encode_frames(params, arch,
+                                batch["frames"].astype(dtype), cons)
+    h, aux = forward_hidden(params, arch, x, enc_out, cons)
+    labels = batch["labels"]
+    if prefix:
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], prefix), -1, labels.dtype), labels],
+            axis=1)
+    tie = arch.tie_embeddings or "lm_head" not in params
+    table = cons(("embed",), params["embed"])["table"] if tie else \
+        cons(("lm_head",), params["lm_head"])
+    loss = chunked_ce(h, table, labels, arch.loss_chunk, transpose=tie)
+    if arch.mtp:
+        loss = loss + arch.mtp_weight * _mtp_loss(params, arch, h, batch,
+                                                  dtype, prefix, cons)
+    return loss + aux
+
+
+def _mtp_loss(params, arch: ArchConfig, h, batch, dtype, prefix,
+              constrain=None):
+    """DeepSeek-V3-style depth-1 multi-token prediction: one extra block
+    predicts token t+2 from (h_t, emb(token_{t+1}))."""
+    cons = constrain or _identity_constrain
+    mtp = cons(("mtp",), params["mtp"])
+    tokens, labels = batch["tokens"], batch["labels"]
+    if prefix:
+        h = h[:, prefix:]
+    emb_next = embed(cons(("embed",), params["embed"]),
+                     tokens[:, 1:]).astype(dtype)
+    merged = jnp.concatenate([h[:, :-1].astype(dtype), emb_next], axis=-1)
+    x = dense(mtp["proj"], merged)
+    if arch.use_mla:
+        x, _ = blk.mla_block_train(mtp["block"], arch, x)
+    else:
+        x, _ = blk.attn_block_train(mtp["block"], arch, x)
+    x = blk._norm(arch, mtp["norm"], x)
+    # labels shifted one more step: predict labels[t+1] at position t
+    lbl = jnp.concatenate(
+        [labels[:, 1:], jnp.full((labels.shape[0], 1), -1, labels.dtype)],
+        axis=1)[:, :-1]
+    tie = arch.tie_embeddings or "lm_head" not in params
+    table = cons(("embed",), params["embed"])["table"] if tie else \
+        cons(("lm_head",), params["lm_head"])
+    return chunked_ce(x, table, lbl, arch.loss_chunk, transpose=tie)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def lm_prefill(params, arch: ArchConfig, batch, cache_len: int,
+               dtype=jnp.bfloat16):
+    """Prompt forward; returns (last-position logits, cache)."""
+    x, prefix = _embed_inputs(params, arch, batch, dtype)
+    enc_out = None
+    if arch.enc_dec:
+        enc_out = encode_frames(params, arch, batch["frames"].astype(dtype))
+    cache: dict[str, Any] = {}
+    layer_idx = 0
+    total_len = cache_len + prefix
+    for seg in build_plan(arch):
+        if seg.kind == "shared":
+            p = params["shared_attn"]
+            y, _, kv = blk.attn_block_prefill(p, arch, x, total_len)
+            x = x + dense(params["shared_proj"], y - x)
+            cache[seg.name] = kv
+            continue
+        p = params["segments"][seg.name]
+        if seg.kind == "attn":
+            wins = layer_windows(arch, layer_idx, seg.n)
+            if seg.cross and enc_out is not None:
+                cfg = blk.attn_cfg(arch, causal=False)
+                from repro.models.attention import cross_kv
+
+                def body(xc, pw):
+                    pl, w = pw
+                    ekv = cross_kv(pl["xattn"], cfg, enc_out)
+                    y, _, kv = blk.attn_block_prefill(pl, arch, xc, total_len,
+                                                      window=w, moe=seg.moe,
+                                                      enc_kv=ekv)
+                    return y, (kv, ekv)
+                x, (kvs, ekvs) = jax.lax.scan(body, x, (p, wins))
+                cache[seg.name] = kvs
+                cache[seg.name + "_cross"] = ekvs
+            else:
+                def body(xc, pw):
+                    pl, w = pw
+                    y, _, kv = blk.attn_block_prefill(pl, arch, xc, total_len,
+                                                      window=w, moe=seg.moe)
+                    return y, kv
+                x, kvs = jax.lax.scan(body, x, (p, wins))
+                cache[seg.name] = kvs
+        elif seg.kind == "mla":
+            def body(xc, pl):
+                y, _, c = blk.mla_block_prefill(pl, arch, xc, total_len,
+                                                moe=seg.moe)
+                return y, c
+            x, cs = jax.lax.scan(body, x, p)
+            cache[seg.name] = cs
+        else:
+            pre_fn = {"mamba": blk.mamba_block_prefill,
+                      "mlstm": blk.mlstm_block_prefill,
+                      "slstm": blk.slstm_block_prefill}[seg.kind]
+
+            def body(xc, pl):
+                y, _, st = pre_fn(pl, arch, xc)
+                return y, st
+            x, sts = jax.lax.scan(body, x, p)
+            cache[seg.name] = sts
+        layer_idx += seg.n
+    h = blk._norm(arch, params["final_norm"], x[:, -1:])
+    table = _readout_table(params, arch)
+    t = table.astype(jnp.float32)
+    tr = arch.tie_embeddings or "lm_head" not in params
+    logits = h.astype(jnp.float32) @ (t.T if tr else t)
+    cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    return logits[:, 0], cache
+
+
+def lm_decode(params, arch: ArchConfig, token, cache, dtype=jnp.bfloat16):
+    """One decode step. token: (B,) int32. Returns (logits (B,V), cache)."""
+    pos = cache["pos"]
+    x = embed(params["embed"], token[:, None]).astype(dtype)
+    if arch.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(arch.d_model, dtype))
+    new_cache: dict[str, Any] = {"pos": pos + 1}
+    layer_idx = 0
+    for seg in build_plan(arch):
+        if seg.kind == "shared":
+            p = params["shared_attn"]
+            y, kv = blk.attn_block_decode(p, arch, x, cache[seg.name], pos)
+            x = x + dense(params["shared_proj"], y - x)
+            new_cache[seg.name] = kv
+            continue
+        p = params["segments"][seg.name]
+        if seg.kind == "attn":
+            wins = layer_windows(arch, layer_idx, seg.n)
+            if seg.cross and arch.enc_dec:
+                def body(xc, pcw):
+                    pl, kv, ekv, w = pcw
+                    y, kv = blk.attn_block_decode(pl, arch, xc, kv, pos,
+                                                  window=w, moe=seg.moe,
+                                                  enc_kv=ekv)
+                    return y, kv
+                x, kvs = jax.lax.scan(
+                    body, x, (p, cache[seg.name],
+                              cache[seg.name + "_cross"], wins))
+                new_cache[seg.name] = kvs
+                new_cache[seg.name + "_cross"] = cache[seg.name + "_cross"]
+            else:
+                def body(xc, pcw):
+                    pl, kv, w = pcw
+                    y, kv = blk.attn_block_decode(pl, arch, xc, kv, pos,
+                                                  window=w, moe=seg.moe)
+                    return y, kv
+                x, kvs = jax.lax.scan(body, x, (p, cache[seg.name], wins))
+                new_cache[seg.name] = kvs
+        elif seg.kind == "mla":
+            def body(xc, pc):
+                pl, c = pc
+                y, c = blk.mla_block_decode(pl, arch, xc, c, pos, moe=seg.moe)
+                return y, c
+            x, cs = jax.lax.scan(body, x, (p, cache[seg.name]))
+            new_cache[seg.name] = cs
+        else:
+            dec_fn = {"mamba": blk.mamba_block_decode,
+                      "mlstm": blk.mlstm_block_decode,
+                      "slstm": blk.slstm_block_decode}[seg.kind]
+
+            def body(xc, pc):
+                pl, st = pc
+                y, st = dec_fn(pl, arch, xc, st, pos)
+                return y, st
+            x, sts = jax.lax.scan(body, x, (p, cache[seg.name]))
+            new_cache[seg.name] = sts
+        layer_idx += seg.n
+    h = blk._norm(arch, params["final_norm"], x)
+    table = _readout_table(params, arch)
+    t = table.astype(jnp.float32)
+    tr = arch.tie_embeddings or "lm_head" not in params
+    logits = h.astype(jnp.float32) @ (t.T if tr else t)
+    return logits[:, 0], new_cache

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) block: chunked parallel scan for train/prefill, O(1)
+recurrent state for decode.
+
+Train path is the SSD block-decomposition: within-chunk quadratic term via
+the segment-sum decay mask, cross-chunk term via a `lax.scan` over chunk
+states — O(S * Q) work, sub-quadratic in S (Q = chunk length). Decode
+carries (ssm_state (B,H,P,N), conv_state) and costs O(1) per token — this
+is what makes the ``long_500k`` cells tractable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba2_spec(cfg: Mamba2Config) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj_out = 2 * di + 2 * n + h          # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.d_conv, cfg.conv_dim), (None, "mlp"),
+                            scale=0.5),
+        "conv_b": ParamSpec((cfg.conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((h,), (None,), init="zeros"),
+        "d_skip": ParamSpec((h,), (None,), init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "norm": ParamSpec((di,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: Mamba2Config, proj):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + cfg.conv_dim]
+    dt = proj[..., di + cfg.conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: Mamba2Config, p, xbc):
+    """Depthwise causal conv, width d_conv, over (B, S, conv_dim)."""
+    w = p["conv_w"].astype(xbc.dtype)                    # (K, C)
+    pad = jnp.pad(xbc, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(cfg.d_conv))
+    return jax.nn.silu(y + p["conv_b"].astype(xbc.dtype))
+
+
+def _segsum(a):
+    """(..., Q) -> (..., Q, Q) lower-tri cumulative sums: sum a[j+1..i]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_forward(p, cfg: Mamba2Config, x, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D); SSD chunked algorithm.
+
+    Non-multiple sequence lengths are right-padded; padded positions get
+    dt = 0 (identity state transition, zero contribution), so outputs at
+    valid positions AND the final state are exact.
+    """
+    b, s0, _ = x.shape
+    n, h, pd, q = cfg.d_state, cfg.n_heads, cfg.head_dim, cfg.chunk
+    qq = min(q, s0)
+    pad = (-s0) % qq
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s0 + pad
+    nc = s // qq
+
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(cfg, p, xbc)
+    xs = xbc[..., :cfg.d_inner].reshape(b, s, h, pd)
+    bmat = xbc[..., cfg.d_inner:cfg.d_inner + n]          # (B, S, N)
+    cmat = xbc[..., cfg.d_inner + n:]                     # (B, S, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, S, H)
+    if pad:
+        valid = (jnp.arange(s) < s0)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (H,)
+    la = dt * a                                                # log decay
+    xdt = xs.astype(jnp.float32) * dt[..., None]               # dt-weighted x
+
+    # chunked views
+    xc = xdt.reshape(b, nc, qq, h, pd)
+    bc = bmat.reshape(b, nc, qq, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, qq, n).astype(jnp.float32)
+    lac = la.reshape(b, nc, qq, h)
+    cum = jnp.cumsum(lac, axis=2)                              # (B,C,Q,H)
+
+    # within-chunk (quadratic in Q only)
+    lmask = jnp.exp(_segsum(jnp.moveaxis(lac, -1, -2)))        # (B,C,H,Q,Q)
+    ydiag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp",
+                       cc, bc, lmask, xc)
+
+    # chunk states + cross-chunk recurrence
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,C,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_states, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,C,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    init = jnp.zeros((b, h, pd, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (B,C,H,P,N)
+
+    yoff = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                      cc, prev_states, jnp.exp(cum))
+    y = (ydiag + yoff).reshape(b, s, h, pd)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+
+    y = rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z))
+    out = (y @ p["out_proj"].astype(x.dtype))[:, :s0]
+    if return_state:
+        conv_tail = xbc_tail(cfg, x[:, :s0], p)
+        return out, (final_state, conv_tail)
+    return out
+
+
+def xbc_tail(cfg: Mamba2Config, x, p):
+    """Last d_conv-1 pre-conv channel values — the decode conv state."""
+    proj = x @ p["in_proj"].astype(x.dtype)
+    _, xbc, _ = _split_proj(cfg, proj)
+    pad = jnp.pad(xbc, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    return pad[:, -(cfg.d_conv - 1):, :]
+
+
+def mamba2_init_state(cfg: Mamba2Config, batch: int, dtype=jnp.float32):
+    return (jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                      jnp.float32),
+            jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype))
+
+
+def mamba2_decode(p, cfg: Mamba2Config, x, state):
+    """One-token recurrent step. x: (B, 1, D); state: (ssm, conv_tail)."""
+    ssm, conv_tail = state
+    b = x.shape[0]
+    n, h, pd = cfg.d_state, cfg.n_heads, cfg.head_dim
+
+    proj = x[:, 0] @ p["in_proj"].astype(x.dtype)         # (B, proj)
+    z, xbc, dt = _split_proj(cfg, proj[:, None, :])
+    xbc, z, dt = xbc[:, 0], z[:, 0], dt[:, 0]
+
+    # conv over the carried tail
+    win = jnp.concatenate([conv_tail, xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("bkc,kc->bc", win, w) + p["conv_b"].astype(x.dtype)
+    conv = jax.nn.silu(conv)
+    new_tail = win[:, 1:]
+
+    xs = conv[:, :cfg.d_inner].reshape(b, h, pd).astype(jnp.float32)
+    bvec = conv[:, cfg.d_inner:cfg.d_inner + n].astype(jnp.float32)
+    cvec = conv[:, cfg.d_inner + n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                      # (B, H)
+    ssm = (ssm * decay[..., None, None]
+           + jnp.einsum("bhp,bn,bh->bhpn", xs, bvec, dt))
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cvec)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z))
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None, :]
+    return out, (ssm, new_tail)

@@ -1,0 +1,171 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill use the expanded form (per-head k_nope/v decompressed — the
+form DeepSeek trains in). Decode uses the *absorbed* form: W_uk is folded
+into the query and W_uv into the output, so the per-token cache is just the
+compressed latent ``c_kv (kv_lora) ⊕ k_rope (rope_dim)`` and decode attends
+MQA-style over a (B, T, kv_lora + rope_dim) cache — the TPU-native mapping
+of MLA's memory saving (no per-head KV is ever materialized at decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_rope, rmsnorm, rmsnorm_spec
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536            # 0 = direct q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10_000.0
+    chunk_q: int = 512
+
+    @property
+    def scale(self) -> float:
+        return (self.qk_nope_head_dim + self.qk_rope_head_dim) ** -0.5
+
+    @property
+    def cache_dim(self) -> int:
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+
+def mla_spec(cfg: MLAConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    spec: dict = {}
+    if cfg.q_lora_rank:
+        spec["w_dq"] = ParamSpec((d, cfg.q_lora_rank), ("embed", "q_lora"))
+        spec["q_norm"] = rmsnorm_spec(cfg.q_lora_rank)
+        spec["w_uq"] = ParamSpec((cfg.q_lora_rank, h, dn + dr),
+                                 ("q_lora", "heads", "head_dim"))
+    else:
+        spec["w_q"] = ParamSpec((d, h, dn + dr), ("embed", "heads", "head_dim"))
+    spec["w_dkv"] = ParamSpec((d, cfg.kv_lora_rank + dr), ("embed", "kv_lora"))
+    spec["kv_norm"] = rmsnorm_spec(cfg.kv_lora_rank)
+    spec["w_uk"] = ParamSpec((cfg.kv_lora_rank, h, dn),
+                             ("kv_lora", "heads", "head_dim"))
+    spec["w_uv"] = ParamSpec((cfg.kv_lora_rank, h, dv),
+                             ("kv_lora", "heads", "head_dim"))
+    spec["w_o"] = ParamSpec((h, dv, d), ("heads", "head_dim", "embed"))
+    return spec
+
+
+def _queries(p, cfg: MLAConfig, x, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], x @ p["w_dq"].astype(x.dtype))
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(p, cfg: MLAConfig, x, positions):
+    """Compressed latent: (c_kv normed, k_rope roped) — what decode caches."""
+    r = cfg.kv_lora_rank
+    ckv = x @ p["w_dkv"].astype(x.dtype)                  # (B, S, r + dr)
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    c = rmsnorm(p["kv_norm"], c)
+    k_rope = apply_rope(k_rope[..., None, :], positions,
+                        cfg.rope_theta)[..., 0, :]        # shared single head
+    return c, k_rope
+
+
+def _expanded_attention(p, cfg: MLAConfig, q_nope, q_rope, c, k_rope,
+                        q_pos, k_pos, causal=True):
+    """Training-form attention with decompressed per-head K/V, query-chunked."""
+    x_dtype = q_nope.dtype
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"].astype(x_dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"].astype(x_dtype))
+    b, sq, h, _ = q_nope.shape
+    sk = c.shape[1]
+
+    def block(args):
+        qn, qr, qp = args
+        s = (jnp.einsum("bqhk,bshk->bhqs", qn, k_nope)
+             + jnp.einsum("bqhk,bsk->bhqs", qr, k_rope)) * cfg.scale
+        if causal:
+            m = qp[:, None] >= k_pos[None, :]
+            s = jnp.where(m[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x_dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+    if sq <= cfg.chunk_q:
+        out = block((q_nope, q_rope, q_pos))
+    else:
+        n = -(-sq // cfg.chunk_q)
+        pad = n * cfg.chunk_q - sq
+        qn = jnp.moveaxis(jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                          .reshape(b, n, cfg.chunk_q, h, -1), 1, 0)
+        qr = jnp.moveaxis(jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                          .reshape(b, n, cfg.chunk_q, h, -1), 1, 0)
+        qp = jnp.pad(q_pos, (0, pad)).reshape(n, cfg.chunk_q)
+        out = jax.lax.map(block, (qn, qr, qp))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, n * cfg.chunk_q, h, -1)[:, :sq]
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"].astype(x_dtype))
+
+
+def mla_forward(p, cfg: MLAConfig, x, positions=None):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c, k_rope = _latent(p, cfg, x, positions)
+    return _expanded_attention(p, cfg, q_nope, q_rope, c, k_rope,
+                               positions, positions)
+
+
+def mla_prefill(p, cfg: MLAConfig, x, cache_len: int):
+    """Forward + compressed cache (B, T, kv_lora + rope_dim)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c, k_rope = _latent(p, cfg, x, positions)
+    y = _expanded_attention(p, cfg, q_nope, q_rope, c, k_rope,
+                            positions, positions)
+    cache = jnp.concatenate([c, k_rope], axis=-1)
+    cache = jnp.pad(cache, ((0, 0), (0, cache_len - s), (0, 0)))
+    return y, cache
+
+
+def mla_decode(p, cfg: MLAConfig, x, cache, pos):
+    """Absorbed one-token decode over the compressed cache.
+
+    x: (B, 1, D); cache: (B, T, kv_lora + rope_dim); pos: () i32.
+    """
+    r = cfg.kv_lora_rank
+    positions = pos[None].astype(jnp.int32)
+    q_nope, q_rope = _queries(p, cfg, x, positions)       # (B,1,H,dn),(B,1,H,dr)
+    c_new, kr_new = _latent(p, cfg, x, positions)
+    new_entry = jnp.concatenate([c_new, kr_new], axis=-1)
+    cache = jax.lax.dynamic_update_slice_in_dim(
+        cache, new_entry.astype(cache.dtype), pos, axis=1)
+
+    c_t = cache[..., :r].astype(x.dtype)                  # (B, T, r)
+    kr_t = cache[..., r:].astype(x.dtype)                 # (B, T, dr)
+    # absorb W_uk into the query: q_tilde (B,1,H,r)
+    q_tilde = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["w_uk"].astype(x.dtype))
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_tilde, c_t)
+         + jnp.einsum("bqhk,bsk->bhqs", q_rope, kr_t)) * cfg.scale
+    t = cache.shape[1]
+    valid = jnp.arange(t, dtype=jnp.int32) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, c_t)            # (B,1,H,r)
+    # absorb W_uv into the output
+    out = jnp.einsum("bqhr,rhk->bqhk", ctx, p["w_uv"].astype(x.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"].astype(x.dtype))
+    return y, cache

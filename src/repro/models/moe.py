@@ -1,0 +1,174 @@
+"""Mixture-of-Experts: shared + routed top-k with capacity dispatch.
+
+Sort-based dispatch (argsort by expert id -> position-within-expert ->
+scatter into an (E, C, D) buffer, ``mode=drop`` for overflow) keeps compute
+proportional to active FLOPs; the expert dims carry the "experts" logical
+axis so EP shards them over the ``model`` mesh axis and GSPMD inserts the
+token all-to-alls around the expert einsums. DeepSeek-style shared experts
+are a plain dense SwiGLU alongside (TP-sharded).
+
+Router: softmax top-k with renormalized weights + the standard
+load-balance auxiliary loss (fraction x probability x E).
+"""
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec, swiglu, swiglu_spec
+
+# Trace-time mesh for EP layout pins. `with mesh:` does NOT surface through
+# jax.sharding.get_abstract_mesh() in this jax version, so the launch layer
+# sets this contextvar around step tracing (launch.steps.mesh_context).
+CURRENT_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_moe_mesh", default=None)
+
+
+def _ep_axes(n_experts: int):
+    """Mesh axes carrying expert parallelism (present + divisible)."""
+    mesh = CURRENT_MESH.get()
+    if mesh is None or not mesh.shape:
+        return None
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    prod = 1
+    keep = []
+    for a in axes:
+        if n_experts % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    return tuple(keep) or None
+
+
+def _pin(x, spec):
+    """Sharding constraint against the contextvar mesh (no-op without)."""
+    mesh = CURRENT_MESH.get()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 1e-3
+
+
+def moe_spec(cfg: MoEConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    spec = {
+        "router": ParamSpec((d, e), ("embed", None), scale=0.02),
+        "gate": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "up": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "down": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared:
+        spec["shared"] = swiglu_spec(d, cfg.n_shared * f)
+    return spec
+
+
+def _group_count(n_experts: int, tokens: int) -> int:
+    mesh = CURRENT_MESH.get()
+    ep = _ep_axes(n_experts)
+    if mesh is None or not ep:
+        return 1
+    g = 1
+    for a in ep:
+        g *= mesh.shape[a]
+    return g if tokens % g == 0 else 1
+
+
+def _route_group(p, cfg: MoEConfig, xt, capacity: int):
+    """Dispatch one token group: (Tg, D) -> buffer + combine metadata."""
+    tg, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (xt @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (Tg, E)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    pe = jnp.mean(probs, axis=0)
+    fe = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (tg * k)
+
+    e_flat = top_i.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(tg), k)
+    w_flat = top_w.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_sort, t_sort, w_sort = e_flat[order], t_flat[order], w_flat[order]
+    group_start = jnp.searchsorted(e_sort, jnp.arange(e))
+    pos = jnp.arange(tg * k) - group_start[e_sort]
+    keep = pos < capacity
+
+    buf = jnp.zeros((e, capacity, d), xt.dtype)
+    buf = buf.at[e_sort, jnp.where(keep, pos, capacity)].set(
+        xt[t_sort], mode="drop")                               # (E, C, D)
+    meta = (e_sort, t_sort, w_sort, pos, keep)
+    return buf, meta, fe, pe
+
+
+def _combine_group(out, meta, tg, dtype):
+    e_sort, t_sort, w_sort, pos, keep = meta
+    capacity = out.shape[1]
+    gathered = out[e_sort, jnp.where(keep, pos, capacity - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    return jnp.zeros((tg, out.shape[-1]), dtype).at[t_sort].add(
+        gathered * w_sort[:, None].astype(dtype))
+
+
+def moe_forward(p, cfg: MoEConfig, x):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    GShard-style grouped dispatch: tokens reshape to (G, T/G, D) with G =
+    the EP shard count, routing/scatter/combine are group-local (dim-0
+    parallel, zero communication), and the only cross-shard traffic is the
+    group-major <-> expert-major reshard of the capacity-bounded dispatch
+    buffer, which GSPMD lowers to a true all-to-all. Expert weights are
+    (E -> EP axes, D, F -> model) — weight gradients contract only
+    unsharded dims and stay fully local.
+    """
+    b, s_len, d = x.shape
+    t = b * s_len
+    e, k = cfg.n_experts, cfg.top_k
+    g = _group_count(e, t)
+    ep = _ep_axes(e) if g > 1 else None
+    tg = t // g
+    capacity = int(cfg.capacity_factor * k * tg / e) + 1
+
+    xg = x.reshape(g, tg, d)
+    if ep:
+        xg = _pin(xg, P(ep, None, None))            # group-major (token) shard
+
+    buf, meta, fe, pe = jax.vmap(
+        lambda xt: _route_group(p, cfg, xt, capacity))(xg)  # (G,E,C,D)
+    aux = cfg.aux_loss_weight * e * jnp.sum(jnp.mean(fe, 0) * jnp.mean(pe, 0))
+
+    if ep:
+        buf = _pin(buf, P(None, ep, None, None))    # all-to-all -> expert-major
+
+    gt = jnp.einsum("gecd,edf->gecf", buf, p["gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(x.dtype))
+    h = jax.nn.silu(gt) * u
+    if ep:
+        h = _pin(h, P(None, ep, None, "model"))
+    out = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(x.dtype))
+    if ep:
+        out = _pin(out, P(None, ep, None, None))
+        out = _pin(out, P(ep, None, None, None))    # all-to-all back
+
+    y = jax.vmap(lambda o, m3, m4, m5, m6, m7: _combine_group(
+        o, (m3, m4, m5, m6, m7), tg, x.dtype))(out, *meta)
+    if ep:
+        y = _pin(y, P(ep, None, None))
+    y = y.reshape(t, d)
+
+    if cfg.n_shared:
+        y = y + swiglu(p["shared"], x.reshape(t, d))
+    return y.reshape(b, s_len, d), aux

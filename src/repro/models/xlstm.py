@@ -1,0 +1,370 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel train / recurrent
+decode) and sLSTM (scalar memory, recurrent scan with exponential-gating
+stabilizer).
+
+mLSTM's parallel form is gated linear attention with a matrix state
+C_t = f_t C_{t-1} + i_t v_t k_t^T, normalizer n_t = f_t n_{t-1} + i_t k_t
+and readout h_t = (C_t q_t) / max(|n_t . q_t|, 1). The train path uses the
+chunked block decomposition (like SSD) with log-space gate stabilization —
+sub-quadratic in S, which is what qualifies xlstm-125m for the long_500k
+cell. Decode carries (C, n, m) per head: O(1) per token.
+
+Assignment note: the xlstm-125m config specifies d_ff=0 — blocks carry
+their own projections and no separate FFN follows (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, rmsnorm
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg: MLSTMConfig) -> dict:
+    d, di, h, hd = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.head_dim
+    return {
+        "up": ParamSpec((d, di), ("embed", "mlp")),
+        "up_gate": ParamSpec((d, di), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.d_conv, di), (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros"),
+        "wq": ParamSpec((di, h, hd), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((di, h, hd), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((di, h, hd), ("mlp", "heads", "head_dim")),
+        "w_i": ParamSpec((di, h), ("mlp", "heads"), scale=0.01),
+        "b_i": ParamSpec((h,), ("heads",), init="zeros"),
+        "w_f": ParamSpec((di, h), ("mlp", "heads"), scale=0.01),
+        "b_f": ParamSpec((h,), ("heads",), init="ones"),
+        "out_norm": ParamSpec((di,), ("mlp",), init="ones"),
+        "down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_gates(p, conv):
+    """Log input/forget gates from the conv branch. conv: (B, S, di)."""
+    lf = jax.nn.log_sigmoid(conv.astype(jnp.float32)
+                            @ p["w_f"].astype(jnp.float32)
+                            + p["b_f"].astype(jnp.float32))  # (B,S,H) <= 0
+    li = (conv.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)
+          + p["b_i"].astype(jnp.float32))                    # (B,S,H) log i
+    return li, lf
+
+
+def _segsum(a):
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    return jnp.where(jnp.tril(jnp.ones((q, q), bool)), diff, -jnp.inf)
+
+
+def mlstm_cell_chunked(q, k, v, li, lf, chunk: int):
+    """Stabilized chunked mLSTM. q/k/v: (B,S,H,hd); li/lf: (B,S,H).
+
+    Returns h: (B,S,H,hd). Non-multiple lengths are right-padded with
+    li = -inf (no contribution) and lf = 0 (identity decay) — outputs at
+    valid positions are exact.
+    """
+    b, s0, h, hd = q.shape
+    qq = min(chunk, s0)
+    pad = (-s0) % qq
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, padq) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    s = s0 + pad
+    nc = s // qq
+    scale = hd ** -0.5
+
+    qc = q.reshape(b, nc, qq, h, hd).astype(jnp.float32) * scale
+    kc = k.reshape(b, nc, qq, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, qq, h, hd).astype(jnp.float32)
+    lic = li.reshape(b, nc, qq, h)
+    lfc = lf.reshape(b, nc, qq, h)
+    cum = jnp.cumsum(lfc, axis=2)                           # (B,C,Q,H)
+
+    # within-chunk log gate weights: cum_f[t] - cum_f[s] + li[s], t >= s
+    lw = (_segsum(jnp.moveaxis(lfc, -1, -2))                # (B,C,H,Q,Q)
+          + jnp.moveaxis(lic, -1, -2)[..., None, :])
+    m_loc = jnp.max(lw, axis=-1)                            # (B,C,H,Q)
+    m_loc = jnp.maximum(m_loc, -1e30)
+    w_loc = jnp.exp(lw - m_loc[..., None])                  # (B,C,H,Q,Q)
+    qk = jnp.einsum("bcqhk,bcshk->bchqs", qc, kc)
+    num_loc = jnp.einsum("bchqs,bchqs,bcshk->bcqhk", w_loc, qk, vc)
+    den_loc = jnp.einsum("bchqs,bchqs->bchq", w_loc, qk)
+
+    # chunk summary state: sum_s exp(cum_end - cum_s + li_s - m_add) k v^T
+    l_end = cum[:, :, -1:, :] - cum + lic                   # (B,C,Q,H)
+    m_add = jnp.max(l_end, axis=2)                          # (B,C,H)
+    w_end = jnp.exp(l_end - m_add[:, :, None, :])
+    s_chunk = jnp.einsum("bcqh,bcqhk,bcqhv->bchkv", w_end, kc, vc)
+    z_chunk = jnp.einsum("bcqh,bcqhk->bchk", w_end, kc)
+    chunk_lf = cum[:, :, -1, :]                             # (B,C,H)
+
+    def scan_fn(carry, inp):
+        s_st, z_st, m_st = carry
+        s_c, z_c, m_a, c_lf = inp
+        # carry into this chunk: previous state (returned), then update
+        m_new = jnp.maximum(m_st + c_lf, m_a)
+        scale_old = jnp.exp(m_st + c_lf - m_new)
+        scale_add = jnp.exp(m_a - m_new)
+        s_n = s_st * scale_old[..., None, None] + s_c * scale_add[..., None, None]
+        z_n = z_st * scale_old[..., None] + z_c * scale_add[..., None]
+        return (s_n, z_n, m_new), (s_st, z_st, m_st)
+
+    init = (jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    _, (s_prev, z_prev, m_prev) = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(z_chunk, 1, 0),
+         jnp.moveaxis(m_add, 1, 0), jnp.moveaxis(chunk_lf, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                     # (B,C,H,hd,hd)
+    z_prev = jnp.moveaxis(z_prev, 0, 1)
+    m_prev = jnp.moveaxis(m_prev, 0, 1)                     # (B,C,H)
+
+    # merge local + cross-chunk with a joint stabilizer
+    l_cross = cum + m_prev[:, :, None, :]                   # (B,C,Q,H)
+    m_tot = jnp.maximum(jnp.moveaxis(m_loc, -1, -2), l_cross)
+    a_loc = jnp.exp(jnp.moveaxis(m_loc, -1, -2) - m_tot)    # (B,C,Q,H)
+    a_cross = jnp.exp(l_cross - m_tot)
+    num_cross = jnp.einsum("bcqhk,bchkv->bcqhv", qc, s_prev)
+    den_cross = jnp.einsum("bcqhk,bchk->bcqh", qc, z_prev)
+    num = num_loc * a_loc[..., None] + num_cross * a_cross[..., None]
+    den = jnp.moveaxis(den_loc, 2, 3) * a_loc + den_cross * a_cross
+    # xLSTM normalizer: max(|n.q|, exp(-m)) -> in stabilized form:
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))
+    out = num / denom[..., None]
+    return out.reshape(b, s, h, hd)[:, :s0]
+
+
+def mlstm_forward(p, cfg: MLSTMConfig, x, return_state: bool = False):
+    b, s, _ = x.shape
+    left = x @ p["up"].astype(x.dtype)                       # (B,S,di)
+    gate = jax.nn.silu(x @ p["up_gate"].astype(x.dtype))
+    pad = jnp.pad(left, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s] * p["conv_w"].astype(x.dtype)[i]
+               for i in range(cfg.d_conv))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    q = jnp.einsum("bsd,dhk->bshk", conv, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", conv, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", left, p["wv"].astype(x.dtype))
+    li, lf = _mlstm_gates(p, conv)
+    hcell = mlstm_cell_chunked(q, k, v, li, lf, cfg.chunk)
+    hcell = hcell.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": p["out_norm"]}, hcell) * gate
+    out = y @ p["down"].astype(x.dtype)
+    if return_state:
+        state = mlstm_replay_state(p, cfg, x)
+        return out, state
+    return out
+
+
+def mlstm_init_state(cfg: MLSTMConfig, batch: int, dtype=jnp.float32):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return (jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, h, hd), jnp.float32),
+            jnp.full((batch, h), -1e30, jnp.float32),
+            jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype))
+
+
+def mlstm_replay_state(p, cfg: MLSTMConfig, x):
+    """Recompute the final recurrent state after a parallel prefill."""
+    b, s, _ = x.shape
+    left = x @ p["up"].astype(x.dtype)
+    pad = jnp.pad(left, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s] * p["conv_w"].astype(x.dtype)[i]
+               for i in range(cfg.d_conv))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", conv, p["wk"].astype(x.dtype)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", left, p["wv"].astype(x.dtype)).astype(jnp.float32)
+    li, lf = _mlstm_gates(p, conv)
+    cum = jnp.cumsum(lf, axis=1)
+    l_end = cum[:, -1:, :] - cum + li                        # (B,S,H)
+    m = jnp.max(l_end, axis=1)                               # (B,H)
+    w = jnp.exp(l_end - m[:, None, :])
+    c_state = jnp.einsum("bsh,bshk,bshv->bhkv", w, k, v)
+    n_state = jnp.einsum("bsh,bshk->bhk", w, k)
+    conv_tail = pad[:, -(cfg.d_conv - 1):, :] if cfg.d_conv > 1 else \
+        jnp.zeros((b, 0, cfg.d_inner), x.dtype)
+    return (c_state, n_state, m, conv_tail)
+
+
+def mlstm_decode(p, cfg: MLSTMConfig, x, state):
+    """One-token recurrent mLSTM. x: (B, 1, D)."""
+    c_st, n_st, m_st, conv_tail = state
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    left = (x[:, 0] @ p["up"].astype(x.dtype))               # (B, di)
+    gate = jax.nn.silu(x[:, 0] @ p["up_gate"].astype(x.dtype))
+    win = jnp.concatenate([conv_tail, left[:, None]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(x.dtype))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    new_tail = win[:, 1:]
+    q = jnp.einsum("bd,dhk->bhk", conv, p["wq"].astype(x.dtype)).astype(jnp.float32) * hd ** -0.5
+    k = jnp.einsum("bd,dhk->bhk", conv, p["wk"].astype(x.dtype)).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", left, p["wv"].astype(x.dtype)).astype(jnp.float32)
+    li, lf = _mlstm_gates(p, conv[:, None, :])
+    li, lf = li[:, 0], lf[:, 0]                              # (B,H)
+
+    m_new = jnp.maximum(lf + m_st, li)
+    f_sc = jnp.exp(lf + m_st - m_new)
+    i_sc = jnp.exp(li - m_new)
+    c_new = c_st * f_sc[..., None, None] + i_sc[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    n_new = n_st * f_sc[..., None] + i_sc[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, c_new)
+    den = jnp.einsum("bhk,bhk->bh", q, n_new)
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    hcell = (num / denom[..., None]).reshape(b, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": p["out_norm"]}, hcell) * gate
+    out = (y @ p["down"].astype(x.dtype))[:, None]
+    return out, (c_new, n_new, m_new, new_tail)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: SLSTMConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    def wx():
+        return ParamSpec((d, h, hd), ("embed", "heads", "head_dim"))
+    def rh():
+        return ParamSpec((h, hd, hd), ("heads", "head_dim", None), scale=0.3)
+    def bias(init="zeros"):
+        return ParamSpec((h, hd), ("heads", "head_dim"), init=init)
+    return {
+        "wi": wx(), "wf": wx(), "wz": wx(), "wo": wx(),
+        "ri": rh(), "rf": rh(), "rz": rh(), "ro": rh(),
+        "bi": bias(), "bf": bias("ones"), "bz": bias(), "bo": bias(),
+        "out_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "out_proj": ParamSpec((d, d), ("embed", "embed")),
+    }
+
+
+def slstm_step(p, cfg: SLSTMConfig, xi, xf, xz, xo, state):
+    """One sLSTM step. x*: (B, H, hd) precomputed input parts.
+
+    Recurrent matrices may carry a leading per-sample batch dim (see
+    slstm_forward): their gradient then accumulates per sample inside the
+    time scan (batch-sharded, communication-free) instead of being
+    all-reduced across the batch axis every timestep.
+    """
+    c, n, hprev, m = state
+    f32 = jnp.float32
+
+    def rec(name, hp):
+        r = p[name].astype(f32)
+        if r.ndim == 4:
+            return jnp.einsum("bhk,bhkj->bhj", hp, r)
+        return jnp.einsum("bhk,hkj->bhj", hp, r)
+
+    it = xi + rec("ri", hprev) + p["bi"].astype(f32)
+    ft = xf + rec("rf", hprev) + p["bf"].astype(f32)
+    zt = xz + rec("rz", hprev) + p["bz"].astype(f32)
+    ot = xo + rec("ro", hprev) + p["bo"].astype(f32)
+
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(lf + m - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(zt)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_init_state(cfg: SLSTMConfig, batch: int):
+    z = jnp.zeros((batch, cfg.n_heads, cfg.head_dim), jnp.float32)
+    return (z, z, z, jnp.full((batch, cfg.n_heads, cfg.head_dim), 0.0))
+
+
+def slstm_forward(p, cfg: SLSTMConfig, x, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D), recurrent scan over S.
+
+    Written per-sample and vmapped over the batch: the recurrent-weight
+    gradient dR then accumulates per sample INSIDE the time scan (a
+    batch-sharded, fully local carry) and is summed across the batch once
+    at the vmap boundary. Batching the scan directly makes AD contract the
+    (sharded) batch dim every timestep — measured as a 2.4 MB all-reduce
+    x 4096 steps x layers on the dry-run (EXPERIMENTS §Perf, xlstm cell).
+    """
+    b, s, d = x.shape
+    f32 = jnp.float32
+
+    def xpart(name):
+        return jnp.einsum("bsd,dhk->bshk", x.astype(f32), p[name].astype(f32))
+
+    xi, xf, xz, xo = xpart("wi"), xpart("wf"), xpart("wz"), xpart("wo")
+    # broadcast the recurrent matrices to a per-sample batch dim: their
+    # cotangent (sum over batch) then transposes OUTSIDE the time scan
+    pb = dict(p)
+    for name in ("ri", "rf", "rz", "ro"):
+        pb[name] = jnp.broadcast_to(p[name], (b,) + p[name].shape)
+
+    def scan_fn(state, xs):
+        new = slstm_step(pb, cfg, *xs, state)
+        return new, new[2]
+
+    init = slstm_init_state(cfg, b)
+    final, hs = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(xi, 1, 0), jnp.moveaxis(xf, 1, 0),
+         jnp.moveaxis(xz, 1, 0), jnp.moveaxis(xo, 1, 0)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm({"scale": p["out_norm"]}, h)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode(p, cfg: SLSTMConfig, x, state):
+    b = x.shape[0]
+    f32 = jnp.float32
+
+    def xpart(name):
+        return jnp.einsum("bd,dhk->bhk", x[:, 0].astype(f32),
+                          p[name].astype(f32))
+
+    new = slstm_step(p, cfg, xpart("wi"), xpart("wf"), xpart("wz"),
+                     xpart("wo"), state)
+    h = new[2].reshape(b, cfg.d_model).astype(x.dtype)
+    y = rmsnorm({"scale": p["out_norm"]}, h)
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, new

@@ -1,0 +1,15 @@
+"""Optimizers: gradient trainers (no optax dependency) + the paper's
+comparison baselines (GA, simulated annealing, Nelder-Mead 'fmin')."""
+from repro.optim.gradient import (
+    AdamWConfig,
+    SGDConfig,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+    sgd_init,
+    sgd_update,
+)
+from repro.optim.ga import ga_minimize
+from repro.optim.annealing import sa_minimize
+from repro.optim.nelder_mead import nelder_mead_minimize
+from repro.optim.descent import gd_minimize

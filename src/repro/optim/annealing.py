@@ -1,0 +1,48 @@
+"""Simulated annealing baseline (paper refs [3,4], Kirkpatrick et al.).
+
+Continuous-space Metropolis SA with geometric cooling and Gaussian proposal
+whose scale anneals with temperature.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Encoding
+
+
+@partial(jax.jit, static_argnames=("f", "enc", "steps"))
+def _sa_loop(f, enc: Encoding, key, steps: int, t0: float, t_final: float):
+    alpha = (t_final / t0) ** (1.0 / steps)
+    span = enc.hi - enc.lo
+
+    k0, key = jax.random.split(key)
+    x0 = jax.random.uniform(k0, (enc.n_vars,), minval=enc.lo, maxval=enc.hi)
+    v0 = f(x0)
+
+    def step(carry, i):
+        x, v, best_x, best_v, key, temp = carry
+        key, kp, ka = jax.random.split(key, 3)
+        scale = 0.1 * span * jnp.sqrt(temp / t0)
+        prop = jnp.clip(x + scale * jax.random.normal(kp, x.shape),
+                        enc.lo, enc.hi)
+        pv = f(prop)
+        accept = jnp.log(jax.random.uniform(ka)) < (v - pv) / temp
+        x = jnp.where(accept, prop, x)
+        v = jnp.where(accept, pv, v)
+        better = v < best_v
+        best_x = jnp.where(better, x, best_x)
+        best_v = jnp.where(better, v, best_v)
+        return (x, v, best_x, best_v, key, temp * alpha), best_v
+
+    init = (x0, v0, x0, v0, key, jnp.float32(t0))
+    (x, v, best_x, best_v, _, _), trace = jax.lax.scan(
+        step, init, jnp.arange(steps))
+    return best_x, best_v, trace
+
+
+def sa_minimize(f, enc: Encoding, key, steps: int = 20_000,
+                t0: float = 1.0, t_final: float = 1e-4):
+    return _sa_loop(f, enc, key, steps, t0, t_final)

@@ -1,0 +1,30 @@
+"""Plain gradient descent baseline (paper refs [2,11]) for the test-function
+and ANN comparisons — fixed step size, the method the paper's Figs. 4-5
+show stalling in local minima.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Encoding
+
+
+@partial(jax.jit, static_argnames=("f", "steps"))
+def _gd_loop(f, x0, steps: int, lr: float, lo: float, hi: float):
+    g = jax.grad(f)
+
+    def body(carry, _):
+        x = carry
+        x = jnp.clip(x - lr * g(x), lo, hi)
+        return x, f(x)
+
+    x, trace = jax.lax.scan(body, x0, None, length=steps)
+    return x, f(x), trace
+
+
+def gd_minimize(f, enc: Encoding, key, steps: int = 5_000, lr: float = 0.01):
+    x0 = jax.random.uniform(key, (enc.n_vars,), minval=enc.lo, maxval=enc.hi)
+    return _gd_loop(f, x0, steps, lr, enc.lo, enc.hi)

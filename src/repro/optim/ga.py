@@ -1,0 +1,64 @@
+"""Genetic algorithm baseline (paper ref [1], Goldberg).
+
+Bit-string GA over the same fixed-point encoding DGO uses, so the comparison
+(benchmarks/bench_testfunctions.py) is encoding-for-encoding fair: tournament
+selection, single-point crossover, per-bit mutation, elitism of 1.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Encoding, decode
+
+
+@partial(jax.jit, static_argnames=("f_batch", "enc", "pop_size", "generations"))
+def _ga_loop(f_batch, enc: Encoding, key, pop_size: int, generations: int,
+             p_mut: float, p_cross: float):
+    n = enc.n_bits
+
+    def evaluate(pop):
+        return f_batch(decode(pop, enc))
+
+    k0, key = jax.random.split(key)
+    pop = jax.random.bernoulli(k0, 0.5, (pop_size, n)).astype(jnp.int8)
+
+    def gen(carry, _):
+        pop, key = carry
+        fit = evaluate(pop)
+        key, kt1, kt2, kc, kcp, km = jax.random.split(key, 6)
+        # tournament selection (size 2), one tournament per offspring slot
+        i1 = jax.random.randint(kt1, (pop_size, 2), 0, pop_size)
+        i2 = jax.random.randint(kt2, (pop_size, 2), 0, pop_size)
+        p1 = jnp.where((fit[i1[:, 0]] < fit[i1[:, 1]]), i1[:, 0], i1[:, 1])
+        p2 = jnp.where((fit[i2[:, 0]] < fit[i2[:, 1]]), i2[:, 0], i2[:, 1])
+        # single-point crossover
+        cut = jax.random.randint(kcp, (pop_size, 1), 1, n)
+        do_cross = jax.random.bernoulli(kc, p_cross, (pop_size, 1))
+        pos = jnp.arange(n)[None, :]
+        take_p1 = jnp.where(do_cross, pos < cut, True)
+        child = jnp.where(take_p1, pop[p1], pop[p2])
+        # mutation
+        flips = jax.random.bernoulli(km, p_mut, (pop_size, n))
+        child = jnp.bitwise_xor(child, flips.astype(jnp.int8))
+        # elitism: keep the incumbent best in slot 0
+        best = jnp.argmin(fit)
+        child = child.at[0].set(pop[best])
+        return (child, key), jnp.min(fit)
+
+    (pop, _), trace = jax.lax.scan(gen, (pop, key), None, length=generations)
+    fit = evaluate(pop)
+    best = jnp.argmin(fit)
+    return pop[best], fit[best], trace
+
+
+def ga_minimize(f, enc: Encoding, key, pop_size: int = 64,
+                generations: int = 200, p_mut: float = 0.02,
+                p_cross: float = 0.9):
+    """Returns (x_best, f_best, per-generation best trace)."""
+    f_batch = jax.vmap(f)
+    bits, val, trace = _ga_loop(f_batch, enc, key, pop_size, generations,
+                                p_mut, p_cross)
+    return decode(bits, enc), val, trace

@@ -1,0 +1,63 @@
+"""Nelder-Mead simplex baseline — matlab's ``fmin``/``fminsearch`` analogue
+(the paper compares DGO against matlab's fmin).
+
+Standard reflection/expansion/contraction/shrink with the usual
+(1, 2, 0.5, 0.5) coefficients, fully jit-compiled via lax.fori_loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Encoding
+
+
+@partial(jax.jit, static_argnames=("f", "iters"))
+def _nm_loop(f, x0, iters: int, scale: float):
+    n = x0.shape[0]
+    f_batch = jax.vmap(f)
+    simplex = jnp.concatenate(
+        [x0[None, :], x0[None, :] + scale * jnp.eye(n)], axis=0)  # (n+1, n)
+    values = f_batch(simplex)
+
+    def body(_, carry):
+        simplex, values = carry
+        order = jnp.argsort(values)
+        simplex, values = simplex[order], values[order]
+        centroid = jnp.mean(simplex[:-1], axis=0)
+        worst = simplex[-1]
+        xr = centroid + (centroid - worst)            # reflect
+        fr = f(xr)
+        xe = centroid + 2.0 * (centroid - worst)      # expand
+        fe = f(xe)
+        xc = centroid + 0.5 * (worst - centroid)      # contract
+        fc = f(xc)
+
+        use_e = (fr < values[0]) & (fe < fr)
+        use_r = (fr < values[-2]) & ~use_e
+        use_c = (fc < values[-1]) & ~use_e & ~use_r
+        new_last = jnp.where(use_e, xe, jnp.where(use_r, xr,
+                             jnp.where(use_c, xc, worst)))
+        new_flast = jnp.where(use_e, fe, jnp.where(use_r, fr,
+                              jnp.where(use_c, fc, values[-1])))
+        shrink = ~(use_e | use_r | use_c)
+
+        cand = simplex.at[-1].set(new_last)
+        cand_v = values.at[-1].set(new_flast)
+        shrunk = simplex[0][None, :] + 0.5 * (simplex - simplex[0][None, :])
+        shrunk_v = f_batch(shrunk)
+        simplex = jnp.where(shrink, shrunk, cand)
+        values = jnp.where(shrink, shrunk_v, cand_v)
+        return simplex, values
+
+    simplex, values = jax.lax.fori_loop(0, iters, body, (simplex, values))
+    best = jnp.argmin(values)
+    return simplex[best], values[best]
+
+
+def nelder_mead_minimize(f, enc: Encoding, key, iters: int = 400):
+    x0 = jax.random.uniform(key, (enc.n_vars,), minval=enc.lo, maxval=enc.hi)
+    x, v = _nm_loop(f, x0, iters, 0.1 * (enc.hi - enc.lo))
+    return x, v, None

@@ -1,0 +1,11 @@
+"""Scale runtime: failure injection/restart, elastic re-mesh, gradient
+compression, straggler policy."""
+from repro.runtime.failure import FailureInjector, SimulatedFailure
+from repro.runtime.elastic import elastic_population_plan, remesh
+from repro.runtime.compress import (
+    dequantize_int8,
+    init_error_state,
+    make_compressed_dp_grad_fn,
+    quantize_int8,
+)
+from repro.runtime.straggler import StragglerPolicy

@@ -1,0 +1,28 @@
+"""Failure injection + restart policy.
+
+``FailureInjector`` deterministically kills a training step (seeded), which
+the trainer's restart loop catches — exercising the checkpoint/auto-resume
+path end-to-end in tests and examples (the paper's MP-1 had lock-step
+hardware; a 1000-node pod does not, so restart-from-checkpoint is the
+baseline fault-tolerance mechanism; DGO additionally tolerates losing
+children mid-iteration via the quorum reduce, core/distributed.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised in place of a real node failure."""
+
+
+class FailureInjector:
+    def __init__(self, rate: float, seed: int = 0):
+        self.rate = rate
+        self.rng = np.random.default_rng(seed)
+        self.injected = 0
+
+    def maybe_fail(self, step: int) -> None:
+        if self.rate > 0 and self.rng.random() < self.rate:
+            self.injected += 1
+            raise SimulatedFailure(f"injected node failure at step {step}")

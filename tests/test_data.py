@@ -1,0 +1,42 @@
+"""Data pipeline: determinism, restart-safety, label alignment."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticTokenPipeline, lm_synthetic_batch
+import jax
+
+
+def test_batch_pure_function_of_step():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, seed=3)
+    p1 = SyntheticTokenPipeline(cfg)
+    p2 = SyntheticTokenPipeline(cfg, start_step=0)
+    try:
+        b1 = p1.batch_at(17)
+        b2 = p2.batch_at(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    finally:
+        p1.close(); p2.close()
+
+
+def test_labels_are_next_token():
+    toks, labels = lm_synthetic_batch(jax.random.PRNGKey(0), 2, 16, 64)
+    np.testing.assert_array_equal(labels[:, :-1], toks[:, 1:])
+    assert (labels[:, -1] == -1).all()
+
+
+def test_learnable_structure():
+    """Planted bigram chain: with frac=1, token[t+1] == perm[token[t]]."""
+    toks, _ = lm_synthetic_batch(jax.random.PRNGKey(1), 4, 64, 512,
+                                 pattern_frac=1.0)
+    perm = jax.random.permutation(jax.random.PRNGKey(7), 512)
+    assert bool(jnp.all(toks[:, 1:] == perm[toks[:, :-1]]))
+
+
+def test_prefetch_iterator_order():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2, seed=0)
+    p = SyntheticTokenPipeline(cfg)
+    try:
+        steps = [next(p)[0] for _ in range(3)]
+        assert steps == [0, 1, 2]
+    finally:
+        p.close()

@@ -1,0 +1,80 @@
+"""Property tests for the bit-level substrate (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import (
+    Encoding, binary_to_gray, decode, encode, gray_to_binary,
+    pack_bits, unpack_bits,
+)
+from repro.core.population import (
+    generate_children, generate_population, segment_mask, segment_table,
+)
+
+bits_arrays = st.integers(1, 200).flatmap(
+    lambda n: st.lists(st.integers(0, 1), min_size=n, max_size=n))
+
+
+@given(bits_arrays)
+@settings(max_examples=30, deadline=None)
+def test_gray_involution(bits):
+    b = jnp.asarray(bits, jnp.int8)
+    assert jnp.array_equal(gray_to_binary(binary_to_gray(b)), b)
+    assert jnp.array_equal(binary_to_gray(gray_to_binary(b)), b)
+
+
+@given(bits_arrays)
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(bits):
+    b = jnp.asarray(bits, jnp.int8)
+    assert jnp.array_equal(unpack_bits(pack_bits(b), b.shape[-1]), b)
+
+
+@given(st.integers(1, 12), st.integers(2, 10))
+@settings(max_examples=20, deadline=None)
+def test_encode_decode_quantization(n_vars, bits):
+    enc = Encoding(n_vars=n_vars, bits=bits, lo=-3.0, hi=5.0)
+    x = jnp.linspace(-3.0, 5.0, n_vars)
+    err = jnp.max(jnp.abs(decode(encode(x, enc), enc) - x))
+    lattice = (enc.hi - enc.lo) / (enc.levels - 1)
+    assert float(err) <= lattice / 2 + 1e-6
+
+
+@given(st.integers(2, 300))
+@settings(max_examples=30, deadline=None)
+def test_segment_tree_has_2n_minus_1_nodes(n):
+    t = segment_table(n)
+    assert t.shape == (2 * n - 1, 2)
+    # root covers everything; leaves are single bits; every node valid
+    assert t[0, 0] == 0 and t[0, 1] == n
+    sizes = t[:, 1] - t[:, 0]
+    assert (sizes >= 1).all()
+    assert (sizes == 1).sum() == n        # exactly N leaves
+
+
+@given(st.integers(2, 100), st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_children_deterministic_and_involutive(n, seed):
+    key = jax.random.PRNGKey(seed)
+    parent = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.int8)
+    pop = generate_population(parent)
+    assert pop.shape == (2 * n - 1, n)
+    # distinctness: each child differs from every other child
+    as_int = np.packbits(np.asarray(pop), axis=1)
+    assert len({r.tobytes() for r in as_int}) == 2 * n - 1
+    # involution: re-applying the same segment inversion returns the parent
+    ids = jnp.arange(2 * n - 1)
+    back = jax.vmap(lambda c, i: generate_children(c, i[None])[0])(pop, ids)
+    assert jnp.array_equal(back, jnp.broadcast_to(parent, pop.shape))
+
+
+@given(st.integers(2, 64))
+@settings(max_examples=20, deadline=None)
+def test_chunked_generation_matches_full(n):
+    key = jax.random.PRNGKey(n)
+    parent = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.int8)
+    full = generate_population(parent)
+    ids = jnp.asarray([0, n // 2, 2 * n - 2])
+    chunk = generate_children(parent, ids)
+    assert jnp.array_equal(chunk, full[ids])

@@ -1,0 +1,84 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.encoding import Encoding, pack_bits
+from repro.kernels.graycode.ops import generate_population_packed
+from repro.kernels.graycode.ref import graycode_children_ref
+from repro.kernels.fixedpoint.ops import decode_packed
+from repro.kernels.fixedpoint.ref import fixedpoint_decode_ref
+from repro.kernels.popmin.ops import population_min
+from repro.kernels.popmin.ref import popmin_ref
+from repro.kernels.flash_attention.ops import flash_sdpa
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("n", [9, 32, 63, 100, 128, 257, 680])
+def test_graycode_kernel_matches_oracle(n):
+    parent = jax.random.bernoulli(
+        jax.random.PRNGKey(n), 0.5, (n,)).astype(jnp.int8)
+    got = generate_population_packed(parent, tile_p=32)
+    want = graycode_children_ref(parent, jnp.arange(2 * n - 1), (n + 31) // 32)
+    assert bool(jnp.all(got == want))
+
+
+@pytest.mark.parametrize("n_vars,bits", [(2, 8), (9, 7), (8, 6), (680, 4),
+                                         (3, 16), (5, 32)])
+def test_fixedpoint_kernel_matches_oracle(n_vars, bits):
+    enc = Encoding(n_vars=n_vars, bits=bits, lo=-3.0, hi=7.0)
+    pop = 2 * enc.n_bits - 1
+    arr = jax.random.bernoulli(jax.random.PRNGKey(bits), 0.5,
+                               (pop, enc.n_bits)).astype(jnp.int8)
+    words = pack_bits(arr)
+    got = decode_packed(words, enc, tile_p=64)
+    want = fixedpoint_decode_ref(words, enc)
+    tol = 1e-4 if bits < 24 else 1e-2
+    np.testing.assert_allclose(got, want, atol=tol)
+
+
+@pytest.mark.parametrize("p", [17, 125, 1000, 4096, 10000])
+def test_popmin_kernel_matches_oracle(p):
+    vals = jax.random.normal(jax.random.PRNGKey(p), (p,))
+    mn, idx = population_min(vals, tile=256)
+    rm, ri = popmin_ref(vals)
+    assert float(mn) == float(rm) and int(idx) == int(ri)
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd,causal,window,dt", [
+    (2, 128, 4, 4, 32, True, 0, jnp.float32),
+    (1, 256, 8, 2, 64, True, 0, jnp.float32),
+    (2, 192, 4, 1, 32, True, 64, jnp.float32),   # MQA + sliding window
+    (1, 128, 4, 4, 32, False, 0, jnp.float32),   # bidirectional
+    (1, 256, 4, 2, 64, True, 0, jnp.bfloat16),
+])
+def test_flash_attention_matches_oracle(b, s, hq, hkv, hd, causal, window, dt):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(s + hq), 3)
+    q = jax.random.normal(kq, (b, s, hq, hd), dt)
+    k = jax.random.normal(kk, (b, s, hkv, hd), dt)
+    v = jax.random.normal(kv, (b, s, hkv, hd), dt)
+    got = flash_sdpa(q, k, v, causal=causal, window=window,
+                     block_q=64, block_k=64)
+    want = jnp.moveaxis(flash_attention_ref(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        causal=causal, window=window), 2, 1)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=tol)
+
+
+def test_flash_matches_model_sdpa_path():
+    """Kernel contract == models.attention.sdpa (the XLA path it replaces)."""
+    from repro.models.attention import AttnConfig, sdpa
+    b, s, hq, hkv, hd = 2, 160, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    cfg = AttnConfig(d_model=hq * hd, n_heads=hq, n_kv_heads=hkv,
+                     head_dim=hd, chunk_q=64)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    want = sdpa(cfg, q, k, v, pos, pos)
+    got = flash_sdpa(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(got, want, atol=2e-4)

@@ -1,0 +1,106 @@
+"""DGO-as-meta-optimizer + launch/benchmarks analysis-layer units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dgo
+from repro.core.dgo import DGOConfig
+from repro.core.meta import HyperBox, meta_objective
+
+
+def test_hyperbox_decode_ranges():
+    box = HyperBox()
+    h = box.decode_hypers(jnp.asarray([0.0, 0.5, 1.0]))
+    assert 10 ** box.log_lr[0] * 0.99 <= float(h["lr"]) <= 10 ** box.log_lr[0] * 1.01
+    assert float(h["warmup_frac"]) == pytest.approx(box.warmup[1])
+
+
+def test_meta_dgo_finds_good_lr():
+    """Short quadratic-descent inner loop: DGO recovers a near-optimal lr."""
+    def short_train(hypers):
+        lr = hypers["lr"]
+        w = jnp.float32(4.0)
+        def body(w, _):
+            return w - lr * 2 * w, None
+        w, _ = jax.lax.scan(body, w, None, length=30)
+        return w * w
+    obj = meta_objective(short_train, HyperBox(bits=5))
+    res = dgo.run(obj.fn, DGOConfig(encoding=obj.encoding, max_bits=7),
+                  key=jax.random.PRNGKey(0))
+    # lr* ~ anything in [0.05, 0.7]; random box sampling often lands ~1e-3
+    assert float(res.value) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# dryrun HLO parsing units
+# ---------------------------------------------------------------------------
+
+SYNTH_HLO = """HloModule test
+%loop_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[128]{0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %t = tuple()
+}
+%loop_cond (p: (s32[], f32[8])) -> pred[] {
+  ROOT %lt = pred[] compare(%a, %b), direction=LT
+}
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while(%init), condition=%loop_cond, body=%loop_body, backend_config={"known_trip_count":{"n":"28"}}
+  %ag = f32[256]{0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={0}
+  ROOT %r = f32[8] copy(%z)
+}
+"""
+
+
+def test_parse_collectives_trip_counts():
+    from repro.launch import dryrun
+    colls = dryrun.parse_collectives(SYNTH_HLO)
+    kinds = {c["kind"]: c for c in colls}
+    assert kinds["all-reduce"]["mult"] == 28        # inside the while body
+    assert kinds["all-gather"]["mult"] == 1         # entry level
+    assert kinds["all-reduce"]["group"] == 16
+    # wire models: all-reduce 2(k-1)/k * size; gather (k-1)/k
+    assert kinds["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * (15 / 16) * 128 * 4)
+    assert kinds["all-gather"]["wire_bytes"] == pytest.approx(
+        (15 / 16) * 256 * 4)
+
+
+def test_promoted_f32_counted_as_bf16():
+    from repro.launch import dryrun
+    hlo = SYNTH_HLO.replace("to_apply=%add", "to_apply=%add.clone_promoted")
+    colls = dryrun.parse_collectives(hlo)
+    ar = [c for c in colls if c["kind"] == "all-reduce"][0]
+    assert ar["wire_bytes"] == pytest.approx(2 * (15 / 16) * 128 * 2)
+
+
+# ---------------------------------------------------------------------------
+# roofline analytics sanity
+# ---------------------------------------------------------------------------
+
+def test_active_params_deepseek_v3():
+    """v3: ~37B active of ~670B total (paper's own numbers)."""
+    from benchmarks.roofline import active_params, param_budget
+    from repro.configs import REGISTRY
+    arch = REGISTRY["deepseek-v3-671b"]
+    act = active_params(arch)
+    assert 3.0e10 < act < 4.5e10, act
+    from repro.models import n_params
+    assert 6.0e11 < n_params(arch) < 7.5e11
+
+
+def test_roofline_terms_positive_and_dominant_valid():
+    from benchmarks.roofline import analyze_cell
+    r = analyze_cell("qwen2-1.5b", "train_4k", "pod16x16")
+    assert r is not None
+    assert r["t_compute_s"] > 0 and r["t_memory_s"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert 0 < r["useful_ratio"] <= 1.5
+
+
+def test_decode_cells_memory_or_collective_bound():
+    """Serving one token can never be compute-bound at 256-way sharding."""
+    from benchmarks.roofline import analyze_cell
+    for arch in ("gemma3-27b", "granite-34b"):
+        r = analyze_cell(arch, "decode_32k", "pod16x16")
+        assert r["dominant"] in ("memory", "collective")

@@ -1,0 +1,63 @@
+"""Parallel/chunked forms must equal token-by-token recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import mamba2 as m2
+from repro.models import xlstm as xl
+from repro.models.layers import init_params
+
+
+def _rollout(decode_fn, p, cfg, x, state):
+    ys = []
+    for t in range(x.shape[1]):
+        y, state = decode_fn(p, cfg, x[:, t:t + 1], state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+@pytest.mark.parametrize("seq", [24, 32, 31])     # incl. non-chunk-multiple
+def test_mamba2_parallel_equals_recurrent(seq):
+    cfg = m2.Mamba2Config(d_model=32, d_state=16, head_dim=16, chunk=8)
+    p = init_params(m2.mamba2_spec(cfg), jax.random.PRNGKey(0))
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, seq, 32))
+    y_par, st_par = m2.mamba2_forward(p, cfg, x, return_state=True)
+    y_seq, st_seq = _rollout(m2.mamba2_decode, p, cfg, x,
+                             m2.mamba2_init_state(cfg, 2))
+    np.testing.assert_allclose(y_par, y_seq, atol=1e-3)
+    np.testing.assert_allclose(st_par[0], st_seq[0], atol=1e-3)
+
+
+@pytest.mark.parametrize("seq", [24, 31])
+def test_mlstm_parallel_equals_recurrent(seq):
+    cfg = xl.MLSTMConfig(d_model=32, n_heads=4, chunk=8)
+    p = init_params(xl.mlstm_spec(cfg), jax.random.PRNGKey(0))
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (2, seq, 32))
+    y_par = xl.mlstm_forward(p, cfg, x)
+    y_seq, _ = _rollout(xl.mlstm_decode, p, cfg, x,
+                        xl.mlstm_init_state(cfg, 2))
+    np.testing.assert_allclose(y_par, y_seq, atol=1e-3)
+
+
+def test_slstm_parallel_equals_recurrent():
+    cfg = xl.SLSTMConfig(d_model=32, n_heads=4)
+    p = init_params(xl.slstm_spec(cfg), jax.random.PRNGKey(0))
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, 12, 32))
+    y_par = xl.slstm_forward(p, cfg, x)
+    y_seq, _ = _rollout(xl.slstm_decode, p, cfg, x,
+                        xl.slstm_init_state(cfg, 2))
+    np.testing.assert_allclose(y_par, y_seq, atol=1e-4)
+
+
+def test_mlstm_prefill_state_continues_decode():
+    cfg = xl.MLSTMConfig(d_model=32, n_heads=4, chunk=8)
+    p = init_params(xl.mlstm_spec(cfg), jax.random.PRNGKey(0))
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(4), (2, 24, 32))
+    _, st = xl.mlstm_forward(p, cfg, x, return_state=True)
+    probe = 0.1 * jnp.ones((2, 1, 32))
+    y_a, _ = xl.mlstm_decode(p, cfg, probe, st)
+    _, st_roll = _rollout(xl.mlstm_decode, p, cfg, x,
+                          xl.mlstm_init_state(cfg, 2))
+    y_b, _ = xl.mlstm_decode(p, cfg, probe, st_roll)
+    np.testing.assert_allclose(y_a, y_b, atol=1e-3)

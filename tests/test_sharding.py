@@ -1,0 +1,65 @@
+"""Sharding rules: divisibility fallback, axis uniqueness, cache heuristics."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.launch.sharding import SERVE_RULES, TRAIN_RULES, spec_for
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_mlp_weight_fsdp_tp():
+    s = spec_for((4096, 13440), ("embed", "mlp"), MESH1, TRAIN_RULES)
+    assert s == P("data", "model")
+
+
+def test_multi_pod_fsdp_uses_both_axes():
+    s = spec_for((7168, 2048), ("embed", "mlp"), MESH2, TRAIN_RULES)
+    assert s == P(("pod", "data"), "model")
+
+
+def test_qwen2_heads_fallback_to_replicated():
+    # 12 heads % 16 != 0 -> heads dim replicated; embed still FSDP
+    s = spec_for((1536, 12, 128), ("embed", "heads", "head_dim"),
+                 MESH1, TRAIN_RULES)
+    assert s == P("data")
+
+
+def test_whisper_odd_vocab_falls_back():
+    s = spec_for((51865, 1024), ("vocab", "embed"), MESH1, TRAIN_RULES)
+    assert s == P(None, "data")
+
+
+def test_mesh_axis_used_at_most_once_per_tensor():
+    # (embed, embed): second dim must not reuse the data axis
+    s = spec_for((2048, 2048), ("embed", "embed"), MESH1, TRAIN_RULES)
+    assert s == P("data")
+
+
+def test_mqa_single_kv_head_replicated():
+    s = spec_for((6144, 1, 128), ("embed", "kv_heads", "head_dim"),
+                 MESH1, TRAIN_RULES)
+    assert s == P("data")
+
+
+def test_experts_ep_over_batch_axes_tp_over_model():
+    # EP x TP (DESIGN §5): experts over the batch axes so expert grads stay
+    # local; the FFN dim carries TP. embed falls back (data already used).
+    s = spec_for((256, 7168, 2048), ("experts", "embed", "expert_mlp"),
+                 MESH1, TRAIN_RULES)
+    assert s == P("data", None, "model")
+    s2 = spec_for((256, 7168, 2048), ("experts", "embed", "expert_mlp"),
+                  MESH2, TRAIN_RULES)
+    assert s2 == P(("pod", "data"), None, "model")
+
+
+def test_serve_rules_keep_params_dp_replicated():
+    s = spec_for((4096, 13440), ("embed", "mlp"), MESH1, SERVE_RULES)
+    assert s == P(None, "model")
+
+
+def test_partial_divisibility_prefix():
+    # multi-pod FSDP: dim divisible by pod(2) but not pod*data(32)
+    s = spec_for((2050 * 2, 64), ("embed", None), MESH2, TRAIN_RULES)
+    assert s == P("pod")
