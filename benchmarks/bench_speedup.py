@@ -16,6 +16,12 @@ two machines map to two measurements we CAN make faithfully:
    reproduces the paper's saturation analysis: speedup is linear while
    per-PE compute dominates, and flattens when communication becomes
    comparable (the paper saw this at ~16 PEs on NCUBE's fast nodes).
+
+3. Fused-engine end-to-end speedup == the paper's Fig. 7 curve measured
+   against the same baseline: ``dgo.run`` (the whole optimization — every
+   population step AND the resolution schedule — in one compiled
+   while_loop) vs ``run_sequential`` (the numpy one-child-at-a-time SPARC
+   analogue), for the paper's problem sizes n in {3, 5, 9}.
 """
 from __future__ import annotations
 
@@ -78,6 +84,35 @@ def modeled_scaling(t_seq_iter: float, n_bits: int = 63,
     return rows
 
 
+def measure_fused_engine_speedup(n_vars: int, bits: int = 7,
+                                 max_bits: int = 11, reps: int = 3):
+    """Whole-optimization wall clock: fused engine vs sequential baseline.
+
+    Same objective (paper Fig. 6 quadratic), same start point, same
+    resolution schedule; the fused side is timed after its single
+    compilation (steady-state serving cost), matching how the paper times
+    MP-1 after program load.
+    """
+    obj = quadratic_nd(n_vars)
+    enc = obj.encoding.with_bits(bits)
+    cfg = DGOConfig(encoding=enc, max_bits=max_bits,
+                    max_iters_per_resolution=64)
+    x0 = np.full(n_vars, 5.0)
+
+    t0 = time.perf_counter()
+    seq = dgo.run_sequential(obj.fn, cfg, x0)
+    t_seq = time.perf_counter() - t0
+
+    fused = dgo.run(obj.fn, cfg, x0=jnp.asarray(x0))      # compile + run
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fused = dgo.run(obj.fn, cfg, x0=jnp.asarray(x0))
+    t_fused = (time.perf_counter() - t0) / reps
+    assert abs(float(fused.value) - float(seq.value)) < max(
+        obj.tol, 1e-3), (float(fused.value), float(seq.value))
+    return t_seq, t_fused, t_seq / t_fused
+
+
 def run(fast: bool = True):
     t_seq, t_vec, speedup = measure_simd_speedup(iters=8 if fast else 30)
     out = [
@@ -86,6 +121,14 @@ def run(fast: bool = True):
         ("bench_speedup.simd_speedup", speedup,
          "MP-1 plural-eval analogue (paper: 126x on 128 PEs, n=9)"),
     ]
+    for n in (3, 5, 9):
+        ts, tf, s = measure_fused_engine_speedup(n)
+        out.append((f"bench_speedup.fused_engine_seq_s_n{n}", ts,
+                    "run_sequential end-to-end"))
+        out.append((f"bench_speedup.fused_engine_s_n{n}", tf,
+                    "fused while-loop engine end-to-end"))
+        out.append((f"bench_speedup.fused_engine_speedup_n{n}", s,
+                    "paper Fig.7 analogue vs the same baseline"))
     for p, s in modeled_scaling(t_seq):
         out.append((f"bench_speedup.modeled_pe{p}", s,
                     "alpha-beta comm model; paper Fig.7 shape"))

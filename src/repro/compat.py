@@ -1,0 +1,174 @@
+"""JAX version-portability layer.
+
+Every use of a JAX API whose surface moved between 0.4.x and >= 0.5 goes
+through this module — callers never touch ``jax.sharding.AxisType``,
+``jax.shard_map``, ``AbstractMesh`` or ``jax.make_mesh`` directly. Policy
+(also recorded in ROADMAP.md): the repo supports the *installed* JAX floor
+(0.4.37, pinned in this container) **and** the current >= 0.5 API; each
+shim resolves its implementation once at import time by inspecting the
+installed signature, so per-call overhead is a plain function call.
+
+Shims provided:
+
+* ``shard_map(f, *, mesh, in_specs, out_specs, check_vma=False)`` —
+  resolves to top-level ``jax.shard_map`` when present (>= 0.5, kwarg
+  ``check_vma``; some intermediate releases keep ``check_rep``) or to
+  ``jax.experimental.shard_map.shard_map`` (0.4.x, kwarg ``check_rep``).
+* ``AxisType`` — re-export of ``jax.sharding.AxisType`` or a stand-in enum
+  with the same member names (0.4.x meshes have no axis types; the shim
+  lets call sites pass them unconditionally).
+* ``make_mesh(axis_shapes, axis_names, *, axis_types=None)`` — drops the
+  ``axis_types`` kwarg on JAX versions whose ``jax.make_mesh`` lacks it.
+* ``abstract_mesh(axis_shapes, axis_names)`` — ``AbstractMesh`` grew a
+  positional-signature change (0.4.x wants one ``((name, size), ...)``
+  tuple; >= 0.5 wants ``(sizes, names)``).
+* ``mesh_from_devices(devices, axis_names, *, axis_types=None)`` — the
+  ``Mesh(devices, names, axis_types=...)`` constructor kwarg, dropped when
+  unsupported.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+__all__ = [
+    "AxisType",
+    "HAS_NATIVE_AXIS_TYPE",
+    "abstract_mesh",
+    "axis_size",
+    "make_mesh",
+    "mesh_from_devices",
+    "shard_map",
+]
+
+
+def _kwarg_names(fn: Callable[..., Any]) -> set[str]:
+    try:
+        return set(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):  # builtins / C extensions: assume modern
+        return set()
+
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_NATIVE_AXIS_TYPE = True
+except ImportError:
+    HAS_NATIVE_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on JAX 0.4.x.
+
+        0.4.x meshes are untyped (everything behaves like ``Auto``); the
+        members exist so call sites can pass axis types unconditionally and
+        the mesh shims below can discard them.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # JAX 0.4.x: experimental namespace only
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_KWARGS = _kwarg_names(_shard_map_impl)
+if "check_vma" in _SHARD_MAP_KWARGS:
+    _CHECK_KW = "check_vma"
+elif "check_rep" in _SHARD_MAP_KWARGS:
+    _CHECK_KW = "check_rep"
+else:
+    _CHECK_KW = None
+
+
+def shard_map(f: Callable[..., Any], *, mesh, in_specs, out_specs,
+              check_vma: bool = False):
+    """Version-portable ``shard_map``.
+
+    ``check_vma`` follows the modern spelling; it is translated to
+    ``check_rep`` on JAX versions that predate the rename (the semantics —
+    "verify outputs are replicated where out_specs claim" — are the same).
+    """
+    kwargs: dict[str, Any] = {}
+    if _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name) -> jax.Array:
+        """``jax.lax.axis_size`` for JAX versions that predate it.
+
+        ``psum(1)`` over the axis counts its participants; under shard_map
+        the collective folds to a compile-time constant.
+        """
+        return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# mesh constructors
+# ---------------------------------------------------------------------------
+
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in _kwarg_names(jax.make_mesh)
+_MESH_HAS_AXIS_TYPES = "axis_types" in _kwarg_names(Mesh.__init__) or (
+    # 0.5+ exposes (*args, **kwargs) via a util wrapper; probe the doc'd attr
+    "axis_types" in getattr(Mesh, "__slots__", ())
+    or hasattr(Mesh, "_axis_types")
+)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Sequence["AxisType"] | None = None,
+              devices=None) -> Mesh:
+    """``jax.make_mesh`` with ``axis_types`` dropped when unsupported."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        kwargs["axis_types"] = tuple(axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def mesh_from_devices(devices, axis_names: Sequence[str], *,
+                      axis_types: Sequence["AxisType"] | None = None) -> Mesh:
+    """``Mesh(device_array, names)`` with ``axis_types`` when supported."""
+    if axis_types is not None and _MESH_HAS_AXIS_TYPES:
+        try:
+            return Mesh(devices, tuple(axis_names),
+                        axis_types=tuple(axis_types))
+        except TypeError:
+            pass  # probe lied (wrapped __init__) — fall through
+    return Mesh(devices, tuple(axis_names))
+
+
+_ABSTRACT_MESH_PARAMS = list(inspect.signature(
+    AbstractMesh.__init__).parameters)
+# 0.4.x: __init__(self, shape_tuple, axis_types=None) with shape_tuple a
+# ((name, size), ...) tuple; >= 0.5: __init__(self, axis_sizes, axis_names, *,
+# axis_types=...).
+_ABSTRACT_MESH_LEGACY = (len(_ABSTRACT_MESH_PARAMS) >= 2
+                         and _ABSTRACT_MESH_PARAMS[1] == "shape_tuple")
+
+
+def abstract_mesh(axis_shapes: Sequence[int],
+                  axis_names: Sequence[str]) -> AbstractMesh:
+    """Version-portable ``AbstractMesh`` constructor."""
+    if _ABSTRACT_MESH_LEGACY:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+    return AbstractMesh(tuple(axis_shapes), tuple(axis_names))

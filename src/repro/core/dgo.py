@@ -16,22 +16,28 @@ Three drivers live here:
   the O(n^2)-per-iteration baseline used by ``benchmarks/bench_complexity``
   (paper Fig. 6) and the denominator of every speedup number (the paper's
   SPARC IV role).
-* ``run`` — single-device vectorized driver: each resolution level runs a
-  jitted ``lax.while_loop`` whose body generates + evaluates the whole
-  population at once (a TPU chip's VPU/MXU lanes play the role of MasPar's
-  PE array). Resolution escalation is a tiny host loop (it re-jits only
-  once per (N, bits) shape, which changes a handful of times).
-* ``run_clustered`` — vmap over independent start points, the paper's
-  "cluster" mode on MP-1 (16K PEs >> 2N-1 for small problems).
+* ``run`` — the fused single-device engine: the *entire* optimization —
+  population generation, decode, evaluation, selection AND the resolution
+  schedule — is one jitted ``lax.while_loop`` over a max-width bit buffer
+  (``n_vars * max_bits`` bits). The active resolution is a loop-carried
+  scalar; children are generated against stacked per-resolution segment
+  tables and invalid tail children are masked to +inf. One compilation per
+  (objective, config) instead of one per (N, bits) shape.
+* ``run_clustered`` — vmap of the same fused engine over independent start
+  points, the paper's "cluster" mode on MP-1 (16K PEs >> 2N-1 for small
+  problems).
 
 The multi-device population distribution (shard_map over the mesh) lives in
-``core/distributed.py`` and reuses ``dgo_resolution_step`` below.
+``core/distributed.py``; its per-shard inner loop is the Pallas-fused
+population step in ``kernels/popstep`` (the static-shape kernel twin of the
+engine here — same generate -> decode -> evaluate -> argmin pass, tiled in
+VMEM).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable, NamedTuple
 
 import jax
@@ -79,7 +85,7 @@ class DGOState(NamedTuple):
 class DGOResult(NamedTuple):
     x: jax.Array             # (n_vars,) best point found
     value: jax.Array         # () f32
-    bits: jax.Array          # final parent bits (N,) at final resolution
+    bits: jax.Array          # best point's bits (N,) at the final resolution
     evaluations: int         # total function evaluations
     iterations: int          # total accepted/attempted steps
     trace: np.ndarray        # (iterations,) best value after each step
@@ -141,14 +147,239 @@ def dgo_resolution_step(f_batch: Callable[[jax.Array], jax.Array],
 
 
 # ---------------------------------------------------------------------------
-# vectorized single-device driver (resolution schedule on host)
+# fused single-compilation engine: the whole optimization (population steps
+# AND the resolution schedule) inside one jitted lax.while_loop
+# ---------------------------------------------------------------------------
+
+class EngineState(NamedTuple):
+    """Loop carry of the fused engine (one whole optimization)."""
+
+    res_idx: jax.Array       # () i32 — index into the resolution schedule
+    levels: jax.Array        # (n_vars,) u32 — parent as per-var lattice levels
+    val: jax.Array           # () f32 — current parent value
+    best_val: jax.Array      # () f32 — monotone best-so-far
+    best_x: jax.Array        # (n_vars,) f32 — argbest point
+    improved: jax.Array      # () bool — did the last step improve?
+    it_in_res: jax.Array     # () i32 — steps taken at this resolution
+    iters: jax.Array         # () i32 — total steps
+    evals: jax.Array         # () i32 — total function evaluations
+    trace: jax.Array         # (T_max,) f32 — best value after each step
+
+
+class _EngineStatic(NamedTuple):
+    """Host-side constants baked into one engine compilation."""
+
+    n_vars: int
+    lo: float
+    hi: float
+    res_bits: tuple          # the resolution schedule (static)
+    max_iters: int
+    n_max: int               # n_vars * max(res_bits): the bit-buffer width
+    p_max: int               # 2 * n_max - 1
+    t_max: int               # trace capacity
+
+
+def _engine_static(cfg: DGOConfig) -> _EngineStatic:
+    enc0 = cfg.encoding
+    # a degenerate schedule (max_bits < starting bits) still runs the
+    # starting resolution instead of crashing
+    res_bits = tuple(cfg.resolutions()) or (enc0.bits,)
+    n_max = enc0.n_vars * res_bits[-1]
+    return _EngineStatic(
+        n_vars=enc0.n_vars, lo=enc0.lo, hi=enc0.hi, res_bits=res_bits,
+        max_iters=cfg.max_iters_per_resolution, n_max=n_max,
+        p_max=2 * n_max - 1,
+        t_max=len(res_bits) * cfg.max_iters_per_resolution)
+
+
+def _stacked_segment_tables(st: _EngineStatic) -> np.ndarray:
+    """(n_res, P_max, 2) — segment table of every resolution, zero-padded.
+
+    Pad rows carry the empty segment [0, 0): such a child equals the parent
+    and is additionally masked to +inf by the population-size check."""
+    out = np.zeros((len(st.res_bits), st.p_max, 2), np.int32)
+    for r, b in enumerate(st.res_bits):
+        t = segment_table(st.n_vars * b)
+        out[r, : t.shape[0]] = t
+    return out
+
+
+def _decode_levels(levels: jax.Array, bits: jax.Array,
+                   st: _EngineStatic) -> jax.Array:
+    """(..., n_vars) u32 lattice levels at dynamic resolution -> floats."""
+    max_level = jnp.exp2(bits.astype(jnp.float32)) - 1.0
+    span = st.hi - st.lo
+    return st.lo + levels.astype(jnp.float32) * (span / max_level)
+
+
+def _encode_levels(x: jax.Array, bits: jax.Array,
+                   st: _EngineStatic) -> jax.Array:
+    max_level = jnp.exp2(bits.astype(jnp.float32)) - 1.0
+    span = st.hi - st.lo
+    lv = jnp.round((x - st.lo) / span * max_level)
+    return jnp.clip(lv, 0.0, max_level).astype(jnp.uint32)
+
+
+def _string_weights(bits: jax.Array, st: _EngineStatic):
+    """Per-position (var id, shift, bit weight, active mask) of the
+    concatenated string laid out in the max-width buffer: position i
+    belongs to variable i // bits, MSB-first weight 2^(bits - 1 - i % bits).
+    """
+    i = jnp.arange(st.n_max, dtype=jnp.int32)
+    var = jnp.minimum(i // bits, st.n_vars - 1)
+    pos = i % bits
+    active = i < st.n_vars * bits
+    shift = jnp.clip(bits - 1 - pos, 0, 31).astype(jnp.uint32)
+    weight = jnp.where(active,
+                       jnp.exp2((bits - 1 - pos).astype(jnp.float32)), 0.0)
+    return var, shift, weight, active
+
+
+def _string_bits(levels: jax.Array, bits: jax.Array,
+                 st: _EngineStatic) -> jax.Array:
+    """(n_vars,) levels -> (N_max,) int32 bit buffer (active prefix)."""
+    var, shift, _, active = _string_weights(bits, st)
+    b = (levels[var] >> shift) & jnp.uint32(1)
+    return jnp.where(active, b.astype(jnp.int32), 0)
+
+
+def make_fused_engine(f: Callable[[jax.Array], jax.Array],
+                      cfg: DGOConfig) -> Callable:
+    """Build ``engine(levels0, val0) -> EngineState``: full DGO in ONE
+    jitted ``lax.while_loop``.
+
+    Children of the current parent are generated at full buffer width from
+    the stacked segment tables (the resolution index gathers its table);
+    decode happens through a dynamically-weighted one-hot matmul so the
+    same compiled program serves every resolution; tail children beyond the
+    live population 2*n_vars*bits-1 are masked to +inf. This is the engine
+    that ``run`` drives and ``run_clustered`` vmaps; ``kernels/popstep`` is
+    its static-shape Pallas counterpart for the sharded path.
+    """
+    st = _engine_static(cfg)
+    tables = jnp.asarray(_stacked_segment_tables(st))        # (R, P_max, 2)
+    bits_arr = jnp.asarray(st.res_bits, jnp.int32)           # (R,)
+    n_res = len(st.res_bits)
+    f_batch = jax.vmap(f)
+
+    def population_values(levels, bits, res_idx):
+        """All children at the current resolution: (vals, child_levels)."""
+        var, _, weight, active = _string_weights(bits, st)
+        sbits = _string_bits(levels, bits, st)               # (N_max,)
+        gray = binary_to_gray(sbits)
+        table = tables[jnp.minimum(res_idx, n_res - 1)]      # (P_max, 2)
+        i = jnp.arange(st.n_max, dtype=jnp.int32)[None, :]
+        masks = (i >= table[:, :1]) & (i < table[:, 1:])     # (P_max, N_max)
+        cgray = jnp.bitwise_xor(gray[None, :], masks.astype(jnp.int32))
+        children = jnp.cumsum(cgray, axis=-1) % 2            # inverse Gray
+        # decode: one-hot matmul with dynamic MSB-first weights. Weights are
+        # powers of two < 2^24, so the f32 accumulation is exact.
+        onehot = (var[:, None] == jnp.arange(st.n_vars)[None, :])
+        wmat = jnp.where(onehot, weight[:, None], 0.0)       # (N_max, n_vars)
+        child_levels = children.astype(jnp.float32) @ wmat   # (P_max, n_vars)
+        max_level = jnp.exp2(bits.astype(jnp.float32)) - 1.0
+        xs = st.lo + child_levels * ((st.hi - st.lo) / max_level)
+        vals = f_batch(xs)                                   # (P_max,)
+        pop = 2 * st.n_vars * bits - 1
+        c = jnp.arange(st.p_max, dtype=jnp.int32)
+        vals = jnp.where(c < pop, vals, jnp.inf)
+        return vals, child_levels
+
+    def iterate(s: EngineState) -> EngineState:
+        bits = bits_arr[jnp.minimum(s.res_idx, n_res - 1)]
+        vals, child_levels = population_values(s.levels, bits, s.res_idx)
+        best = jnp.argmin(vals)
+        best_val = vals[best]
+        improved = best_val < s.val
+        new_levels = jnp.where(improved,
+                               child_levels[best].astype(jnp.uint32),
+                               s.levels)
+        new_val = jnp.where(improved, best_val, s.val)
+        better_ever = new_val < s.best_val
+        best_x = jnp.where(better_ever,
+                           _decode_levels(new_levels, bits, st), s.best_x)
+        best_run = jnp.where(better_ever, new_val, s.best_val)
+        trace = s.trace.at[jnp.clip(s.iters, 0, st.t_max - 1)].set(best_run)
+        pop = 2 * st.n_vars * bits - 1
+        return EngineState(s.res_idx, new_levels, new_val, best_run, best_x,
+                           improved, s.it_in_res + 1, s.iters + 1,
+                           s.evals + pop, trace)
+
+    def escalate(s: EngineState) -> EngineState:
+        bits = bits_arr[jnp.minimum(s.res_idx, n_res - 1)]
+        nxt = jnp.minimum(s.res_idx + 1, n_res - 1)
+        bits_next = bits_arr[nxt]
+        x = _decode_levels(s.levels, bits, st)
+        levels2 = _encode_levels(x, bits_next, st)           # paper step 5
+        val2 = f(_decode_levels(levels2, bits_next, st))
+        better = val2 < s.best_val
+        best_x = jnp.where(better, _decode_levels(levels2, bits_next, st),
+                           s.best_x)
+        best_val = jnp.where(better, val2, s.best_val)
+        return EngineState(s.res_idx + 1, levels2, val2.astype(jnp.float32),
+                           best_val, best_x, jnp.bool_(True), jnp.int32(0),
+                           s.iters, s.evals, s.trace)
+
+    def cond(s: EngineState):
+        return s.res_idx < n_res
+
+    def body(s: EngineState) -> EngineState:
+        stall = jnp.logical_or(~s.improved, s.it_in_res >= st.max_iters)
+        return jax.lax.cond(stall, escalate, iterate, s)
+
+    def engine(levels0: jax.Array, val0: jax.Array) -> EngineState:
+        s0 = EngineState(
+            res_idx=jnp.int32(0), levels=levels0,
+            val=val0.astype(jnp.float32), best_val=val0.astype(jnp.float32),
+            best_x=_decode_levels(levels0, bits_arr[0], st),
+            improved=jnp.bool_(True), it_in_res=jnp.int32(0),
+            iters=jnp.int32(0), evals=jnp.int32(0),
+            trace=jnp.full((st.t_max,), val0, jnp.float32))
+        return jax.lax.while_loop(cond, body, s0)
+
+    return engine
+
+
+@lru_cache(maxsize=64)
+def _cached_engine(f: Callable, cfg: DGOConfig):
+    return jax.jit(make_fused_engine(f, cfg))
+
+
+@lru_cache(maxsize=64)
+def _cached_clustered_engine(f: Callable, cfg: DGOConfig):
+    return jax.jit(jax.vmap(make_fused_engine(f, cfg)))
+
+
+def _best_bits(best_x: jax.Array, st: _EngineStatic) -> jax.Array:
+    """Bit string of the best point, quantized to the final resolution —
+    ``decode(result.bits, enc.with_bits(max))`` reconstructs the reported
+    solution (up to half a final-lattice step when the best point was found
+    at a coarser resolution)."""
+    fb = jnp.int32(st.res_bits[-1])
+    return jnp.asarray(
+        _string_bits(_encode_levels(best_x, fb, st), fb, st), jnp.int8)
+
+
+def _result_from_state(s: EngineState, cfg: DGOConfig) -> DGOResult:
+    st = _engine_static(cfg)
+    iters = int(s.iters)
+    trace = (np.asarray(s.trace[:iters]) if iters
+             else np.asarray([float(s.best_val)]))
+    return DGOResult(x=s.best_x, value=s.best_val,
+                     bits=_best_bits(s.best_x, st),
+                     evaluations=int(s.evals), iterations=iters, trace=trace)
+
+
+# ---------------------------------------------------------------------------
+# vectorized single-device driver (one compilation per optimization)
 # ---------------------------------------------------------------------------
 
 def run(f: Callable[[jax.Array], jax.Array],
         cfg: DGOConfig,
         x0: jax.Array | None = None,
         key: jax.Array | None = None) -> DGOResult:
-    """Full DGO: resolution schedule over jitted per-resolution loops.
+    """Full DGO through the fused engine: generation, evaluation, selection
+    and the resolution schedule all inside one jitted while_loop.
 
     ``f`` maps (n_vars,) -> scalar; it is vmapped over the population.
     """
@@ -158,35 +389,12 @@ def run(f: Callable[[jax.Array], jax.Array],
             key = jax.random.PRNGKey(0)
         x0 = jax.random.uniform(key, (enc0.n_vars,), minval=enc0.lo,
                                 maxval=enc0.hi)
-    f_batch = jax.vmap(f)
-
-    total_evals = 0
-    total_iters = 0
-    traces: list[np.ndarray] = []
-
-    bits = encode(jnp.asarray(x0, jnp.float32), enc0)
-    val = f(decode(bits, enc0))
-
-    prev_enc = enc0
-    for res in cfg.resolutions():
-        enc = enc0.with_bits(res)
-        if enc.bits != prev_enc.bits:
-            bits = reencode(bits, prev_enc, enc)
-            val = f(decode(bits, enc))
-        step = jax.jit(partial(dgo_resolution_step, f_batch, enc,
-                               cfg.max_iters_per_resolution))
-        state, trace = step(bits, val)
-        iters = int(state.iters)
-        total_iters += iters
-        total_evals += iters * enc.population
-        traces.append(np.asarray(trace[:iters]))
-        bits, val = state.parent_bits, state.parent_val
-        prev_enc = enc
-
-    x = decode(bits, prev_enc)
-    trace = np.concatenate(traces) if traces else np.asarray([float(val)])
-    return DGOResult(x=x, value=val, bits=bits, evaluations=total_evals,
-                     iterations=total_iters, trace=trace)
+    st = _engine_static(cfg)
+    bits0 = jnp.int32(st.res_bits[0])
+    levels0 = _encode_levels(jnp.asarray(x0, jnp.float32), bits0, st)
+    val0 = f(_decode_levels(levels0, bits0, st))
+    state = _cached_engine(f, cfg)(levels0, val0)
+    return _result_from_state(state, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -199,40 +407,28 @@ def run_clustered(f: Callable[[jax.Array], jax.Array],
                   key: jax.Array) -> DGOResult:
     """Independent DGO instances from random starts; best-of wins.
 
-    vmap over the cluster axis — on hardware the cluster axis is laid over
-    spare devices (see core/distributed.py: the pod axis).
+    vmap of the fused engine over the cluster axis — every cluster runs its
+    entire resolution schedule inside the same compiled while_loop; on
+    hardware the cluster axis is laid over spare devices (see
+    core/distributed.py: the pod axis).
     """
     enc0 = cfg.encoding
+    st = _engine_static(cfg)
     keys = jax.random.split(key, n_clusters)
     x0s = jax.vmap(lambda k: jax.random.uniform(
         k, (enc0.n_vars,), minval=enc0.lo, maxval=enc0.hi))(keys)
-    f_batch = jax.vmap(f)
+    bits0 = jnp.int32(st.res_bits[0])
+    levels0 = _encode_levels(x0s, bits0, st)                 # (C, n_vars)
+    vals0 = jax.vmap(f)(_decode_levels(levels0, bits0, st))
 
-    bits = jax.vmap(lambda x: encode(x, enc0))(x0s)          # (C, N)
-    vals = jax.vmap(f)(jax.vmap(lambda b: decode(b, enc0))(bits))
-
-    total_iters = 0
-    total_evals = 0
-    prev_enc = enc0
-    for res in cfg.resolutions():
-        enc = enc0.with_bits(res)
-        if enc.bits != prev_enc.bits:
-            bits = jax.vmap(lambda b: reencode(b, prev_enc, enc))(bits)
-            vals = f_batch(jax.vmap(lambda b: decode(b, enc))(bits))
-        step = jax.jit(jax.vmap(
-            partial(dgo_resolution_step, f_batch, enc,
-                    cfg.max_iters_per_resolution)))
-        states, _ = step(bits, vals)
-        bits, vals = states.parent_bits, states.parent_val
-        total_iters += int(jnp.max(states.iters))
-        total_evals += int(jnp.sum(states.iters)) * enc.population
-        prev_enc = enc
-
-    winner = int(jnp.argmin(vals))
-    x = decode(bits[winner], prev_enc)
-    return DGOResult(x=x, value=vals[winner], bits=bits[winner],
-                     evaluations=total_evals, iterations=total_iters,
-                     trace=np.asarray(vals))
+    states = _cached_clustered_engine(f, cfg)(levels0, vals0)
+    winner = int(jnp.argmin(states.best_val))
+    return DGOResult(x=states.best_x[winner],
+                     value=states.best_val[winner],
+                     bits=_best_bits(states.best_x[winner], st),
+                     evaluations=int(jnp.sum(states.evals)),
+                     iterations=int(jnp.max(states.iters)),
+                     trace=np.asarray(states.best_val))
 
 
 # ---------------------------------------------------------------------------

@@ -29,15 +29,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.core.encoding import Encoding, decode
 from repro.core.population import generate_children
+from repro.kernels.popstep.ops import population_step_ids
 
 
 def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
     """Row-major flat index of this shard across the given mesh axes."""
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
@@ -53,7 +55,9 @@ def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
                           mesh: Mesh,
                           pop_axes: Sequence[str] = ("data",),
                           virtual_block: int = 256,
-                          donate: bool = False):
+                          donate: bool = False,
+                          inner: str = "popstep",
+                          interpret: bool = True):
     """Build a jitted one-iteration DGO step sharded over ``pop_axes``.
 
     Returns ``step(parent_bits, parent_val, quorum_mask) ->
@@ -63,7 +67,15 @@ def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
     ``f_batch``: (B, n_vars) -> (B,), pure; evaluated inside each shard, so if
     the objective itself is model-sharded its collectives must use *other*
     mesh axes than ``pop_axes`` (the LM path passes a model-axis-sharded loss).
+
+    ``inner`` selects the per-shard engine for each virtual-processing
+    block: ``"popstep"`` (default) runs the fused Pallas kernel — generate,
+    decode, evaluate and block-argmin in one VMEM pass per tile
+    (``kernels/popstep``); ``"jnp"`` keeps the unfused XLA pipeline (also
+    the fallback for objectives whose jaxpr Pallas cannot trace).
     """
+    if inner not in ("popstep", "jnp"):
+        raise ValueError(f"inner must be 'popstep' or 'jnp', got {inner!r}")
     n_shards = _axis_prod(mesh, pop_axes)
     pop = enc.population
     chunk = math.ceil(pop / n_shards)
@@ -82,13 +94,19 @@ def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
             ids = base + b * block + jnp.arange(block)
             valid = (ids < pop) & alive
             ids_c = jnp.minimum(ids, pop - 1)
-            children = generate_children(parent_bits, ids_c)     # (block, N)
-            xs = decode(children, enc)                           # (block, n)
-            vals = jnp.where(valid, f_batch(xs), jnp.inf)
-            i = jnp.argmin(vals)
-            better = vals[i] < best_val
-            return (jnp.where(better, vals[i], best_val),
-                    jnp.where(better, ids_c[i], best_id)), None
+            if inner == "popstep":
+                v, gid = population_step_ids(f_batch, parent_bits, ids_c,
+                                             enc, valid=valid,
+                                             interpret=interpret)
+            else:
+                children = generate_children(parent_bits, ids_c)  # (block, N)
+                xs = decode(children, enc)                        # (block, n)
+                vals = jnp.where(valid, f_batch(xs), jnp.inf)
+                i = jnp.argmin(vals)
+                v, gid = vals[i], ids_c[i]
+            better = v < best_val
+            return (jnp.where(better, v, best_val),
+                    jnp.where(better, gid, best_id)), None
 
         init = (jnp.asarray(jnp.inf, jnp.float32), jnp.int32(0))
         (local_val, local_id), _ = jax.lax.scan(
@@ -110,7 +128,7 @@ def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
         return new_bits, new_val, improved
 
     replicated = P()
-    mapped = jax.shard_map(
+    mapped = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(replicated, replicated, replicated),
         out_specs=(replicated, replicated, replicated),
@@ -125,13 +143,16 @@ def run_distributed(f: Callable[[jax.Array], jax.Array],
                     pop_axes: Sequence[str] = ("data",),
                     max_iters: int = 256,
                     virtual_block: int = 256,
-                    quorum_mask=None):
+                    quorum_mask=None,
+                    inner: str = "popstep",
+                    interpret: bool = True):
     """Host-driven distributed DGO at a fixed resolution (loop on host so
     failure injection / elastic re-mesh can interpose between iterations)."""
     from repro.core.encoding import encode
 
     f_batch = jax.vmap(f)
-    step = make_distributed_step(f_batch, enc, mesh, pop_axes, virtual_block)
+    step = make_distributed_step(f_batch, enc, mesh, pop_axes, virtual_block,
+                                 inner=inner, interpret=interpret)
     n_shards = _axis_prod(mesh, pop_axes)
     if quorum_mask is None:
         quorum_mask = jnp.ones((n_shards,), bool)

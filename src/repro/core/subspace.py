@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import axis_size
 from repro.core.encoding import Encoding, decode
 from repro.core.population import generate_children
 
@@ -84,7 +85,7 @@ def make_dgo_train_step(loss_fn: Callable,
     def shard_fn(params0, batch, parent_bits, parent_val, key):
         shard = jnp.int32(0)
         for name in pop_axes:
-            shard = shard * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+            shard = shard * axis_size(name) + jax.lax.axis_index(name)
         base = shard * chunk
 
         def eval_child(carry, c):

@@ -1,0 +1,163 @@
+"""Pallas kernel: one fused DGO population step.
+
+Per grid cell, for a ``tile_p``-child tile of the 2N-1 population:
+
+  1. segment-inversion mask from the (start, end) tables        (graycode)
+  2. XOR against the parent's Gray code + inverse Gray          (graycode)
+  3. fixed-point decode of the packed children to float points  (fixedpoint)
+  4. objective evaluation of the tile                           (new)
+  5. running (min, argmin) fold across grid cells               (popmin)
+
+— child generation, decode, evaluation and reduction never leave VMEM, so
+the whole paper step 2-4 is one device program per tile instead of four
+kernel launches with HBM round-trips between them. This is the TPU analogue
+of MP-1 executing the plural transform + evaluate + rank() pipeline on data
+held in PE registers.
+
+The objective ``f_tile`` is traced *into* the kernel body: it must be a pure
+jnp function mapping ``(tile_p, n_vars), *consts -> (tile_p,)``. Array
+constants the objective closes over cannot be captured by a Pallas trace —
+ops.py hoists them with ``jax.closure_convert`` and they arrive here as the
+``consts`` kernel inputs (each broadcast to every grid cell). Packed-word
+layout and the inverse-Gray trick match ``kernels/graycode``; the field
+re-assembly matches ``kernels/fixedpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _srl(x, n):
+    """Logical right shift with n in [0, 32] (n >= 32 -> 0)."""
+    nn = jnp.minimum(n, jnp.uint32(31))
+    shifted = jax.lax.shift_right_logical(x, nn)
+    return jnp.where(n < 32, shifted, jnp.uint32(0))
+
+
+def _sll(x, n):
+    nn = jnp.minimum(n, jnp.uint32(31))
+    shifted = jax.lax.shift_left(x, nn)
+    return jnp.where(n < 32, shifted, jnp.uint32(0))
+
+
+def _popstep_kernel(parent_gray_ref, start_ref, end_ref, ok_ref, *refs,
+                    f_tile: Callable[..., jax.Array],
+                    n_words: int, n_bits: int, n_vars: int, bits: int,
+                    lo: float, hi: float, pop: int, tile_p: int):
+    *const_refs, min_ref, idx_ref = refs
+    i = pl.program_id(0)
+    g = parent_gray_ref[...]                       # (1, W) uint32, Gray
+    start = start_ref[...]                         # (TP, 1) int32
+    end = end_ref[...]                             # (TP, 1) int32
+    ok = ok_ref[...]                               # (TP, 1) int32 0/1
+    tp = start.shape[0]
+
+    # --- 1+2: segment mask, XOR, inverse Gray (kernels/graycode) ----------
+    ones = jnp.full((tp, n_words), 0xFFFFFFFF, jnp.uint32)
+    wi = jax.lax.broadcasted_iota(jnp.int32, (tp, n_words), 1)
+    lo_b = jnp.clip(start - 32 * wi, 0, 32).astype(jnp.uint32)
+    hi_b = jnp.clip(end - 32 * wi, 0, 32).astype(jnp.uint32)
+    mask = _srl(ones, lo_b) ^ _srl(ones, hi_b)     # string bits [start, end)
+
+    p = g ^ mask                                   # children in Gray
+    for s in (1, 2, 4, 8, 16):                     # within-word prefix-XOR
+        p = p ^ jax.lax.shift_right_logical(p, jnp.uint32(s))
+    par = (p & jnp.uint32(1)).astype(jnp.int32)
+    carry = (jnp.cumsum(par, axis=1) - par) % 2    # exclusive word parity
+    words = p ^ jnp.where(carry == 1, ones, jnp.uint32(0))
+    valid_bits = jnp.clip(n_bits - 32 * wi, 0, 32).astype(jnp.uint32)
+    words = words & (ones ^ _srl(ones, valid_bits))  # (TP, W) binary
+
+    # --- 3: fixed-point decode (kernels/fixedpoint) ------------------------
+    vi = jax.lax.broadcasted_iota(jnp.int32, (tp, n_vars), 1)
+    s0 = vi * bits
+    w0 = s0 // 32
+    off = (s0 % 32).astype(jnp.uint32)
+    word0 = jnp.take_along_axis(words, w0, axis=1)
+    word1 = jnp.take_along_axis(words, jnp.minimum(w0 + 1, n_words - 1),
+                                axis=1)
+    part0 = _srl(_sll(word0, off), jnp.uint32(32 - bits))
+    need = off + jnp.uint32(bits)
+    spill = jnp.where(need > 32, need - 32, jnp.uint32(0))
+    part1 = jnp.where(spill > 0, _srl(word1, jnp.uint32(32) - spill),
+                      jnp.uint32(0))
+    level = (part0 | part1).astype(jnp.float32)
+    xs = lo + level * ((hi - lo) / float(2 ** bits - 1))  # (TP, n_vars)
+
+    # --- 4: objective ------------------------------------------------------
+    consts = tuple(r[...] for r in const_refs)
+    vals = f_tile(xs, *consts).astype(jnp.float32).reshape(tp)  # (TP,)
+    row = i * tile_p + jax.lax.iota(jnp.int32, tp)
+    live = (row < pop) & (ok.reshape(tp) != 0)
+    vals = jnp.where(live, vals, jnp.inf)     # pad / quorum-masked -> +inf
+
+    # --- 5: running (min, argmin) fold (kernels/popmin) --------------------
+    local = jnp.min(vals)[None]
+    local_i = (jnp.argmin(vals).astype(jnp.int32) + i * tile_p)[None]
+
+    @pl.when(i == 0)
+    def _init():
+        min_ref[...] = local
+        idx_ref[...] = local_i
+
+    @pl.when(i > 0)
+    def _fold():
+        better = local < min_ref[...]
+        min_ref[...] = jnp.where(better, local, min_ref[...])
+        idx_ref[...] = jnp.where(better, local_i, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "f_tile", "n_bits", "n_vars", "bits", "lo", "hi", "pop", "tile_p",
+    "n_words", "interpret"))
+def popstep(parent_gray: jax.Array, starts: jax.Array, ends: jax.Array,
+            ok: jax.Array | None = None,
+            consts: tuple[jax.Array, ...] = (), *,
+            f_tile: Callable[..., jax.Array],
+            n_bits: int, n_vars: int, bits: int, lo: float, hi: float,
+            pop: int, tile_p: int = 128, n_words: int | None = None,
+            interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(W,) parent Gray words + (P_pad,) segment bounds -> (min val, argmin).
+
+    ``P_pad`` must be a multiple of ``tile_p`` (ops.py pads); rows with
+    index >= ``pop`` — or with ``ok`` false — are masked to +inf inside the
+    kernel. ``consts`` are closure-hoisted objective constants, replicated
+    to every grid cell. The returned argmin is the row index into
+    ``starts``/``ends``.
+    """
+    w = n_words or parent_gray.shape[-1]
+    p_total = starts.shape[0]
+    assert p_total % tile_p == 0, (p_total, tile_p)
+    if ok is None:
+        ok = jnp.ones((p_total,), jnp.int32)
+
+    def _bcast_spec(c):
+        nd = c.ndim
+        return pl.BlockSpec(c.shape, lambda i, _nd=nd: (0,) * _nd)
+
+    mn, idx = pl.pallas_call(
+        functools.partial(_popstep_kernel, f_tile=f_tile, n_words=w,
+                          n_bits=n_bits, n_vars=n_vars, bits=bits,
+                          lo=lo, hi=hi, pop=pop, tile_p=tile_p),
+        grid=(p_total // tile_p,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (0, 0)),         # parent (bcast)
+            pl.BlockSpec((tile_p, 1), lambda i: (i, 0)),    # starts
+            pl.BlockSpec((tile_p, 1), lambda i: (i, 0)),    # ends
+            pl.BlockSpec((tile_p, 1), lambda i: (i, 0)),    # validity
+            *[_bcast_spec(c) for c in consts],              # objective consts
+        ],
+        out_specs=[pl.BlockSpec((1,), lambda i: (0,)),
+                   pl.BlockSpec((1,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        interpret=interpret,
+    )(parent_gray[None, :], starts[:, None].astype(jnp.int32),
+      ends[:, None].astype(jnp.int32), ok[:, None].astype(jnp.int32),
+      *consts)
+    return mn[0], idx[0]

@@ -1,0 +1,125 @@
+"""Public wrappers for the fused population step.
+
+``population_step``     — full 2N-1 population of one parent -> (val, id).
+``population_step_ids`` — an arbitrary id subset (the per-shard /
+virtual-processing path used by ``core.distributed``) -> (val, global id).
+
+Both handle Gray pre-encoding of the parent (O(N), once), segment-table
+lookup, and padding the child count to the tile size; the per-child
+O(P*N + P*cost(f)) work runs fused in the kernel.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import Encoding, binary_to_gray, pack_bits
+from repro.core.population import segment_table
+from repro.kernels.popstep.kernel import popstep
+
+
+def _tile(pop: int, tile_p: int) -> int:
+    """Shrink the tile for tiny populations so one cell isn't mostly pad."""
+    return min(tile_p, max(8, 1 << (pop - 1).bit_length()))
+
+
+# weak-keyed on the objective so entries (closed jaxprs + hoisted device
+# arrays) die with it — callers like run_distributed build a fresh
+# jax.vmap(f) per call, and a plain dict would retain every one forever
+_CONVERT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _convert_objective(f_batch, tile_p: int, n_vars: int):
+    """Hoist array constants out of ``f_batch``'s closure.
+
+    Pallas refuses kernels that capture device arrays, so objectives like
+    shekel (which closes over its foxhole table) are closure-converted: the
+    returned ``f_tile(xs, *consts)`` is pure, and ``consts`` ride into the
+    kernel as broadcast inputs. Cached per (objective, tile shape) so the
+    static ``f_tile`` identity is stable across calls — Pallas/jit caches
+    stay warm. Constants that are tracers (objective built inside an outer
+    trace) skip the cache: they belong to that trace only.
+    """
+    key = (tile_p, n_vars)
+    hit = _CONVERT_CACHE.get(f_batch, {}).get(key)
+    if hit is not None:
+        return hit
+    example = jax.ShapeDtypeStruct((tile_p, n_vars), jnp.float32)
+    closed = jax.make_jaxpr(f_batch)(example)
+    consts = tuple(closed.consts)
+    shapes = tuple(jnp.shape(c) for c in consts)
+
+    def f_tile(xs, *cs):
+        orig = [c.reshape(s) for c, s in zip(cs, shapes)]
+        out = jax.core.eval_jaxpr(closed.jaxpr, orig, xs)
+        return out[0]
+
+    # interpret-mode pallas handles any rank; canonicalize 0-d to (1, 1) so
+    # BlockSpec always has a nonempty shape
+    flat = tuple(jnp.reshape(c, (1, 1)) if jnp.ndim(c) == 0 else c
+                 for c in consts)
+    out = (f_tile, flat)
+    if not any(isinstance(c, jax.core.Tracer) for c in consts):
+        try:
+            _CONVERT_CACHE.setdefault(f_batch, {})[key] = out
+        except TypeError:
+            pass  # objective not weak-referenceable — skip caching
+    return out
+
+
+def population_step(f_batch: Callable[[jax.Array], jax.Array],
+                    parent_bits: jax.Array, enc: Encoding, *,
+                    tile_p: int = 128,
+                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(N,) int8 parent + batched objective -> (best value, best child id)."""
+    n = enc.n_bits
+    w = (n + 31) // 32
+    pop = enc.population
+    t = _tile(pop, tile_p)
+    table = np.asarray(segment_table(n))
+    pad = (-pop) % t
+    starts = jnp.asarray(np.pad(table[:, 0], (0, pad)))
+    ends = jnp.asarray(np.pad(table[:, 1], (0, pad)))
+
+    f_tile, consts = _convert_objective(f_batch, t, enc.n_vars)
+    parent_gray = pack_bits(binary_to_gray(parent_bits), w)
+    return popstep(parent_gray, starts, ends, None, consts, f_tile=f_tile,
+                   n_bits=n, n_vars=enc.n_vars, bits=enc.bits,
+                   lo=enc.lo, hi=enc.hi, pop=pop, tile_p=t, n_words=w,
+                   interpret=interpret)
+
+
+def population_step_ids(f_batch: Callable[[jax.Array], jax.Array],
+                        parent_bits: jax.Array, child_ids: jax.Array,
+                        enc: Encoding, *, valid: jax.Array | None = None,
+                        tile_p: int = 128, interpret: bool = True
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Fused step over an id subset (traced ids, e.g. one shard's chunk).
+
+    ``valid`` (bool, same shape as ``child_ids``) masks rows to +inf
+    (quorum loss / tail padding). Returns the *global* child id of the
+    winner, gathered back from ``child_ids``.
+    """
+    n = enc.n_bits
+    w = (n + 31) // 32
+    k = child_ids.shape[0]
+    t = _tile(k, tile_p)
+    pad = (-k) % t
+    table = jnp.asarray(np.asarray(segment_table(n)))
+    ids = jnp.clip(child_ids.astype(jnp.int32), 0, 2 * n - 2)
+    starts = jnp.pad(table[ids, 0], (0, pad))
+    ends = jnp.pad(table[ids, 1], (0, pad))
+    ok = jnp.ones((k,), jnp.int32) if valid is None else valid.astype(jnp.int32)
+    ok = jnp.pad(ok, (0, pad))
+
+    f_tile, consts = _convert_objective(f_batch, t, enc.n_vars)
+    parent_gray = pack_bits(binary_to_gray(parent_bits), w)
+    mn, row = popstep(parent_gray, starts, ends, ok, consts, f_tile=f_tile,
+                      n_bits=n, n_vars=enc.n_vars, bits=enc.bits,
+                      lo=enc.lo, hi=enc.hi, pop=k, tile_p=t, n_words=w,
+                      interpret=interpret)
+    return mn, ids[jnp.minimum(row, k - 1)]

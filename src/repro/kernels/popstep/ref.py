@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused population step: the unfused
+generate -> decode -> evaluate -> argmin pipeline from core.*."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Encoding, decode
+from repro.core.population import generate_children, generate_population
+
+
+def popstep_ref(f_batch: Callable[[jax.Array], jax.Array],
+                parent_bits: jax.Array,
+                enc: Encoding) -> tuple[jax.Array, jax.Array]:
+    """(N,) int8 parent -> (best child value, best child id) over 2N-1."""
+    children = generate_population(parent_bits)          # (P, N)
+    vals = f_batch(decode(children, enc))                # (P,)
+    i = jnp.argmin(vals)
+    return vals[i].astype(jnp.float32), i.astype(jnp.int32)
+
+
+def popstep_subset_ref(f_batch: Callable[[jax.Array], jax.Array],
+                       parent_bits: jax.Array, child_ids: jax.Array,
+                       enc: Encoding) -> tuple[jax.Array, jax.Array]:
+    """Oracle for an arbitrary id subset (virtual-processing blocks)."""
+    children = generate_children(parent_bits, child_ids)
+    vals = f_batch(decode(children, enc))
+    i = jnp.argmin(vals)
+    return vals[i].astype(jnp.float32), child_ids[i].astype(jnp.int32)

@@ -261,6 +261,7 @@ def run_dgo_cell(multi_pod: bool, out_dir: Path = ARTIFACTS) -> dict:
     """
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import shard_map
     from repro.core.encoding import Encoding
     from repro.core.subspace import make_dgo_train_step
     from repro.models.layers import abstract_params
@@ -282,7 +283,7 @@ def run_dgo_cell(multi_pod: bool, out_dir: Path = ARTIFACTS) -> dict:
         step_fn = make_dgo_train_step(loss_fn, enc, mesh,
                                       pop_axes=pop_axes, alpha=2.0)
         rep = NamedSharding(mesh, jax.sharding.PartitionSpec())
-        mapped = jax.jit(jax.shard_map(
+        mapped = jax.jit(shard_map(
             step_fn, mesh=mesh,
             in_specs=(jax.sharding.PartitionSpec(),) * 5,
             out_specs=(jax.sharding.PartitionSpec(),) * 3,

@@ -16,6 +16,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size, shard_map
+
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
@@ -42,7 +44,7 @@ def compressed_psum(x: jax.Array, err: jax.Array, axis: str):
     requant = jnp.clip(jnp.round(target / max_scale), -127, 127)
     new_err = target - requant * max_scale
     summed = jax.lax.psum(requant.astype(jnp.int32), axis)
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     return summed.astype(jnp.float32) * max_scale / n, new_err
 
 
@@ -70,7 +72,7 @@ def make_compressed_dp_grad_fn(loss_fn, mesh, axis: str = "data"):
 
     pspec = P()
     bspec = P(axis)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         shard_fn, mesh=mesh,
         in_specs=(pspec, bspec, pspec),
         out_specs=(pspec, pspec, pspec),

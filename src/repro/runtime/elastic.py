@@ -11,7 +11,8 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, mesh_from_devices
 
 
 def remesh(n_devices: int, model_parallel: int = 1):
@@ -20,7 +21,7 @@ def remesh(n_devices: int, model_parallel: int = 1):
     devices = jax.devices()[:usable]
     import numpy as np
     arr = np.array(devices).reshape(usable // model_parallel, model_parallel)
-    return jax.sharding.Mesh(arr, ("data", "model"),
+    return mesh_from_devices(arr, ("data", "model"),
                              axis_types=(AxisType.Auto, AxisType.Auto))
 
 

@@ -31,9 +31,9 @@ def test_distributed_dgo_matches_single_device():
         from repro.core.dgo import dgo_resolution_step
         from repro.core.encoding import encode, decode
         from repro.core.objectives import rastrigin
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
         obj = rastrigin(2)
         x0 = jnp.asarray([3.1, -2.2])
         bits, val, hist = run_distributed(obj.fn, obj.encoding, mesh, x0,
@@ -55,9 +55,9 @@ def test_distributed_dgo_quorum_survives_shard_loss():
         import jax, jax.numpy as jnp, json
         from repro.core.distributed import run_distributed
         from repro.core.objectives import rastrigin
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(AxisType.Auto,))
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",),
+                         axis_types=(AxisType.Auto,))
         obj = rastrigin(2)
         mask = jnp.asarray([True, False, True, True, False, True, True, True])
         bits, val, hist = run_distributed(
@@ -76,8 +76,8 @@ def test_virtual_processing_chunking_invariance():
         import jax, jax.numpy as jnp, json
         from repro.core.distributed import run_distributed
         from repro.core.objectives import ackley
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         obj = ackley(2)
         vals = []
         for vb in (4, 16, 256):
@@ -96,8 +96,8 @@ def test_compressed_dp_gradients_close_to_exact():
         import jax, jax.numpy as jnp, numpy as np, json
         from repro.runtime.compress import (
             make_compressed_dp_grad_fn, init_error_state)
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         w = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 4))}
         x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
         y = jax.random.normal(jax.random.PRNGKey(2), (32, 4))
@@ -119,10 +119,11 @@ def test_compressed_dp_gradients_close_to_exact():
 def test_subspace_dgo_train_step_descends():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, json
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_mesh, shard_map
         from repro.core.encoding import Encoding, encode, decode
         from repro.core.subspace import make_dgo_train_step, apply_subspace
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
         # tiny regression model trained by subspace DGO
         w0 = {"w": jnp.zeros((8, 1))}
         xs = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
@@ -133,7 +134,7 @@ def test_subspace_dgo_train_step_descends():
         enc = Encoding(n_vars=8, bits=6, lo=-2.0, hi=2.0)
         key = jax.random.PRNGKey(7)
         step_fn = make_dgo_train_step(loss, enc, mesh, alpha=4.0)
-        mapped = jax.jit(jax.shard_map(
+        mapped = jax.jit(shard_map(
             step_fn, mesh=mesh,
             in_specs=(P(), P(), P(), P(), P()),
             out_specs=(P(), P(), P()), check_vma=False))

@@ -1,8 +1,10 @@
-"""Property tests for the bit-level substrate (hypothesis)."""
+"""Property tests for the bit-level substrate (hypothesis, optional) plus
+deterministic fixed-case versions that run without it."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from conftest import given, settings, st
 
 from repro.core.encoding import (
     Encoding, binary_to_gray, decode, encode, gray_to_binary,
@@ -78,3 +80,52 @@ def test_chunked_generation_matches_full(n):
     ids = jnp.asarray([0, n // 2, 2 * n - 2])
     chunk = generate_children(parent, ids)
     assert jnp.array_equal(chunk, full[ids])
+
+
+# ---------------------------------------------------------------------------
+# deterministic fixed-case versions — always run, hypothesis or not
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 31, 32, 33, 63, 64, 100, 200])
+def test_gray_involution_fixed(n):
+    b = jax.random.bernoulli(jax.random.PRNGKey(n), 0.5, (n,)).astype(jnp.int8)
+    assert jnp.array_equal(gray_to_binary(binary_to_gray(b)), b)
+    assert jnp.array_equal(binary_to_gray(gray_to_binary(b)), b)
+
+
+@pytest.mark.parametrize("n", [1, 7, 32, 33, 63, 65, 128, 200])
+def test_pack_unpack_roundtrip_fixed(n):
+    b = jax.random.bernoulli(jax.random.PRNGKey(n), 0.5, (n,)).astype(jnp.int8)
+    assert jnp.array_equal(unpack_bits(pack_bits(b), n), b)
+
+
+@pytest.mark.parametrize("n_vars,bits", [(1, 2), (2, 8), (9, 7), (12, 10)])
+def test_encode_decode_quantization_fixed(n_vars, bits):
+    enc = Encoding(n_vars=n_vars, bits=bits, lo=-3.0, hi=5.0)
+    x = jnp.linspace(-3.0, 5.0, n_vars)
+    err = jnp.max(jnp.abs(decode(encode(x, enc), enc) - x))
+    lattice = (enc.hi - enc.lo) / (enc.levels - 1)
+    assert float(err) <= lattice / 2 + 1e-6
+
+
+@pytest.mark.parametrize("n", [2, 3, 9, 63, 128, 300])
+def test_segment_tree_shape_fixed(n):
+    t = segment_table(n)
+    assert t.shape == (2 * n - 1, 2)
+    assert t[0, 0] == 0 and t[0, 1] == n
+    sizes = t[:, 1] - t[:, 0]
+    assert (sizes >= 1).all()
+    assert (sizes == 1).sum() == n
+
+
+@pytest.mark.parametrize("n", [2, 9, 63, 100])
+def test_children_distinct_and_involutive_fixed(n):
+    parent = jax.random.bernoulli(
+        jax.random.PRNGKey(n), 0.5, (n,)).astype(jnp.int8)
+    pop = generate_population(parent)
+    assert pop.shape == (2 * n - 1, n)
+    as_int = np.packbits(np.asarray(pop), axis=1)
+    assert len({r.tobytes() for r in as_int}) == 2 * n - 1
+    ids = jnp.arange(2 * n - 1)
+    back = jax.vmap(lambda c, i: generate_children(c, i[None])[0])(pop, ids)
+    assert jnp.array_equal(back, jnp.broadcast_to(parent, pop.shape))

@@ -1,12 +1,13 @@
 """Sharding rules: divisibility fallback, axis uniqueness, cache heuristics."""
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.launch.sharding import SERVE_RULES, TRAIN_RULES, spec_for
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH1 = abstract_mesh((16, 16), ("data", "model"))
+MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_mlp_weight_fsdp_tp():
