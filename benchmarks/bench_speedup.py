@@ -113,6 +113,22 @@ def measure_fused_engine_speedup(n_vars: int, bits: int = 7,
     return t_seq, t_fused, t_seq / t_fused
 
 
+def write_json(rows, path, bench: str):
+    """Persist ``(name, value, note)`` rows as the machine-readable
+    BENCH_*.json artifact tracked across PRs (CI uploads these)."""
+    import json
+
+    payload = {
+        "bench": bench,
+        "n_devices": jax.device_count(),
+        "backend": jax.default_backend(),
+        "metrics": {name: {"value": float(value), "note": note}
+                    for name, value, note in rows},
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+
+
 def run(fast: bool = True):
     t_seq, t_vec, speedup = measure_simd_speedup(iters=8 if fast else 30)
     out = [
@@ -136,5 +152,17 @@ def run(fast: bool = True):
 
 
 if __name__ == "__main__":
-    for name, val, note in run(fast=False):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke profile (fewer iterations/reps)")
+    ap.add_argument("--json", default="BENCH_speedup.json",
+                    help="path for the machine-readable artifact "
+                         "('' disables)")
+    args = ap.parse_args()
+    rows = run(fast=args.fast)
+    for name, val, note in rows:
         print(f"{name},{val},{note}")
+    if args.json:
+        write_json(rows, args.json, bench="speedup")

@@ -24,6 +24,7 @@ def main() -> None:
     from benchmarks import (
         bench_ann,
         bench_complexity,
+        bench_distributed,
         bench_speedup,
         bench_testfunctions,
         roofline,
@@ -31,6 +32,7 @@ def main() -> None:
     benches = {
         "complexity": bench_complexity.run,      # paper Fig. 6
         "speedup": bench_speedup.run,            # paper Table 1 / Fig. 7
+        "distributed": bench_distributed.run,    # driver/loop comparison
         "testfunctions": bench_testfunctions.run,  # paper Figs. 2-3 + text
         "ann": bench_ann.run,                    # paper Figs. 4-5
         "roofline": roofline.run,                # scale deliverable

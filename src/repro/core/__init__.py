@@ -2,5 +2,12 @@
 from repro.core.encoding import Encoding, binary_to_gray, decode, encode, gray_to_binary
 from repro.core.population import generate_children, generate_population, population_size
 from repro.core.dgo import DGOConfig, DGOResult, dgo_iteration, run, run_clustered, run_sequential
-from repro.core.distributed import make_distributed_step, run_distributed
+from repro.core.distributed import (
+    BatchedResult,
+    make_distributed_engine,
+    make_distributed_engine_batched,
+    make_distributed_step,
+    run_distributed,
+    run_distributed_batched,
+)
 from repro.core.subspace import apply_subspace, make_dgo_train_step, materialize_winner

@@ -404,19 +404,33 @@ def run(f: Callable[[jax.Array], jax.Array],
 def run_clustered(f: Callable[[jax.Array], jax.Array],
                   cfg: DGOConfig,
                   n_clusters: int,
-                  key: jax.Array) -> DGOResult:
+                  key: jax.Array | None = None,
+                  x0s: jax.Array | None = None) -> DGOResult:
     """Independent DGO instances from random starts; best-of wins.
 
     vmap of the fused engine over the cluster axis — every cluster runs its
     entire resolution schedule inside the same compiled while_loop; on
     hardware the cluster axis is laid over spare devices (see
     core/distributed.py: the pod axis).
+
+    ``x0s`` (n_clusters, n_vars) pins heterogeneous start points (the
+    single-device analogue of ``distributed.run_distributed_batched``'s
+    batched-request path); omitted, starts are drawn uniformly from
+    ``key``.
     """
     enc0 = cfg.encoding
     st = _engine_static(cfg)
-    keys = jax.random.split(key, n_clusters)
-    x0s = jax.vmap(lambda k: jax.random.uniform(
-        k, (enc0.n_vars,), minval=enc0.lo, maxval=enc0.hi))(keys)
+    if x0s is None:
+        if key is None:
+            raise ValueError("run_clustered needs either key or x0s")
+        keys = jax.random.split(key, n_clusters)
+        x0s = jax.vmap(lambda k: jax.random.uniform(
+            k, (enc0.n_vars,), minval=enc0.lo, maxval=enc0.hi))(keys)
+    else:
+        x0s = jnp.asarray(x0s, jnp.float32)
+        if x0s.shape[0] != n_clusters:
+            raise ValueError(f"x0s has {x0s.shape[0]} rows for "
+                             f"n_clusters={n_clusters}")
     bits0 = jnp.int32(st.res_bits[0])
     levels0 = _encode_levels(x0s, bits0, st)                 # (C, n_vars)
     vals0 = jax.vmap(f)(_decode_levels(levels0, bits0, st))

@@ -18,21 +18,78 @@ Mapping (DESIGN.md §2):
   dropped / straggling PE  -> shard quorum mask: masked shards contribute
                               +inf; the round proceeds and the missed
                               children are regenerated next round (DESIGN §6)
+
+Drivers (DESIGN §2/§6 mapping of the *outer* loop):
+
+  MP-1 running the whole generate->evaluate->rank loop on the PE array
+    -> ``driver="device"`` (default): the iteration loop is a
+       ``lax.while_loop`` traced *inside* ``shard_map``, carrying
+       ``(bits, val, iters, trace)``. Convergence ("no child improved")
+       is decided on device from the replicated reduce result; the
+       monotone value history lives in a device trace buffer and is
+       fetched once after the loop exits. One dispatch per optimization
+       instead of one per iteration — the serial fraction that capped the
+       host-driven loop (dispatch latency + two scalar syncs/iter) is gone.
+  host-orchestrated stepping (checkpoint / failure-injection / elastic
+  re-mesh interposing between rounds)
+    -> ``driver="host"``: the retained per-iteration Python loop. Only the
+       ``bool(improved)`` convergence scalar syncs per iteration; the value
+       history is accumulated on device and fetched in ONE transfer at the
+       end. ``FailureInjector`` (runtime/failure.py) can interpose between
+       iterations; an injected failure drops one shard from the quorum via
+       ``runtime/elastic.py`` and the loop continues — DGO's native
+       elasticity (children on dead shards regenerate next round).
+  MP-1 cluster mode over concurrent requests
+    -> ``run_distributed_batched``: R independent restarts (heterogeneous
+       start points) advance in lockstep inside ONE while_loop — the
+       restart axis rides the shard-local inner loop as a leading batch
+       dimension, sharing a single compilation and a single reduce per
+       iteration (throughput measured over populations of runs, not one
+       trajectory).
 """
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Callable, Sequence
+from functools import lru_cache, partial
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
 from repro.core.encoding import Encoding, decode
-from repro.core.population import generate_children
-from repro.kernels.popstep.ops import population_step_ids
+from repro.core.population import generate_children, segment_patterns
+from repro.kernels.popstep.ops import backend, population_step_ids
+
+_INNERS = ("fused", "popstep", "jnp")
+
+
+def _resolve_inner(inner: str | None) -> str:
+    """``None`` -> backend default: the fused Pallas kernel on TPU
+    (VMEM-resident tiles, sequential-grid fold guaranteed by mosaic), the
+    hoisted-pattern XLA inner everywhere else (lowest per-iteration op
+    count — the while_loop body is latency-bound on CPU, and the compiled
+    Pallas path is not yet race-free on Triton, see
+    ``kernels.popstep.ops.resolve_interpret``)."""
+    if inner is None:
+        return "popstep" if backend() == "tpu" else "fused"
+    if inner not in _INNERS:
+        raise ValueError(f"inner must be one of {_INNERS}, got {inner!r}")
+    return inner
+
+
+def _decode_matrix(enc: Encoding) -> np.ndarray:
+    """(N, n_vars) weights: bit-string @ matrix = per-var lattice levels
+    (MSB-first powers of two < 2^24, exact in f32 — the affine map to
+    [lo, hi] is applied afterwards so rounding matches ``encoding.decode``
+    bit-for-bit and every inner picks identical argmin winners)."""
+    w = np.zeros((enc.n_bits, enc.n_vars), np.float32)
+    weights = 2.0 ** np.arange(enc.bits - 1, -1, -1)
+    for v in range(enc.n_vars):
+        w[v * enc.bits: (v + 1) * enc.bits, v] = weights
+    return w
 
 
 def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
@@ -50,90 +107,289 @@ def _axis_prod(mesh: Mesh, axis_names: Sequence[str]) -> int:
     return n
 
 
+class _ShardPlan(NamedTuple):
+    """Static population-distribution geometry shared by every driver."""
+
+    n_shards: int
+    pop: int
+    chunk: int       # children per shard (paper's virtual-processing count)
+    n_blocks: int    # inner scan length
+    block: int       # children per scan step
+
+
+def _shard_plan(enc: Encoding, mesh: Mesh, pop_axes: Sequence[str],
+                virtual_block: int) -> _ShardPlan:
+    n_shards = _axis_prod(mesh, pop_axes)
+    pop = enc.population
+    chunk = math.ceil(pop / n_shards)
+    n_blocks = math.ceil(chunk / virtual_block)
+    block = math.ceil(chunk / n_blocks)
+    return _ShardPlan(n_shards, pop, chunk, n_blocks, block)
+
+
+def _build_shard_step(f_batch: Callable[[jax.Array], jax.Array],
+                      enc: Encoding, plan: _ShardPlan,
+                      pop_axes: Sequence[str], inner: str,
+                      interpret: bool | None, tile_p: int | None):
+    """One DGO iteration as seen from inside ``shard_map``.
+
+    Returns ``prepare(quorum_mask) -> step(parent_bits, parent_val, it) ->
+    (new_bits, new_val, improved)``. The two-stage shape is deliberate:
+    the quorum lookup and (for the "fused" inner) the pattern/weight
+    tables are bound in ``prepare``, OUTSIDE the engine's while_loop, so
+    the per-iteration body is only generate-XOR, decode-matmul, evaluate,
+    argmin and one packed all_gather.
+
+    ``it`` rotates the virtual-processor assignment: on round ``it`` the
+    shard covers slot ``(shard + it) % n_shards``. With every shard alive
+    the union of slots is the whole population each round, so rotation is
+    invisible; with a dead shard it guarantees no child is *permanently*
+    shadowed — the missed children really are "regenerated next round"
+    (DESIGN §6) by a surviving shard, so a masked mesh still converges to
+    the all-alive optimum (just more slowly). Winner selection is
+    lexicographic (value, child id) so the result is independent of which
+    shard evaluated which slot.
+    """
+    pop, chunk, n_blocks, block = (plan.pop, plan.chunk, plan.n_blocks,
+                                   plan.block)
+    n_shards = plan.n_shards
+    step_kwargs = {} if tile_p is None else {"tile_p": tile_p}
+    if inner == "fused":
+        pat = jnp.asarray(segment_patterns(enc.n_bits))   # (2N-1, N)
+        wmat = jnp.asarray(_decode_matrix(enc))           # (N, n_vars)
+        scale = (enc.hi - enc.lo) / (enc.levels - 1)
+
+    def prepare(quorum_mask: jax.Array):
+        shard = _flat_axis_index(pop_axes)
+        alive = quorum_mask[shard]
+
+        def block_best(parent_bits, ids):
+            """(best value, best id) of one id block, ties -> smallest id."""
+            valid = (ids < pop) & alive
+            ids_c = jnp.minimum(ids, pop - 1)
+            if inner == "popstep":
+                return population_step_ids(f_batch, parent_bits, ids_c,
+                                           enc, valid=valid,
+                                           interpret=interpret,
+                                           **step_kwargs)
+            if inner == "fused":
+                children = jnp.bitwise_xor(parent_bits[None, :], pat[ids_c])
+                xs = enc.lo + (children.astype(jnp.float32) @ wmat) * scale
+            else:
+                children = generate_children(parent_bits, ids_c)
+                xs = decode(children, enc)                # (block, n)
+            vals = jnp.where(valid, f_batch(xs), jnp.inf)
+            v = jnp.min(vals)
+            gid = jnp.min(jnp.where(vals == v, ids_c, pop))
+            return v, gid
+
+        def local_best(parent_bits: jax.Array, it: jax.Array):
+            """This shard's (best value, best global child id) on round
+            ``it`` — covering slot (shard + it) % n_shards."""
+            base = jax.lax.rem(shard + it, n_shards) * chunk
+            if n_blocks == 1:   # no scan machinery for the common case
+                return block_best(parent_bits, base + jnp.arange(chunk))
+
+            def eval_block(carry, b):
+                best_val, best_id = carry
+                v, gid = block_best(parent_bits,
+                                    base + b * block + jnp.arange(block))
+                better = jnp.logical_or(
+                    v < best_val, (v == best_val) & (gid < best_id))
+                return (jnp.where(better, v, best_val),
+                        jnp.where(better, gid, best_id)), None
+
+            init = (jnp.asarray(jnp.inf, jnp.float32), jnp.int32(pop))
+            (v, gid), _ = jax.lax.scan(eval_block, init,
+                                       jnp.arange(n_blocks))
+            return v, gid
+
+        def step(parent_bits: jax.Array, parent_val: jax.Array,
+                 it: jax.Array):
+            local_val, local_id = local_best(parent_bits, it)
+
+            # cube-reduction analogue: ONE gather of packed (val, id) pairs
+            # over the pop axes — ids are < 2N-1 << 2^24 so the f32
+            # round-trip is exact, and a single collective halves the
+            # per-iteration rendezvous cost inside the engine's while_loop
+            packed = jnp.stack([local_val, local_id.astype(jnp.float32)])
+            for ax in pop_axes:
+                packed = jax.lax.all_gather(packed, ax)
+            packed = packed.reshape(-1, 2)
+            win_val = jnp.min(packed[:, 0])
+            ids = packed[:, 1].astype(jnp.int32)
+            win_id = jnp.min(jnp.where(packed[:, 0] == win_val, ids, pop))
+
+            improved = win_val < parent_val
+            # regenerate the winner locally from its id (no bit broadcast)
+            if inner == "fused":
+                win_bits = jnp.bitwise_xor(
+                    parent_bits, pat[jnp.minimum(win_id, pop - 1)])
+            else:
+                win_bits = generate_children(
+                    parent_bits, jnp.minimum(win_id, pop - 1)[None])[0]
+            new_bits = jnp.where(improved, win_bits,
+                                 parent_bits).astype(jnp.int8)
+            new_val = jnp.where(improved, win_val, parent_val)
+            return new_bits, new_val, improved
+
+        return step
+
+    return prepare
+
+
 def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
                           enc: Encoding,
                           mesh: Mesh,
                           pop_axes: Sequence[str] = ("data",),
                           virtual_block: int = 256,
                           donate: bool = False,
-                          inner: str = "popstep",
-                          interpret: bool = True):
+                          inner: str | None = None,
+                          interpret: bool | None = None,
+                          tile_p: int | None = None):
     """Build a jitted one-iteration DGO step sharded over ``pop_axes``.
 
-    Returns ``step(parent_bits, parent_val, quorum_mask) ->
+    Returns ``step(parent_bits, parent_val, quorum_mask, it) ->
     (new_bits, new_val, improved)`` where ``quorum_mask`` is a (n_shards,)
-    bool array (all-True for the no-failure path).
+    bool array (all-True for the no-failure path) and ``it`` is the round
+    number, which rotates the shard->children assignment so a persistently
+    masked shard does not permanently shadow the same children (pass 0 for
+    a fixed assignment).
 
     ``f_batch``: (B, n_vars) -> (B,), pure; evaluated inside each shard, so if
     the objective itself is model-sharded its collectives must use *other*
     mesh axes than ``pop_axes`` (the LM path passes a model-axis-sharded loss).
 
     ``inner`` selects the per-shard engine for each virtual-processing
-    block: ``"popstep"`` (default) runs the fused Pallas kernel — generate,
-    decode, evaluate and block-argmin in one VMEM pass per tile
-    (``kernels/popstep``); ``"jnp"`` keeps the unfused XLA pipeline (also
-    the fallback for objectives whose jaxpr Pallas cannot trace).
+    block: ``"fused"`` generates children by hoisted XOR patterns
+    (``population.segment_patterns``) and decodes with one matmul — pure
+    XLA, minimal op count; ``"popstep"`` runs the fused Pallas kernel —
+    generate, decode, evaluate and block-argmin in one VMEM pass per tile
+    (``kernels/popstep``); ``"jnp"`` keeps the literal unfused pipeline
+    (also the fallback for objectives whose jaxpr Pallas cannot trace).
+    ``inner=None`` picks per backend ("fused" on CPU, "popstep" on
+    TPU/GPU).
+
+    ``interpret=None`` autodetects per backend (interpret on CPU, compiled
+    mosaic/triton elsewhere); ``tile_p=None`` uses the kernel default — pass
+    ``kernels.popstep.ops.autotune_tile_p(...)`` output to pin a tuned tile.
     """
-    if inner not in ("popstep", "jnp"):
-        raise ValueError(f"inner must be 'popstep' or 'jnp', got {inner!r}")
-    n_shards = _axis_prod(mesh, pop_axes)
-    pop = enc.population
-    chunk = math.ceil(pop / n_shards)
-    # inner virtual-processing blocks (paper's ceil((2n-1)/P) per PE)
-    n_blocks = math.ceil(chunk / virtual_block)
-    block = math.ceil(chunk / n_blocks)
+    inner = _resolve_inner(inner)
+    plan = _shard_plan(enc, mesh, pop_axes, virtual_block)
+    prepare = _build_shard_step(f_batch, enc, plan, pop_axes, inner,
+                                interpret, tile_p)
 
-    def shard_fn(parent_bits: jax.Array, parent_val: jax.Array,
-                 quorum_mask: jax.Array):
-        shard = _flat_axis_index(pop_axes)
-        base = shard * chunk
-        alive = quorum_mask[shard]
-
-        def eval_block(carry, b):
-            best_val, best_id = carry
-            ids = base + b * block + jnp.arange(block)
-            valid = (ids < pop) & alive
-            ids_c = jnp.minimum(ids, pop - 1)
-            if inner == "popstep":
-                v, gid = population_step_ids(f_batch, parent_bits, ids_c,
-                                             enc, valid=valid,
-                                             interpret=interpret)
-            else:
-                children = generate_children(parent_bits, ids_c)  # (block, N)
-                xs = decode(children, enc)                        # (block, n)
-                vals = jnp.where(valid, f_batch(xs), jnp.inf)
-                i = jnp.argmin(vals)
-                v, gid = vals[i], ids_c[i]
-            better = v < best_val
-            return (jnp.where(better, v, best_val),
-                    jnp.where(better, gid, best_id)), None
-
-        init = (jnp.asarray(jnp.inf, jnp.float32), jnp.int32(0))
-        (local_val, local_id), _ = jax.lax.scan(
-            eval_block, init, jnp.arange(n_blocks))
-
-        # cube-reduction analogue: gather tiny (val, id) pairs over pop axes
-        all_vals, all_ids = local_val, local_id
-        for ax in pop_axes:
-            all_vals = jax.lax.all_gather(all_vals, ax).reshape(-1)
-            all_ids = jax.lax.all_gather(all_ids, ax).reshape(-1)
-        w = jnp.argmin(all_vals)
-        win_val, win_id = all_vals[w], all_ids[w]
-
-        improved = win_val < parent_val
-        # regenerate the winner locally from its id (no bit broadcast needed)
-        win_bits = generate_children(parent_bits, win_id[None])[0]
-        new_bits = jnp.where(improved, win_bits, parent_bits).astype(jnp.int8)
-        new_val = jnp.where(improved, win_val, parent_val)
-        return new_bits, new_val, improved
+    def one_step(parent_bits, parent_val, quorum_mask, it=jnp.int32(0)):
+        return prepare(quorum_mask)(parent_bits, parent_val, it)
 
     replicated = P()
     mapped = shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(replicated, replicated, replicated),
+        one_step, mesh=mesh,
+        in_specs=(replicated, replicated, replicated, replicated),
         out_specs=(replicated, replicated, replicated),
         check_vma=False)
-    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+    jitted = jax.jit(mapped, donate_argnums=(0,) if donate else ())
+
+    def step(parent_bits, parent_val, quorum_mask, it=0):
+        return jitted(parent_bits, parent_val, quorum_mask,
+                      jnp.int32(it))
+
+    return step
+
+
+def make_distributed_engine(f_batch: Callable[[jax.Array], jax.Array],
+                            enc: Encoding,
+                            mesh: Mesh,
+                            pop_axes: Sequence[str] = ("data",),
+                            max_iters: int = 256,
+                            virtual_block: int = 256,
+                            inner: str | None = None,
+                            interpret: bool | None = None,
+                            tile_p: int | None = None):
+    """Build the on-device distributed engine: the ENTIRE fixed-resolution
+    loop as one ``lax.while_loop`` traced inside ``shard_map``.
+
+    Returns ``engine(x0, quorum_mask) -> (bits, val, iters, trace)`` with
+    ``trace`` a (max_iters + 1,) monotone best-value history (``trace[0]``
+    the starting value; entries past ``iters`` padded with the final
+    value). The initial encode/evaluation happens inside the program, so
+    one optimization is ONE dispatch; convergence — the all-gathered
+    winner failing to beat the parent — is decided on device from values
+    replicated across shards, so every shard exits the loop on the same
+    iteration and no per-iteration host round-trip exists.
+    """
+    from repro.core.encoding import encode
+
+    inner = _resolve_inner(inner)
+    plan = _shard_plan(enc, mesh, pop_axes, virtual_block)
+    prepare = _build_shard_step(f_batch, enc, plan, pop_axes, inner,
+                                interpret, tile_p)
+
+    n_shards = plan.n_shards
+
+    def shard_engine(x0, quorum_mask):
+        # initial encode + evaluation on device too: the engine call is the
+        # ONLY dispatch of the whole optimization
+        bits0 = encode(x0, enc)
+        val0 = f_batch(decode(bits0, enc)[None])[0].astype(jnp.float32)
+        one_step = prepare(quorum_mask)   # loop-invariants hoisted here
+        # all shards alive -> one non-improving round proves a true stall;
+        # with dead shards a child may be shadowed this round, so require a
+        # full rotation cycle of failures before declaring convergence
+        stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
+
+        def cond(s):
+            _, _, stalls, iters, _ = s
+            return jnp.logical_and(stalls < stall_limit, iters < max_iters)
+
+        def body(s):
+            bits, val, stalls, iters, trace = s
+            new_bits, new_val, improved = one_step(bits, val, iters)
+            trace = trace.at[iters + 1].set(new_val)
+            stalls = jnp.where(improved, 0, stalls + 1)
+            return (new_bits, new_val, stalls, iters + 1, trace)
+
+        trace0 = jnp.full((max_iters + 1,), val0, jnp.float32)
+        s0 = (bits0, val0, jnp.int32(0), jnp.int32(0), trace0)
+        bits, val, _, iters, trace = jax.lax.while_loop(cond, body, s0)
+        idx = jnp.arange(max_iters + 1)
+        trace = jnp.where(idx <= iters, trace, val)   # pad for clean plots
+        return bits, val, iters, trace
+
+    replicated = P()
+    mapped = shard_map(
+        shard_engine, mesh=mesh,
+        in_specs=(replicated, replicated),
+        out_specs=(replicated,) * 4,
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+# engine/step caches: a (objective, mesh, config) pair compiles ONCE per
+# process — repeated serving calls (waves of requests, bench reps) reuse the
+# compiled program exactly like dgo.py's _cached_engine
+@lru_cache(maxsize=64)
+def _cached_step(f, enc, mesh, pop_axes, virtual_block, inner, interpret,
+                 tile_p):
+    return make_distributed_step(jax.vmap(f), enc, mesh, pop_axes,
+                                 virtual_block, inner=inner,
+                                 interpret=interpret, tile_p=tile_p)
+
+
+@lru_cache(maxsize=64)
+def _cached_engine(f, enc, mesh, pop_axes, max_iters, virtual_block, inner,
+                   interpret, tile_p):
+    return make_distributed_engine(jax.vmap(f), enc, mesh, pop_axes,
+                                   max_iters, virtual_block, inner=inner,
+                                   interpret=interpret, tile_p=tile_p)
+
+
+@lru_cache(maxsize=64)
+def _cached_engine_batched(f, enc, mesh, n_restarts, pop_axes, max_iters,
+                           virtual_block):
+    return make_distributed_engine_batched(jax.vmap(f), enc, mesh,
+                                           n_restarts, pop_axes, max_iters,
+                                           virtual_block)
 
 
 def run_distributed(f: Callable[[jax.Array], jax.Array],
@@ -144,25 +400,296 @@ def run_distributed(f: Callable[[jax.Array], jax.Array],
                     max_iters: int = 256,
                     virtual_block: int = 256,
                     quorum_mask=None,
-                    inner: str = "popstep",
-                    interpret: bool = True):
-    """Host-driven distributed DGO at a fixed resolution (loop on host so
-    failure injection / elastic re-mesh can interpose between iterations)."""
+                    inner: str | None = None,
+                    interpret: bool | None = None,
+                    driver: str = "device",
+                    injector=None,
+                    tile_p: int | None = None):
+    """Distributed DGO at a fixed resolution.
+
+    ``driver="device"`` (default) runs the whole loop on device (see
+    ``make_distributed_engine``) and fetches the value history in one
+    transfer. ``driver="host"`` keeps the Python-stepped loop so host-side
+    policy can interpose between iterations: an optional ``injector``
+    (``runtime.failure.FailureInjector``; host driver only — the on-device
+    loop cannot interpose host policy, so pairing it with
+    ``driver="device"`` raises) is polled each round and an injected
+    failure removes one shard from the quorum
+    (``runtime.elastic.drop_shard``) instead of aborting — the surviving
+    shards regenerate the lost children next round; if failures exhaust
+    the quorum the loop stops and returns the best point found so far.
+    Even the host path avoids the old per-iteration ``float(val)`` sync:
+    values accumulate on device and only the ``bool(improved)``
+    convergence scalar crosses per iteration. Both drivers share the
+    stall rule: one non-improving round ends a full-quorum run, while a
+    degraded quorum needs a full rotation cycle (``n_shards`` consecutive
+    non-improving rounds) before a child can be declared unreachable.
+
+    Returns ``(bits, val, history)`` with ``history`` a Python list of
+    floats, ``history[0]`` the starting value.
+    """
     from repro.core.encoding import encode
 
-    f_batch = jax.vmap(f)
-    step = make_distributed_step(f_batch, enc, mesh, pop_axes, virtual_block,
-                                 inner=inner, interpret=interpret)
+    if driver not in ("device", "host"):
+        raise ValueError(f"driver must be 'device' or 'host', got {driver!r}")
+    if injector is not None and driver != "host":
+        raise ValueError("failure injection requires driver='host' — the "
+                         "on-device loop cannot interpose host policy")
+    pop_axes = tuple(pop_axes)
     n_shards = _axis_prod(mesh, pop_axes)
     if quorum_mask is None:
         quorum_mask = jnp.ones((n_shards,), bool)
 
+    if driver == "device":
+        try:
+            engine = _cached_engine(f, enc, mesh, pop_axes, max_iters,
+                                    virtual_block, inner, interpret, tile_p)
+        except TypeError:       # unhashable objective: compile uncached
+            engine = make_distributed_engine(
+                jax.vmap(f), enc, mesh, pop_axes, max_iters, virtual_block,
+                inner=inner, interpret=interpret, tile_p=tile_p)
+        bits, val, iters, trace = engine(jnp.asarray(x0, jnp.float32),
+                                         quorum_mask)
+        # ONE device->host transfer for the whole history
+        iters_h, trace_h = jax.device_get((iters, trace))
+        history = [float(v) for v in trace_h[: int(iters_h) + 1]]
+        return bits, val, history
+
     bits = encode(jnp.asarray(x0, jnp.float32), enc)
     val = f(decode(bits, enc))
-    history = [float(val)]
-    for _ in range(max_iters):
-        bits, val, improved = step(bits, val, quorum_mask)
-        history.append(float(val))
-        if not bool(improved):
+    try:
+        step = _cached_step(f, enc, mesh, pop_axes, virtual_block, inner,
+                            interpret, tile_p)
+    except TypeError:
+        step = make_distributed_step(jax.vmap(f), enc, mesh, pop_axes,
+                                     virtual_block, inner=inner,
+                                     interpret=interpret, tile_p=tile_p)
+    if injector is not None:
+        from repro.runtime.elastic import drop_shard
+        from repro.runtime.failure import SimulatedFailure
+    full_quorum = bool(np.asarray(quorum_mask).all())
+    vals = [val]
+    stalls = 0
+    for it in range(max_iters):
+        if injector is not None:
+            try:
+                injector.maybe_fail(it)
+            except SimulatedFailure:
+                try:
+                    quorum_mask = drop_shard(quorum_mask)
+                    full_quorum = False
+                except RuntimeError:    # every shard lost: stop with the
+                    break               # best point found so far
+        bits, val, improved = step(bits, val, quorum_mask, it)
+        vals.append(val)
+        # same stall rule as the device engine: a degraded quorum needs a
+        # full rotation cycle of failures before convergence is declared
+        stalls = 0 if bool(improved) else stalls + 1
+        if stalls >= (1 if full_quorum else n_shards):
             break
+    # ONE bulk device->host fetch of already-materialized scalars at the
+    # end instead of a float(val) round-trip inside the loop
+    history = [float(v) for v in jax.device_get(vals)]
     return bits, val, history
+
+
+# ---------------------------------------------------------------------------
+# batched multi-start engine (paper's cluster mode over the mesh)
+# ---------------------------------------------------------------------------
+
+def _build_shard_step_batched(f_batch: Callable[[jax.Array], jax.Array],
+                              enc: Encoding, plan: _ShardPlan,
+                              pop_axes: Sequence[str], n_restarts: int):
+    """Batched twin of ``_build_shard_step``: a leading restart axis R rides
+    the shard-local inner loop; ONE all_gather per iteration carries all R
+    (value, id) pairs. Always the hoisted-pattern "fused" inner — child
+    generation for all R parents is a single broadcast XOR against the
+    shard's static patterns, decode one (R*chunk, N) matmul."""
+    pop, chunk, n_blocks, block = (plan.pop, plan.chunk, plan.n_blocks,
+                                   plan.block)
+    n_shards = plan.n_shards
+    pat = jnp.asarray(segment_patterns(enc.n_bits))       # (2N-1, N)
+    wmat = jnp.asarray(_decode_matrix(enc))               # (N, n_vars)
+    scale = (enc.hi - enc.lo) / (enc.levels - 1)
+
+    def prepare(quorum_mask: jax.Array):
+        shard = _flat_axis_index(pop_axes)
+        alive = quorum_mask[shard]
+
+        def local_best_block(parent_bits, ids):
+            """Ties -> smallest id, matching the single-restart builder."""
+            valid = (ids < pop) & alive
+            ids_c = jnp.minimum(ids, pop - 1)
+            b = ids.shape[0]
+            children = jnp.bitwise_xor(parent_bits[:, None, :],
+                                       pat[ids_c][None])  # (R, b, N)
+            flat = children.reshape(n_restarts * b, -1).astype(jnp.float32)
+            xs = enc.lo + (flat @ wmat) * scale           # (R*b, n_vars)
+            vals = jnp.where(valid[None, :],
+                             f_batch(xs).reshape(n_restarts, b), jnp.inf)
+            v = jnp.min(vals, axis=1)                     # (R,)
+            gid = jnp.min(jnp.where(vals == v[:, None], ids_c[None], pop),
+                          axis=1)
+            return v, gid
+
+        def one_step(parent_bits: jax.Array,   # (R, N) int8
+                     parent_val: jax.Array,    # (R,) f32
+                     it: jax.Array):           # () i32 — rotation round
+            base = jax.lax.rem(shard + it, n_shards) * chunk
+            if n_blocks == 1:
+                local_val, local_id = local_best_block(
+                    parent_bits, base + jnp.arange(chunk))
+            else:
+                def eval_block(carry, b):
+                    best_val, best_id = carry  # (R,), (R,)
+                    v, gid = local_best_block(
+                        parent_bits, base + b * block + jnp.arange(block))
+                    better = jnp.logical_or(
+                        v < best_val, (v == best_val) & (gid < best_id))
+                    return (jnp.where(better, v, best_val),
+                            jnp.where(better, gid, best_id)), None
+
+                init = (jnp.full((n_restarts,), jnp.inf, jnp.float32),
+                        jnp.full((n_restarts,), pop, jnp.int32))
+                (local_val, local_id), _ = jax.lax.scan(
+                    eval_block, init, jnp.arange(n_blocks))
+
+            # one packed gather for ALL R restarts (ids exact in f32, see
+            # the single-restart builder)
+            packed = jnp.stack([local_val, local_id.astype(jnp.float32)])
+            for ax in pop_axes:
+                packed = jax.lax.all_gather(packed, ax)
+            packed = packed.reshape(-1, 2, n_restarts)
+            all_vals = packed[:, 0, :]                    # (S, R)
+            all_ids = packed[:, 1, :].astype(jnp.int32)
+            win_val = jnp.min(all_vals, axis=0)           # (R,)
+            win_id = jnp.min(jnp.where(all_vals == win_val[None], all_ids,
+                                       pop), axis=0)
+
+            improved = win_val < parent_val               # (R,)
+            win_bits = jnp.bitwise_xor(
+                parent_bits, pat[jnp.minimum(win_id, pop - 1)])
+            new_bits = jnp.where(improved[:, None], win_bits,
+                                 parent_bits).astype(jnp.int8)
+            new_val = jnp.where(improved, win_val, parent_val)
+            return new_bits, new_val, improved
+
+        return one_step
+
+    return prepare
+
+
+def make_distributed_engine_batched(
+        f_batch: Callable[[jax.Array], jax.Array],
+        enc: Encoding,
+        mesh: Mesh,
+        n_restarts: int,
+        pop_axes: Sequence[str] = ("data",),
+        max_iters: int = 256,
+        virtual_block: int = 256):
+    """On-device engine over R lockstep restarts — one while_loop, one
+    compilation, one reduce per iteration for the whole batch.
+
+    Returns ``engine(x0s (R, n_vars), quorum_mask) ->
+    (bits (R,N), vals (R,), iters (R,), trace (R, max_iters+1))``.
+    Restarts that stall stop mutating (their bits/val/trace freeze and
+    their iteration counter stops) while the loop continues until every
+    restart has stalled or ``max_iters`` is hit.
+    """
+    from repro.core.encoding import encode
+
+    plan = _shard_plan(enc, mesh, pop_axes, virtual_block)
+    prepare = _build_shard_step_batched(f_batch, enc, plan, pop_axes,
+                                        n_restarts)
+
+    n_shards = plan.n_shards
+
+    def shard_engine(x0s, quorum_mask):
+        bits0 = encode(x0s, enc)                          # (R, N)
+        vals0 = f_batch(decode(bits0, enc)).astype(jnp.float32)
+        one_step = prepare(quorum_mask)
+        # same stall rule as the single-restart engine, per restart
+        stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
+
+        def cond(s):
+            _, _, stalls, it, _, _ = s
+            return jnp.logical_and(jnp.any(stalls < stall_limit),
+                                   it < max_iters)
+
+        def body(s):
+            bits, vals, stalls, it, iters, trace = s
+            live = stalls < stall_limit                   # (R,)
+            nb, nv, improved = one_step(bits, vals, it)
+            bits = jnp.where(live[:, None], nb, bits)
+            vals = jnp.where(live, nv, vals)
+            iters = iters + live.astype(jnp.int32)
+            trace = trace.at[:, it + 1].set(
+                jnp.where(live, vals, trace[:, it]))
+            stalls = jnp.where(live & improved, 0,
+                               stalls + live.astype(jnp.int32))
+            return bits, vals, stalls, it + 1, iters, trace
+
+        trace0 = jnp.tile(vals0[:, None], (1, max_iters + 1))
+        s0 = (bits0, vals0,
+              jnp.zeros((n_restarts,), jnp.int32), jnp.int32(0),
+              jnp.zeros((n_restarts,), jnp.int32), trace0)
+        bits, vals, _, _, iters, trace = jax.lax.while_loop(cond, body, s0)
+        idx = jnp.arange(max_iters + 1)[None, :]
+        trace = jnp.where(idx <= iters[:, None], trace, vals[:, None])
+        return bits, vals, iters, trace
+
+    replicated = P()
+    mapped = shard_map(
+        shard_engine, mesh=mesh,
+        in_specs=(replicated, replicated),
+        out_specs=(replicated,) * 4,
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+class BatchedResult(NamedTuple):
+    """Result of ``run_distributed_batched`` (R concurrent restarts)."""
+
+    bits: jax.Array        # (R, N) int8 — final parent per restart
+    values: jax.Array      # (R,) f32
+    iterations: jax.Array  # (R,) i32 — steps until stall, per restart
+    trace: np.ndarray      # (R, T) f32 — monotone value history per restart
+    best: int              # index of the winning restart
+
+
+def run_distributed_batched(f: Callable[[jax.Array], jax.Array],
+                            enc: Encoding,
+                            mesh: Mesh,
+                            x0s: jax.Array,
+                            pop_axes: Sequence[str] = ("data",),
+                            max_iters: int = 256,
+                            virtual_block: int = 256,
+                            quorum_mask=None) -> BatchedResult:
+    """Batched multi-start distributed DGO: R restarts from ``x0s``
+    (R, n_vars) share one compiled on-device while_loop.
+
+    This is the batched-request serving path (launch/serve.py --dgo): R
+    concurrent requests amortize the per-iteration reduce and the dispatch
+    to near single-run wall-clock (see benchmarks/bench_distributed.py).
+    """
+    x0s = jnp.asarray(x0s, jnp.float32)
+    if x0s.ndim != 2:
+        raise ValueError(f"x0s must be (R, n_vars), got {x0s.shape}")
+    n_restarts = x0s.shape[0]
+    pop_axes = tuple(pop_axes)
+    n_shards = _axis_prod(mesh, pop_axes)
+    if quorum_mask is None:
+        quorum_mask = jnp.ones((n_shards,), bool)
+
+    try:
+        engine = _cached_engine_batched(f, enc, mesh, n_restarts, pop_axes,
+                                        max_iters, virtual_block)
+    except TypeError:
+        engine = make_distributed_engine_batched(
+            jax.vmap(f), enc, mesh, n_restarts, pop_axes, max_iters,
+            virtual_block)
+    bits, vals, iters, trace = engine(x0s, quorum_mask)
+    iters_h, trace_np = jax.device_get((iters, trace))
+    return BatchedResult(bits=bits, values=vals, iterations=iters,
+                         trace=trace_np[:, : int(iters_h.max()) + 1],
+                         best=int(jnp.argmin(vals)))

@@ -51,6 +51,33 @@ def segment_table(n_bits: int) -> np.ndarray:
     return table
 
 
+@lru_cache(maxsize=None)
+def segment_patterns(n_bits: int) -> np.ndarray:
+    """(2N-1, N) int8: child c as a *binary-space* XOR pattern.
+
+    The paper's transformation (binary -> Gray, invert segment [s, e),
+    Gray -> binary) collapses algebraically: flipping Gray bit i toggles
+    every binary bit j >= i (prefix-XOR), so flipping the whole segment
+    toggles binary bit j by parity(|{i in [s,e): i <= j}|):
+
+        j <  s : unchanged
+        j in [s,e): flipped iff (j - s) even   (alternating 1010...)
+        j >= e : flipped iff (e - s) odd       (constant parity tail)
+
+    Hence ``child = parent ^ segment_patterns(N)[c]`` — one XOR, no Gray
+    round-trip, no per-child prefix scan. This is the loop-invariant form
+    the distributed engines hoist out of their on-device while_loop
+    (``core/distributed.py`` inner="fused"); ``generate_children`` remains
+    the literal three-step reference it is verified against.
+    """
+    table = segment_table(n_bits)
+    j = np.arange(n_bits)
+    s, e = table[:, :1], table[:, 1:]
+    inside = (j >= s) & (j < e)
+    pat = (inside & ((j - s) % 2 == 0)) | ((j >= e) & (((e - s) % 2) == 1))
+    return pat.astype(np.int8)
+
+
 def segment_mask(child_ids: jax.Array, n_bits: int) -> jax.Array:
     """(P,) child ids -> (P, N) int8 inversion masks via the segment tree."""
     table = jnp.asarray(segment_table(n_bits))

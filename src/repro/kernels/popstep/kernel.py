@@ -112,6 +112,29 @@ def _popstep_kernel(parent_gray_ref, start_ref, end_ref, ok_ref, *refs,
         idx_ref[...] = jnp.where(better, local_i, idx_ref[...])
 
 
+def _compile_kwargs() -> dict:
+    """Extra ``pallas_call`` kwargs for the *compiled* (non-interpret)
+    path, resolved per backend and guarded against API drift across
+    pallas releases — an unsupported knob degrades to defaults rather
+    than failing the call.
+
+    The popmin fold (stage 5) accumulates across grid cells, so the grid
+    axis must stay sequential: "arbitrary" dimension semantics on TPU.
+    """
+    if jax.default_backend() != "tpu":
+        return {}
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams", None)
+        if params_cls is not None:
+            return {"compiler_params": params_cls(
+                dimension_semantics=("arbitrary",))}
+    except (ImportError, TypeError):
+        pass
+    return {}
+
+
 @functools.partial(jax.jit, static_argnames=(
     "f_tile", "n_bits", "n_vars", "bits", "lo", "hi", "pop", "tile_p",
     "n_words", "interpret"))
@@ -121,15 +144,19 @@ def popstep(parent_gray: jax.Array, starts: jax.Array, ends: jax.Array,
             f_tile: Callable[..., jax.Array],
             n_bits: int, n_vars: int, bits: int, lo: float, hi: float,
             pop: int, tile_p: int = 128, n_words: int | None = None,
-            interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+            interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """(W,) parent Gray words + (P_pad,) segment bounds -> (min val, argmin).
 
     ``P_pad`` must be a multiple of ``tile_p`` (ops.py pads); rows with
     index >= ``pop`` — or with ``ok`` false — are masked to +inf inside the
     kernel. ``consts`` are closure-hoisted objective constants, replicated
     to every grid cell. The returned argmin is the row index into
-    ``starts``/``ends``.
+    ``starts``/``ends``. ``interpret=None`` resolves per backend: compiled
+    mosaic on TPU only — the stage-5 fold needs sequential grid cells,
+    which Triton does not guarantee (see ``ops.resolve_interpret``).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     w = n_words or parent_gray.shape[-1]
     p_total = starts.shape[0]
     assert p_total % tile_p == 0, (p_total, tile_p)
@@ -139,6 +166,8 @@ def popstep(parent_gray: jax.Array, starts: jax.Array, ends: jax.Array,
     def _bcast_spec(c):
         nd = c.ndim
         return pl.BlockSpec(c.shape, lambda i, _nd=nd: (0,) * _nd)
+
+    extra = {} if interpret else _compile_kwargs()
 
     mn, idx = pl.pallas_call(
         functools.partial(_popstep_kernel, f_tile=f_tile, n_words=w,
@@ -157,6 +186,7 @@ def popstep(parent_gray: jax.Array, starts: jax.Array, ends: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((1,), jnp.float32),
                    jax.ShapeDtypeStruct((1,), jnp.int32)],
         interpret=interpret,
+        **extra,
     )(parent_gray[None, :], starts[:, None].astype(jnp.int32),
       ends[:, None].astype(jnp.int32), ok[:, None].astype(jnp.int32),
       *consts)

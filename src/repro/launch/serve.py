@@ -8,6 +8,17 @@ as a batch and decoded token-by-token (greedy); throughput reported as
 decode tokens/s. The production-mesh serving path (TP-sharded params,
 batch-sharded cache, sequence-parallel long-context) is what dryrun.py
 lowers for the decode_32k / long_500k cells.
+
+DGO batched-request path (the optimization-as-a-service analogue):
+
+  PYTHONPATH=src python -m repro.launch.serve --dgo --problem rastrigin \\
+      --n-vars 2 --restarts 8 --waves 2
+
+Each wave is a batch of R optimization requests (random start points) run
+through ``run_distributed_batched`` — one compiled on-device while_loop
+advances all R restarts in lockstep over the population mesh, so wave
+wall-clock amortizes to near a single run; throughput reported as
+completed runs/s and population iterations/s.
 """
 from __future__ import annotations
 
@@ -22,9 +33,65 @@ from repro.configs import REGISTRY, get_arch, reduced
 from repro.models import init_model, lm_decode, lm_prefill
 
 
+def serve_dgo(args) -> None:
+    """Serve waves of batched DGO requests via the on-device engine."""
+    from repro.compat import AxisType, make_mesh
+    from repro.core import objectives
+    from repro.core.distributed import run_distributed_batched
+
+    factories = {"quadratic": lambda n: objectives.quadratic_nd(n),
+                 "rastrigin": lambda n: objectives.rastrigin(n),
+                 "ackley": lambda n: objectives.ackley(n),
+                 "griewank": lambda n: objectives.griewank(n)}
+    obj = factories[args.problem](args.n_vars)
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
+    enc = obj.encoding
+
+    key = jax.random.PRNGKey(args.seed)
+    total_runs = 0
+    total_iters = 0
+    t_serve = 0.0
+    best = float("inf")
+    for wave in range(args.waves):
+        key, kw = jax.random.split(key)
+        x0s = jax.random.uniform(kw, (args.restarts, enc.n_vars),
+                                 minval=enc.lo, maxval=enc.hi)
+        if wave == 0:   # compile wave — steady-state timing starts after
+            run_distributed_batched(obj.fn, enc, mesh, x0s,
+                                    max_iters=args.max_iters)
+        t0 = time.time()
+        res = run_distributed_batched(obj.fn, enc, mesh, x0s,
+                                      max_iters=args.max_iters)
+        jax.block_until_ready(res.values)
+        t_serve += time.time() - t0
+        total_runs += args.restarts
+        total_iters += int(jnp.sum(res.iterations))
+        best = min(best, float(res.values[res.best]))
+        print(f"[serve] wave {wave}: {args.restarts} runs, best "
+              f"{float(res.values[res.best]):.5f}")
+
+    print(json.dumps({
+        "problem": obj.name,
+        "runs_per_s": round(total_runs / max(t_serve, 1e-9), 1),
+        "iters_per_s": round(total_iters / max(t_serve, 1e-9), 1),
+        "total_runs": total_runs,
+        "best_value": best,
+    }))
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(REGISTRY))
+    ap.add_argument("--arch", default=None, choices=list(REGISTRY))
+    ap.add_argument("--dgo", action="store_true",
+                    help="serve batched DGO optimization requests instead "
+                         "of LM decode")
+    ap.add_argument("--problem", default="rastrigin",
+                    choices=["quadratic", "rastrigin", "ackley", "griewank"])
+    ap.add_argument("--n-vars", type=int, default=2)
+    ap.add_argument("--restarts", type=int, default=8,
+                    help="DGO requests per wave")
+    ap.add_argument("--max-iters", type=int, default=64)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -32,6 +99,12 @@ def main():
     ap.add_argument("--waves", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.dgo:
+        serve_dgo(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --dgo is given")
 
     arch = get_arch(args.arch)
     if args.reduced:

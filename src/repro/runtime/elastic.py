@@ -11,6 +11,7 @@ from __future__ import annotations
 import math
 
 import jax
+import numpy as np
 
 from repro.compat import AxisType, mesh_from_devices
 
@@ -23,6 +24,26 @@ def remesh(n_devices: int, model_parallel: int = 1):
     arr = np.array(devices).reshape(usable // model_parallel, model_parallel)
     return mesh_from_devices(arr, ("data", "model"),
                              axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def drop_shard(quorum_mask, victim: int | None = None):
+    """Remove one shard from a DGO quorum mask (lowest alive index by
+    default) — the elastic response to an injected/observed shard failure
+    in ``run_distributed(driver="host")``: no re-mesh, no restart; the
+    survivors regenerate the lost children next round.
+
+    Raises ``RuntimeError`` when the drop would leave an empty quorum.
+    """
+    alive = np.asarray(quorum_mask).copy()
+    if victim is None:
+        if not alive.any():
+            raise RuntimeError("quorum already empty")
+        victim = int(np.argmax(alive))
+    alive[victim] = False
+    if not alive.any():
+        raise RuntimeError("dropping shard %d empties the quorum" % victim)
+    import jax.numpy as jnp
+    return jnp.asarray(alive)
 
 
 def elastic_population_plan(n_bits: int, n_shards: int) -> dict:

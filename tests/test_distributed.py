@@ -70,6 +70,111 @@ def test_distributed_dgo_quorum_survives_shard_loss():
     assert json.loads(out.splitlines()[-1])["ok"]
 
 
+def test_on_device_driver_matches_host_driver():
+    """The lax.while_loop engine and the host-stepped loop are the same
+    algorithm: identical trajectory, value history and final value."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core.distributed import run_distributed
+        from repro.core.objectives import rastrigin
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        obj = rastrigin(2)
+        x0 = jnp.asarray([3.1, -2.2])
+        ref = None
+        for inner in ("fused", "popstep", "jnp"):
+            for driver in ("device", "host"):
+                b, v, h = run_distributed(obj.fn, obj.encoding, mesh, x0,
+                                          max_iters=48, inner=inner,
+                                          driver=driver)
+                if ref is None:
+                    ref = (float(v), h)
+                assert np.isclose(float(v), ref[0], atol=1e-6), \\
+                    (inner, driver, float(v), ref[0])
+                assert np.allclose(h, ref[1], atol=1e-6), (inner, driver)
+        assert len(ref[1]) >= 2 and ref[1][-1] < ref[1][0]
+        print(json.dumps({"ok": True}))
+    """)
+    assert json.loads(out.splitlines()[-1])["ok"]
+
+
+def test_quorum_masked_mesh_reaches_all_alive_optimum():
+    """Losing shards slows DGO down (fewer children per round) but must not
+    change where it converges on the paper's quadratic — the missing
+    children are a strict subset each round, regenerated deterministically."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core.distributed import run_distributed
+        from repro.core.objectives import quadratic_nd
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        obj = quadratic_nd(2)
+        x0 = jnp.asarray([4.0, -3.0])
+        _, v_full, _ = run_distributed(obj.fn, obj.encoding, mesh, x0,
+                                       max_iters=128)
+        mask = jnp.asarray([True, False, True, True,
+                            False, True, True, True])
+        _, v_masked, h = run_distributed(obj.fn, obj.encoding, mesh, x0,
+                                         max_iters=128, quorum_mask=mask)
+        assert float(v_masked) < h[0]
+        assert np.isclose(float(v_masked), float(v_full), atol=1e-5), \\
+            (float(v_masked), float(v_full))
+        print(json.dumps({"ok": True, "full": float(v_full),
+                          "masked": float(v_masked)}))
+    """)
+    assert json.loads(out.splitlines()[-1])["ok"]
+
+
+def test_batched_engine_matches_independent_runs():
+    """run_distributed_batched(R starts) == R independent run_distributed
+    trajectories (values AND histories), amortized into one compilation."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core.distributed import run_distributed, \\
+            run_distributed_batched
+        from repro.core.objectives import rastrigin
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        obj = rastrigin(2)
+        x0s = jnp.asarray([[3.1, -2.2], [1.0, 1.0],
+                           [-4.0, 2.0], [0.5, -0.5]])
+        res = run_distributed_batched(obj.fn, obj.encoding, mesh, x0s,
+                                      max_iters=48)
+        for r in range(x0s.shape[0]):
+            _, v, h = run_distributed(obj.fn, obj.encoding, mesh, x0s[r],
+                                      max_iters=48)
+            assert np.isclose(float(v), float(res.values[r]), atol=1e-6), \\
+                (r, float(v), float(res.values[r]))
+            assert int(res.iterations[r]) == len(h) - 1, r
+            assert np.allclose(res.trace[r][:len(h)], h, atol=1e-6), r
+        assert int(res.best) == int(jnp.argmin(res.values))
+        print(json.dumps({"ok": True}))
+    """)
+    assert json.loads(out.splitlines()[-1])["ok"]
+
+
+def test_host_driver_failure_injection_shrinks_quorum_and_descends():
+    """driver='host' + FailureInjector: injected failures drop shards from
+    the quorum (elastic response) instead of aborting the optimization."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, json
+        from repro.core.distributed import run_distributed
+        from repro.core.objectives import quadratic_nd
+        from repro.runtime.failure import FailureInjector
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        obj = quadratic_nd(2)
+        inj = FailureInjector(rate=0.5, seed=3)
+        _, v, h = run_distributed(obj.fn, obj.encoding, mesh,
+                                  jnp.asarray([4.0, -3.0]), max_iters=48,
+                                  driver="host", injector=inj)
+        assert inj.injected > 0
+        assert float(v) < h[0]
+        print(json.dumps({"ok": True, "injected": inj.injected}))
+    """)
+    assert json.loads(out.splitlines()[-1])["ok"]
+
+
 def test_virtual_processing_chunking_invariance():
     """NCUBE virtual processing: results identical for any virtual_block."""
     out = run_with_devices("""

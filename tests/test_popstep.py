@@ -79,6 +79,66 @@ def test_popstep_all_masked_returns_inf():
     assert np.isinf(float(v))
 
 
+def test_segment_patterns_match_literal_generation():
+    """The binary-space XOR-pattern identity (population.segment_patterns)
+    reproduces the literal Gray->invert->inverse-Gray pipeline exactly —
+    this is what the distributed engines hoist out of their while_loop."""
+    from repro.core.population import generate_population, segment_patterns
+
+    rng = np.random.default_rng(0)
+    for n_bits in (5, 16, 63, 99):
+        pat = segment_patterns(n_bits)
+        assert pat.shape == (2 * n_bits - 1, n_bits)
+        for seed in range(3):
+            parent = rng.integers(0, 2, n_bits).astype(np.int8)
+            ref = np.asarray(generate_population(jnp.asarray(parent)))
+            assert (ref == (parent[None, :] ^ pat)).all(), n_bits
+
+
+def test_autotune_tile_p_caches_in_process_and_on_disk(tmp_path,
+                                                       monkeypatch):
+    from repro.kernels.popstep import ops
+
+    cache = tmp_path / "tiles.json"
+    monkeypatch.setenv("REPRO_POPSTEP_TILE_CACHE", str(cache))
+    # force a cold cache for this key even if a prior test tuned it
+    ops._TILE_CACHE.clear()
+    ops._DISK_CACHE_LOADED = False
+
+    obj = quadratic_nd(3)
+    enc = obj.encoding
+    t = ops.autotune_tile_p(jax.vmap(obj.fn), enc,
+                            candidates=(32, 64), reps=1)
+    assert t in (32, 64)
+    interp = ops.resolve_interpret(None)
+    key = (ops.backend(), enc.n_vars, enc.bits, interp)
+    assert ops._TILE_CACHE[key] == t
+    import json
+    payload = json.loads(cache.read_text())
+    mode = "interpret" if interp else "compiled"
+    assert payload[f"{key[0]}:{key[1]}:{key[2]}:{mode}"] == t
+    # warm path: both caches hit without re-timing
+    assert ops.autotune_tile_p(jax.vmap(obj.fn), enc) == t
+    ops._TILE_CACHE.clear()
+    ops._DISK_CACHE_LOADED = False
+    assert ops.autotune_tile_p(jax.vmap(obj.fn), enc,
+                               candidates=(32, 64), reps=1) == t
+    # and tile_p="auto" routes population_step through the tuned width
+    parent = _parent(enc, seed=5)
+    v, i = population_step(jax.vmap(obj.fn), parent, enc, tile_p="auto")
+    rv, ri = popstep_ref(jax.vmap(obj.fn), parent, enc)
+    assert np.isclose(float(v), float(rv), rtol=1e-5, atol=1e-5)
+
+
+def test_resolve_interpret_backend_default():
+    from repro.kernels.popstep.ops import backend, resolve_interpret
+
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # compiled only where the kernel's sequential-grid fold is guaranteed
+    assert resolve_interpret(None) == (backend() != "tpu")
+
+
 @pytest.mark.parametrize("obj,max_bits", [
     (quadratic_nd(2), 10), (becker_lago(), 10), (sample_2d(), 10),
 ])
