@@ -7,48 +7,41 @@ scene). Reports final errors and the error-trace advantage of DGO.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig
 from repro.core.encoding import Encoding
-from repro.core.objectives import (
-    RS_NVARS, remote_sensing_objective, xor_objective,
-)
+from repro.core.objectives import RS_NVARS
+from repro.core.solver import Clustered, Fused, Problem, solve
 from repro.optim import gd_minimize
 
 
 def run(fast: bool = True):
     out = []
     # ---- XOR (Fig. 4) ----
-    obj = xor_objective()
-    res = dgo.run_clustered(
-        obj.fn, DGOConfig(encoding=Encoding(8, 2, -8.0, 8.0), max_bits=16),
-        n_clusters=16, key=jax.random.PRNGKey(0))
-    gd_vals = [float(gd_minimize(obj.fn, obj.encoding,
+    prob = Problem.get("xor").replace(encoding=Encoding(8, 2, -8.0, 8.0))
+    res = solve(prob, Clustered(n_clusters=16, max_bits=16), seed=0)
+    gd_vals = [float(gd_minimize(prob.fn, prob.encoding,
                                  jax.random.PRNGKey(s), steps=3000)[1])
                for s in range(4)]
-    out.append(("bench_ann.xor_dgo_mse", float(res.value),
+    out.append(("bench_ann.xor_dgo_mse", float(res.best_f),
                 f"trace_len={len(res.trace)}"))
     out.append(("bench_ann.xor_gd_best_mse", min(gd_vals),
                 "best of 4 starts"))
     out.append(("bench_ann.xor_dgo_beats_gd",
-                float(float(res.value) < min(gd_vals)), "paper Fig.4"))
+                float(float(res.best_f) < min(gd_vals)), "paper Fig.4"))
 
     # ---- remote sensing (Fig. 5) ----
-    obj = remote_sensing_objective(n_per_class=8 if fast else 32)
-    cfg = DGOConfig(encoding=obj.encoding, max_bits=5 if fast else 6,
-                    bits_step=1, max_iters_per_resolution=6 if fast else 24)
-    res = dgo.run(obj.fn, cfg, key=jax.random.PRNGKey(1))
-    gd_vals = [float(gd_minimize(obj.fn, obj.encoding,
+    prob = Problem.get("remote_sensing", n_per_class=8 if fast else 32)
+    res = solve(prob, Fused(max_bits=5 if fast else 6, bits_step=1),
+                seed=1, max_iters=6 if fast else 24)
+    gd_vals = [float(gd_minimize(prob.fn, prob.encoding,
                                  jax.random.PRNGKey(s),
                                  steps=400 if fast else 2000, lr=0.05)[1])
                for s in range(2)]
     out.append(("bench_ann.rs_nvars", float(RS_NVARS),
                 "paper says 688; closest standard 7-42-8 topology"))
-    out.append(("bench_ann.rs_dgo_ce", float(res.value),
-                f"evals={res.evaluations}"))
+    out.append(("bench_ann.rs_dgo_ce", float(res.best_f),
+                f"evals={res.extras['evaluations']}"))
     out.append(("bench_ann.rs_gd_best_ce", min(gd_vals),
                 "best of 2; NOTE tuned modern GD beats DGO on this smooth "
                 "synthetic CE (the paper's 1995 Landsat result does not "

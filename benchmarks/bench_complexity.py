@@ -12,9 +12,8 @@ import time
 
 import numpy as np
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig
 from repro.core.objectives import quadratic_nd
+from repro.core.solver import Problem, Sequential, solve
 
 
 def run(fast: bool = True):
@@ -23,25 +22,23 @@ def run(fast: bool = True):
     ns = [64, 128, 256, 512, 1024] if fast else [64, 128, 256, 512, 1024, 1536]
     rows = []
     shift = 1.2345
-    _warm = dgo.run_sequential(lambda x: float(((x - shift) ** 2).sum()),
-                               DGOConfig(encoding=quadratic_nd(4).encoding,
-                                         max_bits=8,
-                                         max_iters_per_resolution=2),
-                               np.full(4, 5.0))
+
+    def f_np(x):                         # pure-numpy objective: the timing
+        return float(((x - shift) ** 2).sum())   # isolates DGO's O(n^2)
+
+    _warm = solve(Problem(fn=f_np, encoding=quadratic_nd(4).encoding,
+                          kind="numpy"),
+                  Sequential(max_bits=8), x0=np.full(4, 5.0), max_iters=2)
     for n in ns:
-        obj = quadratic_nd(n)
-
-        def f_np(x):                     # pure-numpy objective: the timing
-            return float(((x - shift) ** 2).sum())   # isolates DGO's O(n^2)
-
-        cfg = DGOConfig(encoding=obj.encoding, max_bits=obj.encoding.bits,
-                        max_iters_per_resolution=2)
+        problem = Problem(fn=f_np, encoding=quadratic_nd(n).encoding,
+                          kind="numpy")   # pinned: skip convention detection
+        strat = Sequential(max_bits=problem.encoding.bits)
         x0 = np.full(n, 5.0)
         t0 = time.perf_counter()
-        res = dgo.run_sequential(f_np, cfg, x0)
+        res = solve(problem, strat, x0=x0, max_iters=2)
         dt = time.perf_counter() - t0
-        per_iter = dt / max(res.iterations, 1)
-        rows.append((n, per_iter, res.evaluations))
+        per_iter = dt / max(int(res.iterations), 1)
+        rows.append((n, per_iter, res.extras["evaluations"]))
     ns_a = np.array([r[0] for r in rows], float)
     ts = np.array([r[1] for r in rows], float)
     p_all = np.polyfit(np.log(ns_a), np.log(ts), 1)[0]

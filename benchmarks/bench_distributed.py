@@ -58,34 +58,34 @@ def _median_time(fn, reps: int) -> float:
 
 def run(fast: bool = True):
     from repro.compat import AxisType, make_mesh
-    from repro.core import dgo
-    from repro.core.dgo import DGOConfig
-    from repro.core.distributed import (
-        make_distributed_step, run_distributed, run_distributed_batched)
+    from repro.core import cache
+    from repro.core.distributed import make_distributed_step
     from repro.core.encoding import decode, encode
-    from repro.core.objectives import quadratic_nd
+    from repro.core.solver import Batched, Distributed, Problem, Sequential, solve
 
     reps = 5 if fast else 20
     n_dev = jax.device_count()
     mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,) )
-    obj = quadratic_nd(N_VARS)
-    enc = obj.encoding.with_bits(BITS)
+    problem = Problem.get("quadratic", n=N_VARS)
+    enc = problem.encoding.with_bits(BITS)
+    problem = problem.replace(encoding=enc)
+    obj_fn = problem.fn
     x0 = jnp.full((N_VARS,), 5.0)
     quorum = jnp.ones((n_dev,), bool)
+    cache.clear()   # cold start so the emitted cache stats cover this run
 
     # --- absolute baseline: numpy one-child-at-a-time -----------------------
-    cfg = DGOConfig(encoding=enc, max_bits=BITS,
-                    max_iters_per_resolution=MAX_ITERS)
     t0 = time.perf_counter()
-    seq = dgo.run_sequential(obj.fn, cfg, np.asarray(x0))
+    seq = solve(problem, Sequential(max_bits=BITS), x0=np.asarray(x0),
+                max_iters=MAX_ITERS)
     t_seq = time.perf_counter() - t0
 
     # --- host_loop: the pre-PR per-iteration-fetch form ---------------------
-    step = make_distributed_step(jax.vmap(obj.fn), enc, mesh)
+    step = make_distributed_step(jax.vmap(obj_fn), enc, mesh)
 
     def host_loop():
         bits = encode(x0, enc)
-        val = obj.fn(decode(bits, enc))
+        val = obj_fn(decode(bits, enc))
         history = [float(val)]            # <- the per-iteration host sync
         for _ in range(MAX_ITERS):
             bits, val, improved = step(bits, val, quorum)
@@ -100,19 +100,21 @@ def run(fast: bool = True):
 
     # --- host_driver: retained driver="host" (batched history fetch) --------
     def host_driver():
-        return run_distributed(obj.fn, enc, mesh, x0, max_iters=MAX_ITERS,
-                               driver="host")
+        return solve(problem, Distributed(mesh=mesh, driver="host"),
+                     x0=x0, max_iters=MAX_ITERS)
 
     t_host = _median_time(host_driver, reps)
-    _, v_host, h_host = host_driver()
+    r_host = host_driver()
+    v_host, h_host = r_host.best_f, r_host.extras["history"]
 
     # --- device_loop: the on-device while_loop engine -----------------------
     def device_loop():
-        return run_distributed(obj.fn, enc, mesh, x0, max_iters=MAX_ITERS,
-                               driver="device")
+        return solve(problem, Distributed(mesh=mesh, driver="device"),
+                     x0=x0, max_iters=MAX_ITERS)
 
     t_dev = _median_time(device_loop, reps)
-    _, v_dev, h_dev = device_loop()
+    r_dev = device_loop()
+    v_dev, h_dev = r_dev.best_f, r_dev.extras["history"]
 
     assert len(h_host) - 1 == iters and len(h_dev) - 1 == iters
     assert np.isclose(float(v_host), float(v_dev), atol=1e-6)
@@ -122,12 +124,12 @@ def run(fast: bool = True):
     x0s = x0[None] + jnp.linspace(-1.0, 1.0, N_RESTARTS)[:, None]
 
     def batched():
-        return run_distributed_batched(obj.fn, enc, mesh, x0s,
-                                       max_iters=MAX_ITERS)
+        return solve(problem, Batched(mesh=mesh), x0=x0s,
+                     max_iters=MAX_ITERS)
 
     t_batched = _median_time(batched, reps)
-    res = batched()
-    assert bool(jnp.all(res.values <= res.trace[:, 0] + 1e-6))  # descended
+    res = batched().extras
+    assert bool(jnp.all(res["values"] <= res["trace"][:, 0] + 1e-6))
 
     ips_host_loop = iters / t_host_loop
     ips_host = iters / t_host
@@ -139,8 +141,9 @@ def run(fast: bool = True):
     # Parallel Genetic Algorithms"); the host-driven loop has no batched
     # form (it would still sync per iteration), so its sustained rate IS
     # its single-run rate
-    total_batched_iters = int(jnp.sum(res.iterations))
+    total_batched_iters = int(jnp.sum(res["restart_iterations"]))
     ips_dev_sustained = total_batched_iters / t_batched
+    cstats = cache.totals()
     rows = [
         ("bench_distributed.sequential_wall_s", t_seq,
          "run_sequential end-to-end (numpy baseline)"),
@@ -184,6 +187,18 @@ def run(fast: bool = True):
          "dispatch+sync cost of ~one)"),
         ("bench_distributed.batched_runs_per_s", N_RESTARTS / t_batched,
          "completed optimizations per second in the batched path"),
+        # compilation-cache health (core/cache.py): engines_built should
+        # stay flat across PRs for this fixed workload — a jump means a
+        # cache key started churning (recompile regression); hits growing
+        # with reps is the steady-state serving property
+        ("bench_distributed.cache_engines_built", cstats["built"],
+         "distinct engine compilations paid for during this bench"),
+        ("bench_distributed.cache_hits", cstats["hits"],
+         "compiled-engine reuses across reps/drivers"),
+        ("bench_distributed.cache_misses", cstats["misses"],
+         "cache misses (hashable keys compiled + stored)"),
+        ("bench_distributed.cache_uncached", cstats["uncached"],
+         "unhashable-key builds (should be 0 for registry objectives)"),
     ]
     return rows
 

@@ -31,10 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig, dgo_resolution_step
+from repro.core.dgo import dgo_resolution_step
 from repro.core.encoding import decode, encode
-from repro.core.objectives import quadratic_nd
+from repro.core.solver import Fused, Problem, Sequential, solve
 
 # per-iteration communication cost model for the DGO reduce on ICI:
 # all-gather of (f32 val, i32 idx) per shard, ring: ~log2(P) hops of 8 bytes
@@ -43,15 +42,14 @@ LINK_LATENCY = 1e-6     # s per hop (ICI-class)
 
 
 def measure_simd_speedup(n_vars: int = 9, bits: int = 7, iters: int = 20):
-    obj = quadratic_nd(n_vars)
+    obj = Problem.get("quadratic", n=n_vars)
     enc = obj.encoding.with_bits(bits)
-    cfg = DGOConfig(encoding=enc, max_bits=bits,
-                    max_iters_per_resolution=iters)
+    problem = obj.replace(encoding=enc)
     x0 = np.full(n_vars, 5.0)
 
     t0 = time.perf_counter()
-    seq = dgo.run_sequential(obj.fn, cfg, x0)
-    t_seq = (time.perf_counter() - t0) / max(seq.iterations, 1)
+    seq = solve(problem, Sequential(max_bits=bits), x0=x0, max_iters=iters)
+    t_seq = (time.perf_counter() - t0) / max(int(seq.iterations), 1)
 
     f_batch = jax.vmap(obj.fn)
     bits0 = encode(jnp.asarray(x0, jnp.float32), enc)
@@ -93,23 +91,22 @@ def measure_fused_engine_speedup(n_vars: int, bits: int = 7,
     compilation (steady-state serving cost), matching how the paper times
     MP-1 after program load.
     """
-    obj = quadratic_nd(n_vars)
-    enc = obj.encoding.with_bits(bits)
-    cfg = DGOConfig(encoding=enc, max_bits=max_bits,
-                    max_iters_per_resolution=64)
+    obj = Problem.get("quadratic", n=n_vars)
+    problem = obj.replace(encoding=obj.encoding.with_bits(bits))
+    strat = Fused(max_bits=max_bits)
     x0 = np.full(n_vars, 5.0)
 
     t0 = time.perf_counter()
-    seq = dgo.run_sequential(obj.fn, cfg, x0)
+    seq = solve(problem, Sequential(max_bits=max_bits), x0=x0, max_iters=64)
     t_seq = time.perf_counter() - t0
 
-    fused = dgo.run(obj.fn, cfg, x0=jnp.asarray(x0))      # compile + run
+    fused = solve(problem, strat, x0=jnp.asarray(x0), max_iters=64)  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        fused = dgo.run(obj.fn, cfg, x0=jnp.asarray(x0))
+        fused = solve(problem, strat, x0=jnp.asarray(x0), max_iters=64)
     t_fused = (time.perf_counter() - t0) / reps
-    assert abs(float(fused.value) - float(seq.value)) < max(
-        obj.tol, 1e-3), (float(fused.value), float(seq.value))
+    assert abs(float(fused.best_f) - float(seq.best_f)) < max(
+        obj.tol, 1e-3), (float(fused.best_f), float(seq.best_f))
     return t_seq, t_fused, t_seq / t_fused
 
 

@@ -11,9 +11,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig
 from repro.core.objectives import TEST_FUNCTIONS
+from repro.core.solver import Clustered, solve
 from repro.optim import ga_minimize, gd_minimize, nelder_mead_minimize, sa_minimize
 
 
@@ -26,9 +25,8 @@ def run(fast: bool = True):
     objs = TEST_FUNCTIONS[:5] if fast else TEST_FUNCTIONS
     out = []
     methods = {
-        "dgo": lambda o, k: dgo.run_clustered(
-            o.fn, DGOConfig(encoding=o.encoding, max_bits=16),
-            n_clusters=32, key=k).value,
+        "dgo": lambda o, k: solve(
+            o, Clustered(n_clusters=32, max_bits=16), seed=k).best_f,
         "nelder_mead": lambda o, k: nelder_mead_minimize(
             o.fn, o.encoding, k, iters=300)[1],
         "grad_descent": lambda o, k: gd_minimize(

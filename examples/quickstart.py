@@ -1,24 +1,27 @@
-"""Quickstart: DGO on the paper's test functions in ~20 lines.
+"""Quickstart: DGO through the one ``solve()`` front door.
 
   PYTHONPATH=src python examples/quickstart.py
-"""
-import jax
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig
-from repro.core.objectives import rastrigin, shekel
+A problem is a registry name (or a ``Problem`` spec), a strategy is a
+string key (or a configured ``Strategy`` instance), and every strategy
+returns the same ``SolveResult``.
+"""
+from repro.core.solver import Clustered, Problem, solve
 
 # DGO on a multimodal surface (a handful of clusters, the paper's MP-1
-# mode: independent start points race on spare devices)
-obj = rastrigin(2)
-res = dgo.run_clustered(obj.fn,
-                        DGOConfig(encoding=obj.encoding, max_bits=14),
-                        n_clusters=8, key=jax.random.PRNGKey(0))
-print(f"rastrigin-2d: f={float(res.value):.5f} at x={res.x} "
-      f"({res.evaluations} evaluations)")
+# mode: independent start points race inside one compiled engine)
+res = solve("rastrigin", strategy=Clustered(n_clusters=8, max_bits=14),
+            seed=0)
+print(f"rastrigin-2d: f={float(res.best_f):.5f} at x={res.best_x} "
+      f"({res.extras['evaluations']} evaluations)")
 
-# clustered multi-start (the paper's MP-1 cluster mode) on Shekel foxholes
-obj = shekel(5)
-res = dgo.run_clustered(obj.fn, DGOConfig(encoding=obj.encoding, max_bits=14),
-                        n_clusters=8, key=jax.random.PRNGKey(1))
-print(f"shekel-5:     f={float(res.value):.4f} (global optimum {obj.f_opt})")
+# same call, different problem: Shekel foxholes from the registry
+prob = Problem.get("shekel")          # m=5 foxholes, known optimum rides along
+res = solve(prob, strategy=Clustered(n_clusters=8, max_bits=14), seed=1)
+print(f"shekel-5:     f={float(res.best_f):.4f} "
+      f"(global optimum {prob.f_opt})")
+
+# swap the substrate by string — identical result type
+res = solve("quadratic", strategy="fused", seed=0)
+print(f"quadratic-2d: f={float(res.best_f):.6f} in {res.iterations} steps "
+      f"[strategy='fused']")

@@ -1,5 +1,5 @@
-"""Batched serving example: prefill + decode waves on a reduced zamba2
-(hybrid SSM + shared attention) model.
+"""Batched serving example: LM decode waves on a reduced zamba2 model,
+then batched DGO optimization-as-a-service through the same driver.
 
   PYTHONPATH=src python examples/serving_batched.py
 """
@@ -8,14 +8,30 @@ import sys
 from pathlib import Path
 
 root = Path(__file__).resolve().parents[1]
+env = {"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin"}
+
+# wave 1: LM prefill + decode serving
 cmd = [sys.executable, "-m", "repro.launch.serve",
        "--arch", "zamba2-1.2b", "--reduced",
        "--batch", "4", "--prompt-len", "32", "--gen-len", "12",
        "--waves", "2"]
 print("$", " ".join(cmd))
-out = subprocess.run(cmd, env={"PYTHONPATH": str(root / "src"),
-                               "PATH": "/usr/bin:/bin"},
-                     capture_output=True, text=True, timeout=900)
+out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                     timeout=900)
+print(out.stdout)
+if out.returncode != 0:
+    print(out.stderr[-2000:])
+    sys.exit(1)
+
+# wave 2: batched DGO requests — R optimizations advance in lockstep in
+# ONE compiled on-device loop (solve(strategy=Batched), the registry
+# resolves --problem by name)
+cmd = [sys.executable, "-m", "repro.launch.serve",
+       "--dgo", "--problem", "rastrigin",
+       "--restarts", "8", "--waves", "2", "--max-iters", "48"]
+print("$", " ".join(cmd))
+out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                     timeout=900)
 print(out.stdout)
 if out.returncode != 0:
     print(out.stderr[-2000:])

@@ -6,28 +6,26 @@ descent, printing both error traces.
 import jax
 import numpy as np
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig
-from repro.core.encoding import Encoding
-from repro.core.objectives import XOR_X, XOR_Y, xor_forward, xor_objective
+from repro.core.encoding import Encoding, decode
+from repro.core.objectives import XOR_X, XOR_Y, xor_forward
+from repro.core.solver import Clustered, Problem, solve
 from repro.optim import gd_minimize
 
-obj = xor_objective()
+MAX_BITS = 16
+prob = Problem.get("xor").replace(encoding=Encoding(8, 4, -8.0, 8.0))
 
-res = dgo.run_clustered(
-    obj.fn, DGOConfig(encoding=Encoding(8, 4, -8.0, 8.0), max_bits=16),
-    n_clusters=16, key=jax.random.PRNGKey(0))
+res = solve(prob, strategy=Clustered(n_clusters=16, max_bits=MAX_BITS),
+            seed=0)
 print("DGO error trace (best cluster, downsampled):")
-trace = res.trace if res.trace.ndim else np.asarray([float(res.value)])
+trace = res.trace if res.trace.ndim else np.asarray([float(res.best_f)])
 print(np.array2string(trace[:: max(len(trace) // 10, 1)], precision=4))
-print(f"DGO final MSE: {float(res.value):.5f}")
+print(f"DGO final MSE: {float(res.best_f):.5f}")
 
-_, gd_val, gd_trace = gd_minimize(obj.fn, obj.encoding,
+_, gd_val, gd_trace = gd_minimize(prob.fn, prob.encoding,
                                   jax.random.PRNGKey(0), steps=3000)
 print(f"GD  final MSE: {float(gd_val):.5f} (paper Fig. 4: GD stalls higher)")
 
-w = res.bits
-from repro.core.encoding import decode
-preds = [float(xor_forward(decode(w, Encoding(8, 16, -8.0, 8.0)), x))
+w = res.extras["bits"]            # best weights at the final resolution
+preds = [float(xor_forward(decode(w, Encoding(8, MAX_BITS, -8.0, 8.0)), x))
          for x in XOR_X]
 print("XOR table (DGO):", [round(p, 3) for p in preds], "target", XOR_Y)

@@ -42,6 +42,7 @@ __all__ = [
     "axis_size",
     "make_mesh",
     "mesh_from_devices",
+    "pure_callback",
     "shard_map",
 ]
 
@@ -119,6 +120,28 @@ else:
         the collective folds to a compile-time constant.
         """
         return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# pure_callback
+# ---------------------------------------------------------------------------
+# 0.4.x batches callbacks under vmap via ``vectorized=False`` (loop per
+# element); >= 0.5 renames that contract to ``vmap_method="sequential"`` and
+# eventually removes ``vectorized``.  Resolve the spelling once.
+
+_PURE_CALLBACK_KWARGS = _kwarg_names(jax.pure_callback)
+if "vmap_method" in _PURE_CALLBACK_KWARGS:
+    def pure_callback(callback, result_shape_dtypes, *args):
+        """Version-portable ``jax.pure_callback`` with element-at-a-time
+        vmap semantics (the host callback only ever sees unbatched args)."""
+        return jax.pure_callback(callback, result_shape_dtypes, *args,
+                                 vmap_method="sequential")
+else:
+    def pure_callback(callback, result_shape_dtypes, *args):
+        """Version-portable ``jax.pure_callback`` with element-at-a-time
+        vmap semantics (the host callback only ever sees unbatched args)."""
+        return jax.pure_callback(callback, result_shape_dtypes, *args,
+                                 vectorized=False)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,114 @@
+"""One keyed compilation-cache subsystem for every DGO engine.
+
+Before this module existed the repo carried three separate ``lru_cache``
+wrappers (two in ``core/dgo.py``, three in ``core/distributed.py``) with
+divergent eviction, no observability and a silent ``TypeError`` escape
+hatch for unhashable objectives.  All engine compilations now go through
+named :class:`CompileCache` instances:
+
+* LRU eviction with a per-cache ``maxsize`` (compiled engines pin device
+  buffers — segment tables, decode matrices — so unbounded growth is a
+  leak, not a convenience);
+* hit/miss/built counters surfaced by :func:`stats` (emitted into
+  ``BENCH_distributed.json`` so recompile regressions show up in CI);
+* graceful handling of unhashable keys (an objective closing over a
+  non-hashable capture compiles uncached and is *counted*, not hidden);
+* :func:`clear` for tests that must observe a cold compile.
+
+Engine builders key on everything that changes the compiled program:
+the objective callable, the encoding/config, the mesh, and every static
+knob (``inner``, ``interpret``, ``tile_p``, ...).  Keys are plain tuples;
+the first element names the engine family for readable stats.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+
+class CompileCache:
+    """A named, bounded, instrumented memo table for compiled engines."""
+
+    def __init__(self, name: str, maxsize: int = 64):
+        self.name = name
+        self.maxsize = maxsize
+        self._store: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.uncached = 0   # unhashable keys: built fresh, never stored
+
+    def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the cached value for ``key``, building it on first use.
+
+        ``build`` is a zero-argument callable invoked only on a miss.  An
+        unhashable ``key`` (e.g. an objective capturing a list) falls back
+        to an uncached build — same behaviour the old ``except TypeError``
+        paths provided, but visible in :meth:`stats`.
+        """
+        try:
+            hit = key in self._store
+        except TypeError:
+            self.uncached += 1
+            return build()
+        if hit:
+            self.hits += 1
+            self._store.move_to_end(key)
+            return self._store[key]
+        self.misses += 1
+        value = build()
+        self._store[key] = value
+        while len(self._store) > self.maxsize:
+            self._store.popitem(last=False)
+        return value
+
+    @property
+    def built(self) -> int:
+        """Total engine compilations this cache paid for."""
+        return self.misses + self.uncached
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "uncached": self.uncached, "built": self.built,
+                "size": len(self._store)}
+
+    def clear(self) -> None:
+        """Drop every entry AND reset the counters (cold-compile tests)."""
+        self._store.clear()
+        self.hits = self.misses = self.uncached = 0
+
+
+_CACHES: dict[str, CompileCache] = {}
+
+
+def get_cache(name: str, maxsize: int = 64) -> CompileCache:
+    """The process-wide cache registered under ``name`` (created on first
+    use).  ``maxsize`` only applies at creation time."""
+    cache = _CACHES.get(name)
+    if cache is None:
+        cache = _CACHES[name] = CompileCache(name, maxsize=maxsize)
+    return cache
+
+
+def stats() -> dict[str, dict[str, int]]:
+    """Per-cache counters, keyed by cache name."""
+    return {name: cache.stats() for name, cache in sorted(_CACHES.items())}
+
+
+def totals() -> dict[str, int]:
+    """Counters summed across every registered cache."""
+    out = {"hits": 0, "misses": 0, "uncached": 0, "built": 0, "size": 0}
+    for cache in _CACHES.values():
+        for k, v in cache.stats().items():
+            out[k] += v
+    return out
+
+
+def clear() -> None:
+    """Clear every registered cache (tests / benchmarks needing a cold
+    start).  The registry itself survives so module-level handles stay
+    valid."""
+    for cache in _CACHES.values():
+        cache.clear()

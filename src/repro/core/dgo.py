@@ -37,12 +37,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import lru_cache, partial
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.cache import get_cache
 
 from repro.core.encoding import (
     Encoding,
@@ -340,14 +342,27 @@ def make_fused_engine(f: Callable[[jax.Array], jax.Array],
     return engine
 
 
-@lru_cache(maxsize=64)
-def _cached_engine(f: Callable, cfg: DGOConfig):
-    return jax.jit(make_fused_engine(f, cfg))
+# engine compilations go through the repo-wide keyed cache subsystem
+# (core/cache.py): one (objective, config) pair compiles once per process,
+# unhashable objectives build uncached instead of raising, and hit/miss
+# counters surface in BENCH_distributed.json
+_ENGINES = get_cache("dgo.engine")
 
 
-@lru_cache(maxsize=64)
-def _cached_clustered_engine(f: Callable, cfg: DGOConfig):
-    return jax.jit(jax.vmap(make_fused_engine(f, cfg)))
+def _fused_engine(f: Callable, cfg: DGOConfig):
+    return _ENGINES.get(("fused", f, cfg),
+                        lambda: jax.jit(make_fused_engine(f, cfg)))
+
+
+def _clustered_engine(f: Callable, cfg: DGOConfig):
+    return _ENGINES.get(("clustered", f, cfg),
+                        lambda: jax.jit(jax.vmap(make_fused_engine(f, cfg))))
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use repro.core.solver.{new} "
+                  f"(see README.md migration table)",
+                  DeprecationWarning, stacklevel=3)
 
 
 def _best_bits(best_x: jax.Array, st: _EngineStatic) -> jax.Array:
@@ -374,10 +389,10 @@ def _result_from_state(s: EngineState, cfg: DGOConfig) -> DGOResult:
 # vectorized single-device driver (one compilation per optimization)
 # ---------------------------------------------------------------------------
 
-def run(f: Callable[[jax.Array], jax.Array],
-        cfg: DGOConfig,
-        x0: jax.Array | None = None,
-        key: jax.Array | None = None) -> DGOResult:
+def _fused_result(f: Callable[[jax.Array], jax.Array],
+                  cfg: DGOConfig,
+                  x0: jax.Array | None = None,
+                  key: jax.Array | None = None) -> DGOResult:
     """Full DGO through the fused engine: generation, evaluation, selection
     and the resolution schedule all inside one jitted while_loop.
 
@@ -393,19 +408,42 @@ def run(f: Callable[[jax.Array], jax.Array],
     bits0 = jnp.int32(st.res_bits[0])
     levels0 = _encode_levels(jnp.asarray(x0, jnp.float32), bits0, st)
     val0 = f(_decode_levels(levels0, bits0, st))
-    state = _cached_engine(f, cfg)(levels0, val0)
+    state = _fused_engine(f, cfg)(levels0, val0)
     return _result_from_state(state, cfg)
+
+
+def run(f: Callable[[jax.Array], jax.Array],
+        cfg: DGOConfig,
+        x0: jax.Array | None = None,
+        key: jax.Array | None = None) -> DGOResult:
+    """Deprecated front end: ``solve(problem, strategy="fused")``.
+
+    Thin wrapper so existing call sites keep working; the fused engine
+    itself is unchanged and now reached through the solver facade.
+    """
+    from repro.core import solver
+    _warn_deprecated("dgo.run", 'solve(problem, strategy="fused")')
+    res = solver.solve(
+        solver.Problem(fn=f, encoding=cfg.encoding, kind="jax"),
+        solver.Fused(max_bits=cfg.max_bits, bits_step=cfg.bits_step),
+        seed=key if key is not None else 0, x0=x0,
+        max_iters=cfg.max_iters_per_resolution)
+    return DGOResult(x=res.best_x, value=res.best_f,
+                     bits=res.extras["bits"],
+                     evaluations=res.extras["evaluations"],
+                     iterations=int(res.iterations), trace=res.trace)
 
 
 # ---------------------------------------------------------------------------
 # clustered multi-start (paper's MP-1 cluster mode)
 # ---------------------------------------------------------------------------
 
-def run_clustered(f: Callable[[jax.Array], jax.Array],
-                  cfg: DGOConfig,
-                  n_clusters: int,
-                  key: jax.Array | None = None,
-                  x0s: jax.Array | None = None) -> DGOResult:
+def _clustered_result(f: Callable[[jax.Array], jax.Array],
+                      cfg: DGOConfig,
+                      n_clusters: int,
+                      key: jax.Array | None = None,
+                      x0s: jax.Array | None = None
+                      ) -> tuple[DGOResult, dict]:
     """Independent DGO instances from random starts; best-of wins.
 
     vmap of the fused engine over the cluster axis — every cluster runs its
@@ -414,15 +452,17 @@ def run_clustered(f: Callable[[jax.Array], jax.Array],
     core/distributed.py: the pod axis).
 
     ``x0s`` (n_clusters, n_vars) pins heterogeneous start points (the
-    single-device analogue of ``distributed.run_distributed_batched``'s
-    batched-request path); omitted, starts are drawn uniformly from
-    ``key``.
+    single-device analogue of the batched distributed serving path);
+    omitted, starts are drawn uniformly from ``key``.
+
+    Returns the legacy-shaped :class:`DGOResult` (``trace`` = per-cluster
+    final values) plus an aux dict with the winner's own step trace.
     """
     enc0 = cfg.encoding
     st = _engine_static(cfg)
     if x0s is None:
         if key is None:
-            raise ValueError("run_clustered needs either key or x0s")
+            raise ValueError("clustered DGO needs either key or x0s")
         keys = jax.random.split(key, n_clusters)
         x0s = jax.vmap(lambda k: jax.random.uniform(
             k, (enc0.n_vars,), minval=enc0.lo, maxval=enc0.hi))(keys)
@@ -435,29 +475,71 @@ def run_clustered(f: Callable[[jax.Array], jax.Array],
     levels0 = _encode_levels(x0s, bits0, st)                 # (C, n_vars)
     vals0 = jax.vmap(f)(_decode_levels(levels0, bits0, st))
 
-    states = _cached_clustered_engine(f, cfg)(levels0, vals0)
+    states = _clustered_engine(f, cfg)(levels0, vals0)
     winner = int(jnp.argmin(states.best_val))
-    return DGOResult(x=states.best_x[winner],
-                     value=states.best_val[winner],
-                     bits=_best_bits(states.best_x[winner], st),
-                     evaluations=int(jnp.sum(states.evals)),
-                     iterations=int(jnp.max(states.iters)),
-                     trace=np.asarray(states.best_val))
+    w_iters = int(states.iters[winner])
+    winner_trace = (np.asarray(states.trace[winner][:w_iters]) if w_iters
+                    else np.asarray([float(states.best_val[winner])]))
+    result = DGOResult(x=states.best_x[winner],
+                       value=states.best_val[winner],
+                       bits=_best_bits(states.best_x[winner], st),
+                       evaluations=int(jnp.sum(states.evals)),
+                       iterations=int(jnp.max(states.iters)),
+                       trace=np.asarray(states.best_val))
+    aux = {"cluster_values": np.asarray(states.best_val),
+           "winner": winner, "winner_trace": winner_trace}
+    return result, aux
+
+
+def run_clustered(f: Callable[[jax.Array], jax.Array],
+                  cfg: DGOConfig,
+                  n_clusters: int,
+                  key: jax.Array | None = None,
+                  x0s: jax.Array | None = None) -> DGOResult:
+    """Deprecated front end: ``solve(problem, strategy=Clustered(...))``.
+
+    Note the legacy quirk preserved here: ``DGOResult.trace`` holds the
+    per-cluster final values, not a step trace (the solver facade returns
+    the winner's step trace and puts the per-cluster values in
+    ``extras["cluster_values"]``).
+    """
+    from repro.core import solver
+    _warn_deprecated("dgo.run_clustered",
+                     "solve(problem, strategy=Clustered(n_clusters=...))")
+    if x0s is None and key is None:
+        raise ValueError("run_clustered needs either key or x0s")
+    res = solver.solve(
+        solver.Problem(fn=f, encoding=cfg.encoding, kind="jax"),
+        solver.Clustered(n_clusters=n_clusters, max_bits=cfg.max_bits,
+                         bits_step=cfg.bits_step),
+        seed=key if key is not None else 0, x0=x0s,
+        max_iters=cfg.max_iters_per_resolution)
+    return DGOResult(x=res.best_x, value=res.best_f,
+                     bits=res.extras["bits"],
+                     evaluations=res.extras["evaluations"],
+                     iterations=int(res.iterations),
+                     trace=res.extras["cluster_values"])
 
 
 # ---------------------------------------------------------------------------
 # sequential reference — the paper's SPARC-IV-style baseline
 # ---------------------------------------------------------------------------
 
-def run_sequential(f: Callable[[np.ndarray], float],
-                   cfg: DGOConfig,
-                   x0: np.ndarray,
-                   time_budget_s: float | None = None) -> DGOResult:
+def _sequential_result(f: Callable[[np.ndarray], float],
+                       cfg: DGOConfig,
+                       x0: np.ndarray,
+                       time_budget_s: float | None = None,
+                       max_iters: int | None = None) -> DGOResult:
     """One-child-at-a-time DGO in plain numpy.
 
     This is deliberately *not* vectorized: per iteration it does 2N-1
     sequential (transform + evaluate) passes of O(N) work each — the O(n^2)
     structure of the paper's Fig. 6. Used as the speedup denominator.
+
+    ``f`` follows the host convention ``np.ndarray -> float`` (the solver
+    facade adapts jax objectives via ``Problem.host_fn``).  ``max_iters``
+    caps TOTAL iterations across the whole resolution schedule — the same
+    runaway guard the device engines carry.
     """
     enc0 = cfg.encoding
 
@@ -487,6 +569,7 @@ def run_sequential(f: Callable[[np.ndarray], float],
     val = float(f(np_decode(bits, enc0)))
     evals, iters = 1, 0
     trace = [val]
+    best_run_val, best_run_bits, best_run_enc = val, bits, enc0
 
     prev_enc = enc0
     for res in cfg.resolutions():
@@ -499,6 +582,8 @@ def run_sequential(f: Callable[[np.ndarray], float],
         improved = True
         it = 0
         while improved and it < cfg.max_iters_per_resolution:
+            if max_iters is not None and iters >= max_iters:
+                break
             improved = False
             gray = np_b2g(bits)
             best_val, best_bits = val, bits
@@ -518,11 +603,51 @@ def run_sequential(f: Callable[[np.ndarray], float],
             trace.append(val)
             if time_budget_s and time.perf_counter() - t_start > time_budget_s:
                 break
+        # best-so-far across resolutions: step-5 re-quantization can raise
+        # the parent value, so remember the best point like the fused
+        # engine's monotone tracking does
+        if val < best_run_val:
+            best_run_val, best_run_bits, best_run_enc = val, bits, enc
         prev_enc = enc
         if time_budget_s and time.perf_counter() - t_start > time_budget_s:
             break
+        if max_iters is not None and iters >= max_iters:
+            break
 
-    return DGOResult(x=jnp.asarray(np_decode(bits, prev_enc)),
-                     value=jnp.float32(val), bits=jnp.asarray(bits),
+    return DGOResult(x=jnp.asarray(np_decode(best_run_bits, best_run_enc)),
+                     value=jnp.float32(best_run_val),
+                     bits=jnp.asarray(best_run_bits),
                      evaluations=evals, iterations=iters,
                      trace=np.asarray(trace))
+
+
+def run_sequential(f: Callable[[np.ndarray], float],
+                   cfg: DGOConfig,
+                   x0: np.ndarray,
+                   time_budget_s: float | None = None,
+                   max_iters: int | None = None) -> DGOResult:
+    """Deprecated front end: ``solve(problem, strategy=Sequential(...))``.
+
+    ``f`` may follow EITHER calling convention — host ``np.ndarray ->
+    float`` (the historical contract) or a jax-traceable scalar function
+    like every other engine takes: :class:`repro.core.solver.Problem`
+    detects which and adapts.  ``max_iters`` is the total-iteration guard
+    the device engines already had.
+    """
+    from repro.core import solver
+    _warn_deprecated("dgo.run_sequential",
+                     "solve(problem, strategy=Sequential(...))")
+    res = solver.solve(
+        solver.Problem(fn=f, encoding=cfg.encoding),
+        solver.Sequential(max_bits=cfg.max_bits, bits_step=cfg.bits_step,
+                          time_budget_s=time_budget_s,
+                          max_total_iters=max_iters),
+        x0=np.asarray(x0, np.float64),
+        max_iters=cfg.max_iters_per_resolution)
+    # legacy contract: the RAW parent-value history (re-quantization bumps
+    # visible), not the facade's monotone best-so-far trace
+    return DGOResult(x=res.best_x, value=res.best_f,
+                     bits=res.extras["bits"],
+                     evaluations=res.extras["evaluations"],
+                     iterations=int(res.iterations),
+                     trace=res.extras["raw_trace"])

@@ -50,7 +50,7 @@ Drivers (DESIGN §2/§6 mapping of the *outer* loop):
 from __future__ import annotations
 
 import math
-from functools import lru_cache, partial
+import warnings
 from typing import Callable, NamedTuple, Sequence
 
 import jax
@@ -59,6 +59,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
+from repro.core.cache import get_cache
 from repro.core.encoding import Encoding, decode
 from repro.core.population import generate_children, segment_patterns
 from repro.kernels.popstep.ops import backend, population_step_ids
@@ -365,34 +366,46 @@ def make_distributed_engine(f_batch: Callable[[jax.Array], jax.Array],
     return jax.jit(mapped)
 
 
-# engine/step caches: a (objective, mesh, config) pair compiles ONCE per
+# engine/step compilations go through the repo-wide keyed cache subsystem
+# (core/cache.py): a (objective, mesh, config) pair compiles ONCE per
 # process — repeated serving calls (waves of requests, bench reps) reuse the
-# compiled program exactly like dgo.py's _cached_engine
-@lru_cache(maxsize=64)
-def _cached_step(f, enc, mesh, pop_axes, virtual_block, inner, interpret,
-                 tile_p):
-    return make_distributed_step(jax.vmap(f), enc, mesh, pop_axes,
-                                 virtual_block, inner=inner,
-                                 interpret=interpret, tile_p=tile_p)
+# compiled program; unhashable objectives build uncached instead of raising,
+# and hit/miss counters surface in BENCH_distributed.json
+_ENGINES = get_cache("distributed.engine")
 
 
-@lru_cache(maxsize=64)
-def _cached_engine(f, enc, mesh, pop_axes, max_iters, virtual_block, inner,
-                   interpret, tile_p):
-    return make_distributed_engine(jax.vmap(f), enc, mesh, pop_axes,
-                                   max_iters, virtual_block, inner=inner,
-                                   interpret=interpret, tile_p=tile_p)
+def _step_for(f, enc, mesh, pop_axes, virtual_block, inner, interpret,
+              tile_p):
+    return _ENGINES.get(
+        ("step", f, enc, mesh, pop_axes, virtual_block, inner, interpret,
+         tile_p),
+        lambda: make_distributed_step(jax.vmap(f), enc, mesh, pop_axes,
+                                      virtual_block, inner=inner,
+                                      interpret=interpret, tile_p=tile_p))
 
 
-@lru_cache(maxsize=64)
-def _cached_engine_batched(f, enc, mesh, n_restarts, pop_axes, max_iters,
-                           virtual_block):
-    return make_distributed_engine_batched(jax.vmap(f), enc, mesh,
-                                           n_restarts, pop_axes, max_iters,
-                                           virtual_block)
+def _engine_for(f, enc, mesh, pop_axes, max_iters, virtual_block, inner,
+                interpret, tile_p):
+    return _ENGINES.get(
+        ("engine", f, enc, mesh, pop_axes, max_iters, virtual_block, inner,
+         interpret, tile_p),
+        lambda: make_distributed_engine(jax.vmap(f), enc, mesh, pop_axes,
+                                        max_iters, virtual_block,
+                                        inner=inner, interpret=interpret,
+                                        tile_p=tile_p))
 
 
-def run_distributed(f: Callable[[jax.Array], jax.Array],
+def _batched_engine_for(f, enc, mesh, n_restarts, pop_axes, max_iters,
+                        virtual_block):
+    return _ENGINES.get(
+        ("batched", f, enc, mesh, n_restarts, pop_axes, max_iters,
+         virtual_block),
+        lambda: make_distributed_engine_batched(jax.vmap(f), enc, mesh,
+                                                n_restarts, pop_axes,
+                                                max_iters, virtual_block))
+
+
+def _run_distributed(f: Callable[[jax.Array], jax.Array],
                     enc: Encoding,
                     mesh: Mesh,
                     x0: jax.Array,
@@ -441,13 +454,8 @@ def run_distributed(f: Callable[[jax.Array], jax.Array],
         quorum_mask = jnp.ones((n_shards,), bool)
 
     if driver == "device":
-        try:
-            engine = _cached_engine(f, enc, mesh, pop_axes, max_iters,
-                                    virtual_block, inner, interpret, tile_p)
-        except TypeError:       # unhashable objective: compile uncached
-            engine = make_distributed_engine(
-                jax.vmap(f), enc, mesh, pop_axes, max_iters, virtual_block,
-                inner=inner, interpret=interpret, tile_p=tile_p)
+        engine = _engine_for(f, enc, mesh, pop_axes, max_iters,
+                             virtual_block, inner, interpret, tile_p)
         bits, val, iters, trace = engine(jnp.asarray(x0, jnp.float32),
                                          quorum_mask)
         # ONE device->host transfer for the whole history
@@ -457,13 +465,8 @@ def run_distributed(f: Callable[[jax.Array], jax.Array],
 
     bits = encode(jnp.asarray(x0, jnp.float32), enc)
     val = f(decode(bits, enc))
-    try:
-        step = _cached_step(f, enc, mesh, pop_axes, virtual_block, inner,
-                            interpret, tile_p)
-    except TypeError:
-        step = make_distributed_step(jax.vmap(f), enc, mesh, pop_axes,
-                                     virtual_block, inner=inner,
-                                     interpret=interpret, tile_p=tile_p)
+    step = _step_for(f, enc, mesh, pop_axes, virtual_block, inner,
+                     interpret, tile_p)
     if injector is not None:
         from repro.runtime.elastic import drop_shard
         from repro.runtime.failure import SimulatedFailure
@@ -491,6 +494,43 @@ def run_distributed(f: Callable[[jax.Array], jax.Array],
     # end instead of a float(val) round-trip inside the loop
     history = [float(v) for v in jax.device_get(vals)]
     return bits, val, history
+
+
+def run_distributed(f: Callable[[jax.Array], jax.Array],
+                    enc: Encoding,
+                    mesh: Mesh,
+                    x0: jax.Array,
+                    pop_axes: Sequence[str] = ("data",),
+                    max_iters: int = 256,
+                    virtual_block: int = 256,
+                    quorum_mask=None,
+                    inner: str | None = None,
+                    interpret: bool | None = None,
+                    driver: str = "device",
+                    injector=None,
+                    tile_p: int | None = None):
+    """Deprecated front end: ``solve(problem, strategy=Distributed(...))``.
+
+    Preserves the historical contract exactly — fixed resolution at
+    ``enc.bits``, return value ``(bits, val, history)`` — by delegating to
+    the solver facade with a single-resolution :class:`Distributed`
+    strategy.
+    """
+    from repro.core import solver
+    warnings.warn(
+        "run_distributed is deprecated; use repro.core.solver.solve("
+        "problem, strategy=Distributed(mesh=..., driver=...)) "
+        "(see README.md migration table)",
+        DeprecationWarning, stacklevel=2)
+    res = solver.solve(
+        solver.Problem(fn=f, encoding=enc, kind="jax"),
+        solver.Distributed(mesh=mesh, pop_axes=tuple(pop_axes),
+                           driver=driver, inner=inner,
+                           virtual_block=virtual_block, interpret=interpret,
+                           tile_p=tile_p, quorum_mask=quorum_mask,
+                           injector=injector),
+        x0=x0, max_iters=max_iters)
+    return res.extras["bits"], res.best_f, res.extras["history"]
 
 
 # ---------------------------------------------------------------------------
@@ -657,14 +697,14 @@ class BatchedResult(NamedTuple):
     best: int              # index of the winning restart
 
 
-def run_distributed_batched(f: Callable[[jax.Array], jax.Array],
-                            enc: Encoding,
-                            mesh: Mesh,
-                            x0s: jax.Array,
-                            pop_axes: Sequence[str] = ("data",),
-                            max_iters: int = 256,
-                            virtual_block: int = 256,
-                            quorum_mask=None) -> BatchedResult:
+def _run_batched(f: Callable[[jax.Array], jax.Array],
+                 enc: Encoding,
+                 mesh: Mesh,
+                 x0s: jax.Array,
+                 pop_axes: Sequence[str] = ("data",),
+                 max_iters: int = 256,
+                 virtual_block: int = 256,
+                 quorum_mask=None) -> BatchedResult:
     """Batched multi-start distributed DGO: R restarts from ``x0s``
     (R, n_vars) share one compiled on-device while_loop.
 
@@ -681,15 +721,41 @@ def run_distributed_batched(f: Callable[[jax.Array], jax.Array],
     if quorum_mask is None:
         quorum_mask = jnp.ones((n_shards,), bool)
 
-    try:
-        engine = _cached_engine_batched(f, enc, mesh, n_restarts, pop_axes,
-                                        max_iters, virtual_block)
-    except TypeError:
-        engine = make_distributed_engine_batched(
-            jax.vmap(f), enc, mesh, n_restarts, pop_axes, max_iters,
-            virtual_block)
+    engine = _batched_engine_for(f, enc, mesh, n_restarts, pop_axes,
+                                 max_iters, virtual_block)
     bits, vals, iters, trace = engine(x0s, quorum_mask)
     iters_h, trace_np = jax.device_get((iters, trace))
     return BatchedResult(bits=bits, values=vals, iterations=iters,
                          trace=trace_np[:, : int(iters_h.max()) + 1],
                          best=int(jnp.argmin(vals)))
+
+
+def run_distributed_batched(f: Callable[[jax.Array], jax.Array],
+                            enc: Encoding,
+                            mesh: Mesh,
+                            x0s: jax.Array,
+                            pop_axes: Sequence[str] = ("data",),
+                            max_iters: int = 256,
+                            virtual_block: int = 256,
+                            quorum_mask=None) -> BatchedResult:
+    """Deprecated front end: ``solve(problem, strategy=Batched(...))``.
+
+    Preserves the historical fixed-resolution ``BatchedResult`` contract
+    by delegating to the solver facade.
+    """
+    from repro.core import solver
+    warnings.warn(
+        "run_distributed_batched is deprecated; use "
+        "repro.core.solver.solve(problem, strategy=Batched(mesh=...)) "
+        "(see README.md migration table)",
+        DeprecationWarning, stacklevel=2)
+    res = solver.solve(
+        solver.Problem(fn=f, encoding=enc, kind="jax"),
+        solver.Batched(mesh=mesh, pop_axes=tuple(pop_axes),
+                       virtual_block=virtual_block,
+                       quorum_mask=quorum_mask),
+        x0=x0s, max_iters=max_iters)
+    e = res.extras
+    return BatchedResult(bits=e["bits"], values=e["values"],
+                         iterations=e["restart_iterations"],
+                         trace=e["trace"], best=e["best"])

@@ -71,6 +71,17 @@ def decode(bits: jax.Array, enc: Encoding) -> jax.Array:
     return enc.lo + level * (span / (enc.levels - 1))
 
 
+def decode_np(bits, enc: Encoding) -> np.ndarray:
+    """Numpy twin of :func:`decode` for host-side result assembly (no op
+    dispatch — the solver facade uses it on already-fetched bit strings)."""
+    b = np.asarray(bits)
+    b = b.reshape(*b.shape[:-1], enc.n_vars, enc.bits).astype(np.uint32)
+    weights = (np.uint32(1) << np.arange(enc.bits - 1, -1, -1)).astype(np.uint32)
+    level = (b * weights).sum(axis=-1).astype(np.float32)
+    span = enc.hi - enc.lo
+    return enc.lo + level * np.float32(span / (enc.levels - 1))
+
+
 def reencode(bits: jax.Array, enc_from: Encoding, enc_to: Encoding) -> jax.Array:
     """Re-encode a parent at a new resolution (paper step 5: raise resolution)."""
     return encode(decode(bits, enc_from), enc_to)

@@ -111,6 +111,67 @@ TEST_FUNCTIONS: list[Objective] = [
 
 
 # ---------------------------------------------------------------------------
+# string-keyed registry — the one table every front end shares
+# ---------------------------------------------------------------------------
+# ``get("rastrigin", n=5)`` replaces the hand-rolled factory dicts that
+# serve.py / benchmarks / examples each used to carry (and that silently
+# disagreed on which objectives exist).  Entries are factories; whether a
+# factory is dimensioned (takes the variable count ``n``) is recorded so
+# callers get a helpful error instead of a ``TypeError`` deep in a lambda.
+
+_DIMENSIONED = True
+_FIXED = False
+
+# name -> (factory, accepts n)
+_REGISTRY: dict[str, tuple[Callable[..., Objective], bool]] = {
+    "quadratic": (lambda n=2, **kw: quadratic_nd(n, **kw), _DIMENSIONED),
+    "rastrigin": (rastrigin, _DIMENSIONED),
+    "ackley": (ackley, _DIMENSIONED),
+    "griewank": (griewank, _DIMENSIONED),
+    "shekel": (shekel, _FIXED),          # 4-D by construction; kw m=5|7|10
+    "becker_lago": (becker_lago, _FIXED),
+    "sample2d": (sample_2d, _FIXED),
+    "xor": (lambda: xor_objective(), _FIXED),
+    "remote_sensing": (lambda **kw: remote_sensing_objective(**kw), _FIXED),
+}
+
+
+def names() -> tuple[str, ...]:
+    """Registered objective names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def accepts_n(name: str) -> bool:
+    """Whether ``get(name, n=...)`` honours a variable count."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown objective {name!r}; "
+                         f"valid names: {', '.join(names())}")
+    return _REGISTRY[name][1]
+
+
+def get(name: str, n: int | None = None, **kwargs) -> Objective:
+    """Build a registered objective by name.
+
+    ``n`` sets the variable count for dimensioned families (quadratic,
+    rastrigin, ackley, griewank); passing it for a fixed-dimensional
+    objective is an error rather than a silent ignore.  Extra ``kwargs``
+    reach the factory (e.g. ``get("shekel", m=7)``).
+    """
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown objective {name!r}; "
+                         f"valid names: {', '.join(names())}")
+    factory, dimensioned = _REGISTRY[name]
+    if n is not None:
+        if not dimensioned:
+            raise ValueError(
+                f"objective {name!r} has a fixed dimensionality; omit n "
+                f"(dimensioned objectives: "
+                f"{', '.join(k for k in names() if _REGISTRY[k][1])})")
+        kwargs["n"] = n
+    return factory(**kwargs)
+
+
+# ---------------------------------------------------------------------------
 # XOR ANN — the paper's 8-variable network (Fig. 4)
 # ---------------------------------------------------------------------------
 # 2-2-1 tanh network without an output bias: 2x2 input weights + 2 hidden

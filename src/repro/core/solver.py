@@ -1,0 +1,595 @@
+"""One ``solve()`` front door for every DGO execution substrate.
+
+The paper's pitch is ONE algorithm on many machines (sequential SPARC,
+SIMD MP-1, MIMD NCUBE).  This module is that pitch as an API: a
+:class:`Problem` says *what* to optimize, a :class:`Strategy` says *how*
+(which engine / mesh / schedule), and :func:`solve` returns the same
+:class:`SolveResult` pytree no matter which substrate did the work — so
+strategies can be compared, swapped and registry-selected by string
+exactly the way the distributed-GA evaluation literature asks for.
+
+  >>> from repro.core.solver import solve
+  >>> res = solve("rastrigin", strategy="clustered", seed=0)
+  >>> float(res.best_f)                          # ~0.0
+
+Strategies (string key -> class, see ``strategy_names()``):
+
+  ``sequential``   one-child-at-a-time numpy loop (SPARC baseline)
+  ``fused``        whole optimization in one jitted lax.while_loop
+  ``clustered``    vmap of the fused engine over multi-starts (MP-1 cluster)
+  ``distributed``  shard_map population distribution over a mesh
+                   (``driver="device"`` one-dispatch loop, or ``"host"``)
+  ``batched``      R lockstep restarts in one compiled distributed loop
+                   (the serving path)
+
+Resolution schedules: the schedule engines (sequential/fused/clustered)
+default to the paper's step-5/6 escalation up to ``max_bits=16``.  The
+distributed engines are fixed-resolution by construction; passing
+``max_bits`` to ``Distributed``/``Batched`` chains one engine per
+resolution (re-encoding the parent between them — paper step 5 on the
+mesh), which is how they join resolution-schedule parity with the rest.
+
+Legacy entry points (``dgo.run``, ``run_clustered``, ``run_sequential``,
+``distributed.run_distributed``, ``run_distributed_batched``) are thin
+deprecated wrappers over :func:`solve`; see README.md for the migration
+table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import AxisType, make_mesh, pure_callback
+from repro.core import objectives as objectives_registry
+from repro.core.dgo import DGOConfig
+from repro.core.encoding import Encoding, decode, decode_np
+from repro.core.objectives import Objective
+
+__all__ = [
+    "Batched", "Clustered", "Distributed", "Fused", "Problem", "Sequential",
+    "SolveResult", "Strategy", "solve", "strategy_names",
+]
+
+
+# ---------------------------------------------------------------------------
+# Problem: what to optimize (absorbs objectives.Objective)
+# ---------------------------------------------------------------------------
+
+# exceptions that mean "this callable needs concrete arrays" (a host
+# objective hitting an abstract tracer), as opposed to a genuinely buggy
+# jax objective whose error must surface at construction time
+_HOST_CONVENTION_ERRORS = tuple(
+    getattr(jax.errors, name) for name in (
+        "ConcretizationTypeError", "TracerArrayConversionError",
+        "TracerBoolConversionError", "TracerIntegerConversionError")
+    if hasattr(jax.errors, name))
+
+
+def _detect_kind(fn: Callable, n_vars: int) -> str:
+    """"jax" if ``fn`` traces on an (n_vars,) float32 abstract value,
+    "numpy" if tracing fails only because the callable concretizes its
+    argument (np.asarray/float/bool on a tracer).  Any other tracing
+    error is a real bug in the objective and propagates."""
+    try:
+        jax.eval_shape(fn, jax.ShapeDtypeStruct((n_vars,), jnp.float32))
+        return "jax"
+    except _HOST_CONVENTION_ERRORS:
+        return "numpy"
+    except Exception as e:
+        raise ValueError(
+            f"objective failed to trace as a jax function ({type(e).__name__}: "
+            f"{e}); if it is a host/numpy objective that cannot trace, pass "
+            f"kind='numpy' explicitly") from e
+
+
+_ADAPTER_ATTR = "__dgo_jax_adapter__"
+
+
+def _host_to_jax(fn: Callable) -> Callable:
+    """Wrap a host/numpy objective as a jax-traceable scalar function via
+    ``pure_callback``.
+
+    The adapter is memoized ON the function object itself (its lifetime
+    is exactly the objective's — no global registry to leak), so two
+    Problems wrapping the same host objective share ONE adapter and the
+    engine compile cache keys on a stable callable instead of recompiling
+    per Problem instance.  Objects that reject attributes (builtins,
+    slotted callables) just get an unshared adapter.
+    """
+    adapter = getattr(fn, _ADAPTER_ATTR, None)
+    if adapter is not None:
+        return adapter
+
+    def host(x):
+        return np.asarray(fn(np.asarray(x)), np.float32).reshape(())
+
+    def wrapped(x):
+        return pure_callback(host, jax.ShapeDtypeStruct((), jnp.float32), x)
+
+    try:
+        setattr(fn, _ADAPTER_ATTR, wrapped)
+    except (AttributeError, TypeError):
+        pass
+    return wrapped
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """An optimization problem: objective + search box/resolution.
+
+    ``fn`` maps ``(n_vars,) -> scalar`` and may follow either calling
+    convention — jax-traceable (every device engine) or host/numpy (the
+    old ``run_sequential`` contract).  The convention is detected once at
+    construction (override with ``kind="jax"|"numpy"``) and adapted in
+    both directions: ``jax_fn`` is what device engines consume,
+    ``host_fn()`` what the sequential loop consumes.  ``f_opt``/``tol``
+    (known optimum and success tolerance) ride along for tests and
+    benchmarks, absorbing :class:`repro.core.objectives.Objective`.
+    """
+
+    fn: Callable[[Any], Any]
+    encoding: Encoding
+    name: str = "custom"
+    f_opt: float | None = None
+    tol: float | None = None
+    kind: str | None = None      # "jax" | "numpy" | None = auto-detect
+
+    def __post_init__(self):
+        if self.kind is None:
+            object.__setattr__(
+                self, "kind", _detect_kind(self.fn, self.encoding.n_vars))
+        if self.kind not in ("jax", "numpy"):
+            raise ValueError(f"kind must be 'jax' or 'numpy', "
+                             f"got {self.kind!r}")
+        if self.kind == "numpy":
+            object.__setattr__(self, "_jax_adapter", _host_to_jax(self.fn))
+
+    @classmethod
+    def from_objective(cls, obj: Objective) -> "Problem":
+        return cls(fn=obj.fn, encoding=obj.encoding, name=obj.name,
+                   f_opt=obj.f_opt, tol=obj.tol, kind="jax")
+
+    @classmethod
+    def get(cls, name: str, n: int | None = None, **kwargs) -> "Problem":
+        """Build from the objective registry: ``Problem.get("rastrigin",
+        n=5)``.  Unknown names raise with the list of valid ones."""
+        return cls.from_objective(objectives_registry.get(name, n=n,
+                                                          **kwargs))
+
+    def replace(self, **changes) -> "Problem":
+        """Functional update (e.g. ``problem.replace(encoding=enc)``)."""
+        return dataclasses.replace(self, **changes)
+
+    @property
+    def jax_fn(self) -> Callable:
+        """The objective as a jax-traceable ``(n_vars,) -> ()`` function."""
+        if self.kind == "jax":
+            return self.fn
+        return getattr(self, "_jax_adapter")
+
+    def host_fn(self) -> Callable:
+        """The objective as a host ``np.ndarray -> float`` function."""
+        if self.kind == "numpy":
+            return self.fn
+        fn = self.fn
+
+        def f_host(x):
+            return float(fn(jnp.asarray(x, jnp.float32)))
+
+        return f_host
+
+    def random_x0(self, key: jax.Array, batch: int | None = None):
+        """Uniform start point(s) in the search box."""
+        enc = self.encoding
+        shape = (enc.n_vars,) if batch is None else (batch, enc.n_vars)
+        return jax.random.uniform(key, shape, minval=enc.lo, maxval=enc.hi)
+
+
+# ---------------------------------------------------------------------------
+# SolveResult: the one result pytree every strategy populates
+# ---------------------------------------------------------------------------
+
+class SolveResult(NamedTuple):
+    """Uniform result of :func:`solve` across every strategy.
+
+    ``extras`` carries per-strategy detail (bit strings, evaluation
+    counts, per-restart values, raw histories, ...) keyed by short names —
+    see each strategy's docstring.  The tuple itself is a pytree, so it
+    can cross jit/pmap boundaries and be tree-mapped.
+    """
+
+    best_x: jax.Array        # (n_vars,) best point found
+    best_f: jax.Array        # () objective value at best_x
+    iterations: int          # total accepted/attempted population steps
+    trace: np.ndarray        # (T,) monotone best-value-so-far history
+    extras: dict             # per-strategy detail (see strategy docstrings)
+
+
+# ---------------------------------------------------------------------------
+# Strategy hierarchy + registry
+# ---------------------------------------------------------------------------
+
+STRATEGIES: dict[str, type] = {}
+
+
+def _register(cls):
+    STRATEGIES[cls.name] = cls
+    return cls
+
+
+def strategy_names() -> tuple[str, ...]:
+    """Registered strategy keys, sorted."""
+    return tuple(sorted(STRATEGIES))
+
+
+class Strategy:
+    """How to execute DGO.  Subclasses are frozen dataclasses carrying
+    engine knobs; ``solve()`` accepts an instance, the class, or its
+    string key."""
+
+    name: ClassVar[str] = "abstract"
+
+    def _solve(self, problem: Problem, *, key: jax.Array, x0,
+               max_iters: int | None) -> SolveResult:
+        raise NotImplementedError
+
+    def _config(self, problem: Problem, max_iters: int | None,
+                max_bits: int | None, bits_step: int) -> DGOConfig:
+        return DGOConfig(
+            encoding=problem.encoding,
+            max_bits=16 if max_bits is None else max_bits,
+            bits_step=bits_step,
+            max_iters_per_resolution=512 if max_iters is None else max_iters)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class Sequential(Strategy):
+    """The paper's SPARC baseline: one-child-at-a-time numpy loop.
+
+    extras: ``bits`` (final-resolution bit string), ``evaluations``.
+    """
+
+    name: ClassVar[str] = "sequential"
+    max_bits: int | None = None       # None -> DGOConfig default (16)
+    bits_step: int = 2
+    time_budget_s: float | None = None
+    max_total_iters: int | None = None   # total-iteration guard
+
+    def _solve(self, problem, *, key, x0, max_iters):
+        from repro.core import dgo
+        cfg = self._config(problem, max_iters, self.max_bits, self.bits_step)
+        if x0 is None:
+            x0 = problem.random_x0(key)
+        r = dgo._sequential_result(problem.host_fn(), cfg, np.asarray(x0),
+                                   time_budget_s=self.time_budget_s,
+                                   max_iters=self.max_total_iters)
+        # the raw history is the parent value after each step, which can
+        # rise at a resolution escalation (re-quantization); the uniform
+        # SolveResult trace is best-so-far like every other strategy
+        return SolveResult(best_x=r.x, best_f=r.value,
+                           iterations=int(r.iterations),
+                           trace=np.minimum.accumulate(r.trace),
+                           extras={"bits": r.bits,
+                                   "evaluations": r.evaluations,
+                                   "raw_trace": r.trace})
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class Fused(Strategy):
+    """Whole optimization (population steps AND resolution schedule) in
+    one jitted ``lax.while_loop`` on one device.
+
+    extras: ``bits``, ``evaluations``.
+    """
+
+    name: ClassVar[str] = "fused"
+    max_bits: int | None = None
+    bits_step: int = 2
+
+    def _solve(self, problem, *, key, x0, max_iters):
+        from repro.core import dgo
+        cfg = self._config(problem, max_iters, self.max_bits, self.bits_step)
+        r = dgo._fused_result(problem.jax_fn, cfg, x0=x0, key=key)
+        return SolveResult(best_x=r.x, best_f=r.value,
+                           iterations=int(r.iterations), trace=r.trace,
+                           extras={"bits": r.bits,
+                                   "evaluations": r.evaluations})
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class Clustered(Strategy):
+    """vmap of the fused engine over independent start points (the
+    paper's MP-1 cluster mode); best-of wins.
+
+    ``x0`` may pin heterogeneous starts as an ``(n_clusters, n_vars)``
+    array; omitted, starts are drawn from the seed.
+
+    extras: ``bits``, ``evaluations`` (summed), ``cluster_values``
+    ((n_clusters,) final value per cluster), ``winner`` (index).
+    """
+
+    name: ClassVar[str] = "clustered"
+    n_clusters: int = 8
+    max_bits: int | None = None
+    bits_step: int = 2
+
+    def _solve(self, problem, *, key, x0, max_iters):
+        from repro.core import dgo
+        cfg = self._config(problem, max_iters, self.max_bits, self.bits_step)
+        if x0 is not None:
+            x0 = jnp.asarray(x0, jnp.float32)
+            if x0.ndim != 2:
+                raise ValueError(f"clustered starts must be "
+                                 f"(n_clusters, n_vars), got {x0.shape}")
+        r, aux = dgo._clustered_result(problem.jax_fn, cfg, self.n_clusters,
+                                       key=key, x0s=x0)
+        return SolveResult(best_x=r.x, best_f=r.value,
+                           iterations=int(r.iterations),
+                           trace=aux["winner_trace"],
+                           extras={"bits": r.bits,
+                                   "evaluations": r.evaluations,
+                                   "cluster_values": aux["cluster_values"],
+                                   "winner": aux["winner"]})
+
+
+def _resolution_schedule(enc: Encoding, max_bits: int | None,
+                         bits_step: int) -> list[int]:
+    """The distributed engines' schedule: fixed at ``enc.bits`` when
+    ``max_bits`` is None, else the paper's step-5 escalation."""
+    if max_bits is None:
+        return [enc.bits]
+    cfg = DGOConfig(encoding=enc, max_bits=max_bits, bits_step=bits_step)
+    return cfg.resolutions() or [enc.bits]
+
+
+_DEFAULT_MESH = None
+
+
+def _default_mesh():
+    """All local devices on a ("data",) axis — built once per process."""
+    global _DEFAULT_MESH
+    if _DEFAULT_MESH is None:
+        _DEFAULT_MESH = make_mesh((jax.device_count(),), ("data",),
+                                  axis_types=(AxisType.Auto,))
+    return _DEFAULT_MESH
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class Distributed(Strategy):
+    """Population distribution over a mesh (MP-1/NCUBE): the 2N-1
+    children are sharded over ``pop_axes``; ``driver="device"`` runs the
+    whole loop as one dispatch, ``driver="host"`` steps from Python so
+    failure injection / elastic policy can interpose.
+
+    Fixed-resolution by default (the legacy ``run_distributed``
+    contract); setting ``max_bits`` chains one engine per resolution,
+    re-encoding the parent between them (paper step 5).
+
+    extras: ``bits`` (final parent bit string at the best resolution),
+    ``history`` (raw per-iteration parent values, list of floats),
+    ``schedule`` (resolutions run), ``bits_resolution``.
+    """
+
+    name: ClassVar[str] = "distributed"
+    mesh: Any = None                  # None -> all devices on ("data",)
+    pop_axes: tuple = ("data",)
+    driver: str = "device"
+    inner: str | None = None
+    virtual_block: int = 256
+    interpret: bool | None = None
+    tile_p: int | None = None
+    max_bits: int | None = None       # None -> fixed resolution
+    bits_step: int = 2
+    quorum_mask: Any = None
+    injector: Any = None
+
+    def _solve(self, problem, *, key, x0, max_iters):
+        from repro.core import distributed
+        mesh = self.mesh if self.mesh is not None else _default_mesh()
+        mi = 256 if max_iters is None else max_iters
+        enc0 = problem.encoding
+        if x0 is None:
+            x0 = problem.random_x0(key)
+        x = jnp.asarray(x0, jnp.float32)
+        f = problem.jax_fn
+
+        schedule = _resolution_schedule(enc0, self.max_bits, self.bits_step)
+        history: list[float] = []
+        best = None   # (float val, device val, bits, enc)
+        for i, b in enumerate(schedule):
+            enc = enc0.with_bits(b)
+            bits, val, hist = distributed._run_distributed(
+                f, enc, mesh, x, pop_axes=tuple(self.pop_axes),
+                max_iters=mi, virtual_block=self.virtual_block,
+                quorum_mask=self.quorum_mask, inner=self.inner,
+                interpret=self.interpret, driver=self.driver,
+                injector=self.injector, tile_p=self.tile_p)
+            history.extend(hist if i == 0 else hist[1:])
+            if best is None or float(val) < best[0]:
+                best = (float(val), val, bits, enc)
+            x = decode(bits, enc)
+        _, best_val, best_bits, best_enc = best
+        trace = np.minimum.accumulate(np.asarray(history, np.float32))
+        return SolveResult(best_x=decode(best_bits, best_enc),
+                           best_f=best_val,
+                           iterations=len(history) - 1, trace=trace,
+                           extras={"bits": best_bits,
+                                   "bits_resolution": best_enc.bits,
+                                   "history": history,
+                                   "schedule": tuple(schedule)})
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class Batched(Strategy):
+    """R restarts advancing in lockstep inside ONE compiled distributed
+    while_loop — the batched-request serving path (``serve.py --dgo``).
+
+    ``x0`` pins start points as ``(R, n_vars)`` (its leading dim then
+    overrides ``restarts``); omitted, ``restarts`` uniform starts are
+    drawn from the seed.  Fixed-resolution by default; ``max_bits``
+    chains resolutions like :class:`Distributed`.
+
+    extras: ``bits`` ((R, N) per-restart best points as final-resolution
+    strings — the engine's final parents on the fixed-resolution path),
+    ``values`` ((R,) per-restart best), ``restart_iterations`` ((R,)),
+    ``trace`` ((R, T) per-restart monotone histories), ``best`` (winner
+    index), ``schedule``.
+    """
+
+    name: ClassVar[str] = "batched"
+    restarts: int = 8
+    mesh: Any = None
+    pop_axes: tuple = ("data",)
+    virtual_block: int = 256
+    max_bits: int | None = None
+    bits_step: int = 2
+    quorum_mask: Any = None
+
+    def _solve(self, problem, *, key, x0, max_iters):
+        from repro.core import distributed
+        mesh = self.mesh if self.mesh is not None else _default_mesh()
+        mi = 256 if max_iters is None else max_iters
+        enc0 = problem.encoding
+        if x0 is None:
+            x0 = problem.random_x0(key, batch=self.restarts)
+        x0s = jnp.asarray(x0, jnp.float32)
+        if x0s.ndim != 2:
+            raise ValueError(f"batched starts must be (R, n_vars), "
+                             f"got {x0s.shape}")
+        n_restarts = x0s.shape[0]
+        f = problem.jax_fn
+
+        schedule = _resolution_schedule(enc0, self.max_bits, self.bits_step)
+        if len(schedule) == 1:
+            # fixed resolution — the hot serving path: hand the engine's
+            # result through untouched (its traces are already monotone
+            # and padded); no per-restart host loop, no extra syncs
+            res = distributed._run_batched(
+                f, enc0, mesh, x0s, pop_axes=tuple(self.pop_axes),
+                max_iters=mi, virtual_block=self.virtual_block,
+                quorum_mask=self.quorum_mask)
+            winner = res.best
+            return SolveResult(
+                best_x=jnp.asarray(
+                    decode_np(jax.device_get(res.bits)[winner], enc0)),
+                best_f=res.values[winner],
+                iterations=int(np.asarray(res.iterations).max()),
+                trace=res.trace[winner],
+                extras={"bits": res.bits, "values": res.values,
+                        "restart_iterations": res.iterations,
+                        "trace": res.trace, "best": winner,
+                        "schedule": tuple(schedule)})
+
+        segments: list[list[np.ndarray]] = [[] for _ in range(n_restarts)]
+        iters_total = np.zeros((n_restarts,), np.int64)
+        best_vals = np.full((n_restarts,), np.inf, np.float64)
+        best_xs = [None] * n_restarts
+        for i, b in enumerate(schedule):
+            enc = enc0.with_bits(b)
+            res = distributed._run_batched(
+                f, enc, mesh, x0s, pop_axes=tuple(self.pop_axes),
+                max_iters=mi, virtual_block=self.virtual_block,
+                quorum_mask=self.quorum_mask)
+            iters_h = np.asarray(jax.device_get(res.iterations))
+            vals_h = np.asarray(jax.device_get(res.values))
+            xs = decode(res.bits, enc)
+            for r in range(n_restarts):
+                seg = np.asarray(res.trace[r][: int(iters_h[r]) + 1])
+                segments[r].append(seg if i == 0 else seg[1:])
+                iters_total[r] += int(iters_h[r])
+                if vals_h[r] < best_vals[r]:
+                    best_vals[r] = vals_h[r]
+                    best_xs[r] = xs[r]
+            x0s = xs
+
+        t_max = max(sum(len(s) for s in segs) for segs in segments)
+        trace = np.empty((n_restarts, t_max), np.float32)
+        for r, segs in enumerate(segments):
+            h = np.minimum.accumulate(np.concatenate(segs))
+            trace[r, : len(h)] = h
+            trace[r, len(h):] = h[-1]
+
+        final_values = jnp.asarray(best_vals, jnp.float32)
+        winner = int(np.argmin(best_vals))
+        # per-restart bests may come from different resolutions, so report
+        # each best point quantized at the FINAL resolution — decode(bits)
+        # matches values up to half a finest-lattice step (same convention
+        # as the fused engine's DGOResult.bits)
+        from repro.core.encoding import encode
+        enc_final = enc0.with_bits(schedule[-1])
+        bits = encode(jnp.stack(best_xs), enc_final)
+        return SolveResult(
+            best_x=best_xs[winner], best_f=final_values[winner],
+            iterations=int(iters_total.max()), trace=trace[winner],
+            extras={"bits": bits, "values": final_values,
+                    "restart_iterations": jnp.asarray(iters_total,
+                                                      jnp.int32),
+                    "trace": trace, "best": winner,
+                    "schedule": tuple(schedule)})
+
+
+# ---------------------------------------------------------------------------
+# solve(): the front door
+# ---------------------------------------------------------------------------
+
+def as_problem(problem, **kwargs) -> Problem:
+    """Coerce a Problem / Objective / registry name into a Problem."""
+    if isinstance(problem, Problem):
+        return problem
+    if isinstance(problem, Objective):
+        return Problem.from_objective(problem)
+    if isinstance(problem, str):
+        return Problem.get(problem, **kwargs)
+    raise TypeError(f"cannot interpret {type(problem).__name__} as a "
+                    f"Problem (want Problem, Objective, or registry name)")
+
+
+def as_strategy(strategy) -> Strategy:
+    """Coerce a Strategy instance / class / string key into an instance."""
+    if isinstance(strategy, Strategy):
+        return strategy
+    if isinstance(strategy, type) and issubclass(strategy, Strategy):
+        return strategy()
+    if isinstance(strategy, str):
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {strategy!r}; registered: "
+                             f"{', '.join(strategy_names())}")
+        return STRATEGIES[strategy]()
+    raise TypeError(f"cannot interpret {type(strategy).__name__} as a "
+                    f"Strategy (want Strategy, its class, or a string key)")
+
+
+def solve(problem, strategy="fused", *, seed: int | jax.Array = 0,
+          x0=None, max_iters: int | None = None) -> SolveResult:
+    """Run DGO on ``problem`` under ``strategy``; the one front door.
+
+    ``problem``: a :class:`Problem`, an ``objectives.Objective``, or a
+    registry name (``"rastrigin"``).  ``strategy``: a :class:`Strategy`
+    instance/class or string key (see ``strategy_names()``).
+
+    ``seed`` drives random start points (an int, or a PRNG key for
+    callers threading their own); ``x0`` pins the start instead —
+    ``(n_vars,)``, or ``(R, n_vars)`` for clustered/batched.
+    ``max_iters`` caps iterations per resolution (strategy default when
+    None: 512 for the schedule engines, 256 for the distributed ones).
+
+    Every strategy returns the same :class:`SolveResult` pytree.
+    """
+    prob = as_problem(problem)
+    strat = as_strategy(strategy)
+    if x0 is not None:
+        key = None               # pinned start: skip key construction
+    elif isinstance(seed, (jax.Array, np.ndarray)):
+        key = jnp.asarray(seed)
+    else:
+        key = jax.random.PRNGKey(int(seed))
+    return strat._solve(prob, key=key, x0=x0, max_iters=max_iters)

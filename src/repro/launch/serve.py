@@ -15,10 +15,11 @@ DGO batched-request path (the optimization-as-a-service analogue):
       --n-vars 2 --restarts 8 --waves 2
 
 Each wave is a batch of R optimization requests (random start points) run
-through ``run_distributed_batched`` — one compiled on-device while_loop
-advances all R restarts in lockstep over the population mesh, so wave
-wall-clock amortizes to near a single run; throughput reported as
-completed runs/s and population iterations/s.
+through ``solve(problem, strategy=Batched(...))`` — one compiled on-device
+while_loop advances all R restarts in lockstep over the population mesh,
+so wave wall-clock amortizes to near a single run; throughput reported as
+completed runs/s and population iterations/s. ``--problem`` accepts any
+objective registry name (``repro.core.objectives.names()``).
 """
 from __future__ import annotations
 
@@ -34,19 +35,26 @@ from repro.models import init_model, lm_decode, lm_prefill
 
 
 def serve_dgo(args) -> None:
-    """Serve waves of batched DGO requests via the on-device engine."""
+    """Serve waves of batched DGO requests via ``solve(strategy=Batched)``.
+
+    The objective comes from the registry (``objectives.get``) — any
+    registered name works, including the fixed-dimensional families
+    (shekel, becker_lago, xor, ...) the old hand-rolled factory table
+    omitted; an unknown name exits with the list of valid ones.
+    """
     from repro.compat import AxisType, make_mesh
     from repro.core import objectives
-    from repro.core.distributed import run_distributed_batched
+    from repro.core.solver import Batched, Problem, solve
 
-    factories = {"quadratic": lambda n: objectives.quadratic_nd(n),
-                 "rastrigin": lambda n: objectives.rastrigin(n),
-                 "ackley": lambda n: objectives.ackley(n),
-                 "griewank": lambda n: objectives.griewank(n)}
-    obj = factories[args.problem](args.n_vars)
+    try:
+        obj = objectives.get(args.problem, n=args.n_vars)
+    except ValueError as e:
+        raise SystemExit(f"--problem: {e}")
+    problem = Problem.from_objective(obj)
     n_dev = jax.device_count()
     mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
-    enc = obj.encoding
+    enc = problem.encoding
+    strategy = Batched(restarts=args.restarts, mesh=mesh)
 
     key = jax.random.PRNGKey(args.seed)
     total_runs = 0
@@ -58,21 +66,19 @@ def serve_dgo(args) -> None:
         x0s = jax.random.uniform(kw, (args.restarts, enc.n_vars),
                                  minval=enc.lo, maxval=enc.hi)
         if wave == 0:   # compile wave — steady-state timing starts after
-            run_distributed_batched(obj.fn, enc, mesh, x0s,
-                                    max_iters=args.max_iters)
+            solve(problem, strategy, x0=x0s, max_iters=args.max_iters)
         t0 = time.time()
-        res = run_distributed_batched(obj.fn, enc, mesh, x0s,
-                                      max_iters=args.max_iters)
-        jax.block_until_ready(res.values)
+        res = solve(problem, strategy, x0=x0s, max_iters=args.max_iters)
+        jax.block_until_ready(res.extras["values"])
         t_serve += time.time() - t0
         total_runs += args.restarts
-        total_iters += int(jnp.sum(res.iterations))
-        best = min(best, float(res.values[res.best]))
+        total_iters += int(jnp.sum(res.extras["restart_iterations"]))
+        best = min(best, float(res.best_f))
         print(f"[serve] wave {wave}: {args.restarts} runs, best "
-              f"{float(res.values[res.best]):.5f}")
+              f"{float(res.best_f):.5f}")
 
     print(json.dumps({
-        "problem": obj.name,
+        "problem": problem.name,
         "runs_per_s": round(total_runs / max(t_serve, 1e-9), 1),
         "iters_per_s": round(total_iters / max(t_serve, 1e-9), 1),
         "total_runs": total_runs,
@@ -87,8 +93,13 @@ def main():
                     help="serve batched DGO optimization requests instead "
                          "of LM decode")
     ap.add_argument("--problem", default="rastrigin",
-                    choices=["quadratic", "rastrigin", "ackley", "griewank"])
-    ap.add_argument("--n-vars", type=int, default=2)
+                    help="objective registry name (see "
+                         "repro.core.objectives.names()); unknown names "
+                         "exit with the valid list")
+    ap.add_argument("--n-vars", type=int, default=None,
+                    help="variable count for dimensioned objectives "
+                         "(quadratic/rastrigin/ackley/griewank); omit for "
+                         "fixed-dimensional ones (shekel, xor, ...)")
     ap.add_argument("--restarts", type=int, default=8,
                     help="DGO requests per wave")
     ap.add_argument("--max-iters", type=int, default=64)

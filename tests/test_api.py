@@ -1,0 +1,70 @@
+"""Public-API snapshot: accidental surface changes must fail loudly.
+
+Changing this list is an API decision, not a refactor side effect —
+update it deliberately (and the README migration table with it).
+"""
+import repro.core as core
+
+PUBLIC_API = [
+    # the solver facade (the supported surface)
+    "Batched",
+    "Clustered",
+    "Distributed",
+    "Fused",
+    "Problem",
+    "Sequential",
+    "SolveResult",
+    "Strategy",
+    "solve",
+    "strategy_names",
+    # shared specs / subsystems
+    "DGOConfig",
+    "DGOResult",
+    "BatchedResult",
+    "Encoding",
+    "cache",
+    "objectives",
+    # encoding / population primitives
+    "binary_to_gray",
+    "decode",
+    "dgo_iteration",
+    "encode",
+    "generate_children",
+    "generate_population",
+    "gray_to_binary",
+    "population_size",
+    # engine builders (power users)
+    "make_distributed_engine",
+    "make_distributed_engine_batched",
+    "make_distributed_step",
+    # deprecated legacy entry points (wrappers over solve())
+    "run",
+    "run_clustered",
+    "run_distributed",
+    "run_distributed_batched",
+    "run_sequential",
+    # subspace DGO (LM training path)
+    "apply_subspace",
+    "make_dgo_train_step",
+    "materialize_winner",
+]
+
+
+def test_public_api_snapshot():
+    assert sorted(core.__all__) == sorted(PUBLIC_API)
+
+
+def test_public_api_resolves():
+    for name in core.__all__:
+        assert hasattr(core, name), name
+
+
+def test_strategy_registry_snapshot():
+    assert core.strategy_names() == (
+        "batched", "clustered", "distributed", "fused", "sequential")
+
+
+def test_objective_registry_snapshot():
+    assert core.objectives.names() == (
+        "ackley", "becker_lago", "griewank", "quadratic", "rastrigin",
+        "remote_sensing", "sample2d", "shekel", "xor")

@@ -1,0 +1,307 @@
+"""The solve() front door: strategy parity, callable adaptation, the
+compilation-cache subsystem, and legacy-wrapper delegation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache
+from repro.core.dgo import DGOConfig, DGOResult
+from repro.core.encoding import Encoding
+from repro.core.solver import (
+    Batched, Clustered, Distributed, Fused, Problem, Sequential,
+    SolveResult, as_strategy, solve, strategy_names,
+)
+
+MAX_BITS = 12
+MAX_ITERS = 64
+
+
+def _strategies():
+    """Every registered strategy, configured for the parity run.
+
+    ``dup`` marks multi-start strategies whose pinned starts duplicate the
+    single x0 so their winner must follow the same trajectory.
+    """
+    return [
+        ("sequential", Sequential(max_bits=MAX_BITS), False),
+        ("fused", Fused(max_bits=MAX_BITS), False),
+        ("clustered", Clustered(n_clusters=2, max_bits=MAX_BITS), True),
+        ("distributed-device", Distributed(max_bits=MAX_BITS,
+                                           driver="device"), False),
+        ("distributed-host", Distributed(max_bits=MAX_BITS,
+                                         driver="host"), False),
+        ("batched", Batched(max_bits=MAX_BITS), True),
+    ]
+
+
+@pytest.mark.parametrize("pname,n,x0", [
+    ("quadratic", 3, [4.0, -3.0, 6.5]),
+    ("rastrigin", 2, [3.1, -2.2]),
+])
+def test_strategy_parity(pname, n, x0):
+    """solve() under every registered strategy follows the same algorithm:
+    from one pinned start they all land on the same value (the paper's
+    one-algorithm-many-machines claim as a test)."""
+    prob = Problem.get(pname, n=n)
+    x0 = jnp.asarray(x0)
+    x0s = jnp.stack([x0, x0])       # duplicated start: winner == single run
+
+    finals = {}
+    for name, strat, dup in _strategies():
+        res = solve(prob, strat, x0=x0s if dup else x0, max_iters=MAX_ITERS)
+        assert isinstance(res, SolveResult), name
+        assert res.iterations > 0, name
+        assert res.best_x.shape == (n,), name
+        assert (np.diff(res.trace) <= 1e-6).all(), (name, "trace monotone")
+        assert isinstance(res.extras, dict), name
+        finals[name] = float(res.best_f)
+
+    spread = max(finals.values()) - min(finals.values())
+    assert spread < 1e-3, finals
+    # the unimodal problem must actually be solved, not merely agreed on
+    if pname == "quadratic":
+        assert all(abs(v - prob.f_opt) < prob.tol for v in finals.values()), \
+            finals
+
+
+def test_distributed_schedule_chaining_improves_resolution():
+    """Distributed(max_bits=...) chains fixed-resolution engines through
+    the paper's step-5 escalation and must match the fused engine's
+    schedule result from the same start."""
+    prob = Problem.get("quadratic", n=2)
+    x0 = jnp.asarray([4.0, -3.0])
+    coarse = solve(prob, Distributed(), x0=x0, max_iters=MAX_ITERS)
+    fine = solve(prob, Distributed(max_bits=14), x0=x0, max_iters=MAX_ITERS)
+    fused = solve(prob, Fused(max_bits=14), x0=x0, max_iters=MAX_ITERS)
+    assert fine.extras["schedule"] == (8, 10, 12, 14)
+    assert float(fine.best_f) < float(coarse.best_f)
+    assert np.isclose(float(fine.best_f), float(fused.best_f), atol=1e-4)
+
+
+def test_solve_string_front_door_and_errors():
+    res = solve("quadratic", strategy="fused", seed=0, max_iters=32)
+    assert isinstance(res, SolveResult)
+    assert set(strategy_names()) == {
+        "sequential", "fused", "clustered", "distributed", "batched"}
+    assert isinstance(as_strategy(Fused), Fused)
+    with pytest.raises(ValueError, match="unknown strategy"):
+        solve("quadratic", strategy="warp-drive")
+    with pytest.raises(ValueError, match="unknown objective"):
+        solve("warp-drive")
+    with pytest.raises(TypeError):
+        solve(42)
+    with pytest.raises(TypeError):
+        solve("quadratic", strategy=42)
+
+
+def test_multi_start_strategies_validate_x0_shape():
+    prob = Problem.get("quadratic", n=2)
+    single = jnp.asarray([4.0, -3.0])
+    with pytest.raises(ValueError, match="clustered starts"):
+        solve(prob, Clustered(n_clusters=2), x0=single)
+    with pytest.raises(ValueError, match="batched starts"):
+        solve(prob, Batched(), x0=single)
+
+
+def test_host_adapter_shared_across_problem_instances():
+    """Two Problems wrapping the same host objective share one jax
+    adapter, so engine compilations cache across per-request Problem
+    construction instead of churning."""
+    enc = Encoding(n_vars=2, bits=8, lo=-10.0, hi=10.0)
+
+    def f_np(x):
+        return float((np.asarray(x) ** 2).sum())
+
+    a = Problem(fn=f_np, encoding=enc)
+    b = Problem(fn=f_np, encoding=enc)
+    assert a.jax_fn is b.jax_fn
+
+
+def test_broken_jax_objective_fails_at_construction():
+    """A genuinely buggy jax objective must error when the Problem is
+    built, not be silently misclassified as a host objective."""
+    enc = Encoding(n_vars=2, bits=8, lo=-10.0, hi=10.0)
+    W = jnp.ones((5, 5))                    # wrong shape for a 2-vector
+
+    with pytest.raises(ValueError, match="failed to trace"):
+        Problem(fn=lambda x: (x @ W).sum(), encoding=enc)
+
+
+def test_batched_schedule_bits_match_values():
+    """Chained-resolution Batched: decode(extras['bits'][r]) must be the
+    point whose value extras['values'][r] reports (quantized at the final
+    resolution), even when a restart's best came from an earlier
+    resolution."""
+    from repro.core.encoding import decode
+    prob = Problem.get("quadratic", n=2)
+    x0s = jnp.asarray([[4.0, -3.0], [7.0, 2.0]])
+    res = solve(prob, Batched(max_bits=12), x0=x0s, max_iters=32)
+    enc = prob.encoding.with_bits(res.extras["schedule"][-1])
+    for r in range(2):
+        x_r = decode(res.extras["bits"][r], enc)
+        v_r = float(prob.fn(x_r))
+        assert abs(v_r - float(res.extras["values"][r])) < 1e-2, r
+
+
+def test_problem_adapts_both_callable_conventions():
+    """Problem adapts numpy->jax (device engines run host objectives via
+    pure_callback) and jax->numpy (the sequential loop runs jax
+    objectives) — the old convention split is gone."""
+    enc = Encoding(n_vars=2, bits=8, lo=-10.0, hi=10.0)
+
+    def f_np(x):                     # host convention: np.ndarray -> float
+        return float(((np.asarray(x) - 1.5) ** 2).sum())
+
+    p_np = Problem(fn=f_np, encoding=enc)
+    assert p_np.kind == "numpy"
+    x0 = np.asarray([4.0, -3.0])
+    r_seq = solve(p_np, "sequential", x0=x0, max_iters=32)
+    r_fused = solve(p_np, "fused", x0=jnp.asarray(x0), max_iters=32)
+    assert np.isclose(float(r_seq.best_f), float(r_fused.best_f), atol=1e-4)
+
+    p_jax = Problem.get("quadratic", n=2)
+    assert p_jax.kind == "jax"
+    host = p_jax.host_fn()
+    assert isinstance(host(np.zeros(2)), float)
+    r = solve(p_jax, "sequential", x0=x0, max_iters=32)
+    assert isinstance(r, SolveResult)
+
+
+def test_sequential_max_iters_guard():
+    """run_sequential gained the device engines' total-iteration guard."""
+    from repro.core import dgo
+    prob = Problem.get("quadratic", n=2)
+    cfg = DGOConfig(encoding=prob.encoding, max_bits=14)
+    with pytest.warns(DeprecationWarning):
+        res = dgo.run_sequential(prob.host_fn(), cfg,
+                                 np.asarray([4.0, -3.0]), max_iters=3)
+    assert res.iterations <= 3
+    guarded = solve(prob, Sequential(max_bits=14, max_total_iters=3),
+                    x0=np.asarray([4.0, -3.0]))
+    assert guarded.iterations <= 3
+
+
+# ---------------------------------------------------------------------------
+# legacy wrappers: thin, warning, delegating to solve()
+# ---------------------------------------------------------------------------
+
+def test_legacy_run_delegates_to_solve():
+    from repro.core import dgo
+    prob = Problem.get("rastrigin", n=2)
+    cfg = DGOConfig(encoding=prob.encoding, max_bits=12)
+    x0 = jnp.asarray([3.1, -2.2])
+    with pytest.warns(DeprecationWarning, match="dgo.run is deprecated"):
+        legacy = dgo.run(prob.fn, cfg, x0=x0)
+    facade = solve(prob, Fused(max_bits=12), x0=x0, max_iters=512)
+    assert isinstance(legacy, DGOResult)
+    assert np.isclose(float(legacy.value), float(facade.best_f))
+    assert legacy.evaluations == facade.extras["evaluations"]
+    assert np.allclose(legacy.trace, facade.trace)
+
+
+def test_legacy_run_clustered_delegates_to_solve():
+    from repro.core import dgo
+    prob = Problem.get("rastrigin", n=2)
+    cfg = DGOConfig(encoding=prob.encoding, max_bits=12)
+    key = jax.random.PRNGKey(3)
+    with pytest.warns(DeprecationWarning, match="run_clustered"):
+        legacy = dgo.run_clustered(prob.fn, cfg, n_clusters=4, key=key)
+    facade = solve(prob, Clustered(n_clusters=4, max_bits=12), seed=key,
+                   max_iters=512)
+    assert np.isclose(float(legacy.value), float(facade.best_f))
+    # legacy quirk preserved: trace = per-cluster final values
+    assert np.allclose(legacy.trace, facade.extras["cluster_values"])
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="either key or x0s"):
+            dgo.run_clustered(prob.fn, cfg, n_clusters=4)
+
+
+def test_legacy_distributed_wrappers_delegate_to_solve():
+    from repro.core.distributed import (
+        run_distributed, run_distributed_batched)
+    from repro.core.solver import _default_mesh
+    prob = Problem.get("rastrigin", n=2)
+    mesh = _default_mesh()
+    x0 = jnp.asarray([3.1, -2.2])
+    with pytest.warns(DeprecationWarning, match="run_distributed is"):
+        bits, val, hist = run_distributed(prob.fn, prob.encoding, mesh, x0,
+                                          max_iters=32)
+    facade = solve(prob, Distributed(mesh=mesh), x0=x0, max_iters=32)
+    assert np.isclose(float(val), float(facade.best_f))
+    assert np.allclose(hist, facade.extras["history"])
+    assert np.array_equal(np.asarray(bits), np.asarray(facade.extras["bits"]))
+
+    x0s = jnp.stack([x0, x0 + 0.5])
+    with pytest.warns(DeprecationWarning, match="run_distributed_batched"):
+        legacy = run_distributed_batched(prob.fn, prob.encoding, mesh, x0s,
+                                         max_iters=32)
+    fb = solve(prob, Batched(mesh=mesh), x0=x0s, max_iters=32)
+    assert np.allclose(np.asarray(legacy.values),
+                       np.asarray(fb.extras["values"]))
+    assert legacy.best == fb.extras["best"]
+    assert np.allclose(legacy.trace, fb.extras["trace"])
+
+
+def test_exactly_one_cache_subsystem_remains():
+    """Acceptance guard: no lru_cache / _cached_* engine memo left in
+    dgo.py or distributed.py — core/cache.py is the only cache."""
+    import inspect
+    from repro.core import dgo, distributed
+    for mod in (dgo, distributed):
+        src = inspect.getsource(mod)
+        assert "lru_cache" not in src, mod.__name__
+        assert "_cached_" not in src, mod.__name__
+
+
+# ---------------------------------------------------------------------------
+# the cache subsystem itself
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_counts_hits_misses_and_evicts():
+    c = cache.CompileCache("t", maxsize=2)
+    builds = []
+
+    def build(tag):
+        def _b():
+            builds.append(tag)
+            return tag
+        return _b
+
+    assert c.get(("a",), build("a")) == "a"
+    assert c.get(("a",), build("a2")) == "a"       # hit: no rebuild
+    assert c.stats() == {"hits": 1, "misses": 1, "uncached": 0,
+                         "built": 1, "size": 1}
+    # unhashable key: uncached build, counted
+    assert c.get(["unhashable"], build("u")) == "u"
+    assert c.uncached == 1 and c.built == 2
+    # LRU eviction at maxsize=2
+    c.get(("b",), build("b"))
+    c.get(("c",), build("c"))                       # evicts ("a",)
+    c.get(("a",), build("a3"))                      # rebuilt
+    assert builds == ["a", "u", "b", "c", "a3"]
+    c.clear()
+    assert c.stats() == {"hits": 0, "misses": 0, "uncached": 0,
+                         "built": 0, "size": 0}
+
+
+def test_engine_cache_reused_across_solves():
+    cache.clear()
+    prob = Problem.get("ackley", n=2)
+    strat = Fused(max_bits=10)
+    x0 = jnp.asarray([2.0, -4.0])
+    solve(prob, strat, x0=x0, max_iters=16)
+    before = cache.get_cache("dgo.engine").stats()
+    solve(prob, strat, x0=x0, max_iters=16)
+    after = cache.get_cache("dgo.engine").stats()
+    assert after["built"] == before["built"]        # no recompilation
+    assert after["hits"] == before["hits"] + 1
+    assert cache.totals()["built"] >= after["built"]
+    assert "dgo.engine" in cache.stats()
+
+
+def test_unhashable_key_builds_uncached():
+    cache.clear()
+    c = cache.get_cache("dgo.engine")
+    val = c.get((["list"],), lambda: "built")      # tuple-of-list: unhashable
+    assert val == "built" and c.uncached == 1
