@@ -7,7 +7,6 @@ scene). Reports final errors and the error-trace advantage of DGO.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.core.encoding import Encoding
 from repro.core.objectives import RS_NVARS

@@ -8,16 +8,21 @@ Three loop forms are measured over the SAME optimization:
   plus a ``float(val)`` + ``bool(improved)`` host round-trip per iteration
   (the dispatch-latency-dominated regime the Amdahl-style analysis in
   ISSUE/PAPERS describes).
-* ``host_driver`` — the retained ``run_distributed(driver="host")``: still
+* ``host_driver`` — the retained ``Distributed(driver="host")``: still
   one dispatch + one convergence bool per iteration, but the value history
   stays on device until the end.
-* ``device_loop`` — ``run_distributed(driver="device")``: the entire loop
+* ``device_loop`` — ``Distributed(driver="device")``: the entire loop
   is one ``lax.while_loop`` inside ``shard_map``; one dispatch per
   optimization.
 
-Plus ``run_distributed_batched`` with R=8 restarts (one compiled loop for
-the whole batch) against R * single-run wall-clock, and ``run_sequential``
-as the absolute baseline. Emits ``BENCH_distributed.json``:
+Plus ``Batched`` with R=8 restarts (one compiled loop for the whole batch)
+against R * single-run wall-clock, the ``Sequential`` strategy as the
+absolute baseline, and a chained-vs-folded resolution-schedule comparison:
+``Distributed(max_bits=...)`` folds the paper's step-5 escalation into ONE
+compiled dispatch, measured against the pre-PR form (one fixed-resolution
+engine dispatched per resolution, parent re-encoded on the host between
+them) so the dispatch-overhead claim is a column, not an assertion. Emits
+``BENCH_distributed.json``:
 
   PYTHONPATH=src python benchmarks/bench_distributed.py [--fast]
 
@@ -44,6 +49,7 @@ N_VARS = 9          # the paper's large problem
 BITS = 7            # 63-bit string -> 125 children (fills 128 PEs)
 MAX_ITERS = 64
 N_RESTARTS = 8
+SCHED_MAX_BITS = 11  # folded-vs-chained schedule: (7, 9, 11)
 
 
 def _median_time(fn, reps: int) -> float:
@@ -65,7 +71,7 @@ def run(fast: bool = True):
 
     reps = 5 if fast else 20
     n_dev = jax.device_count()
-    mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,) )
+    mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
     problem = Problem.get("quadratic", n=N_VARS)
     enc = problem.encoding.with_bits(BITS)
     problem = problem.replace(encoding=enc)
@@ -143,10 +149,40 @@ def run(fast: bool = True):
     # its single-run rate
     total_batched_iters = int(jnp.sum(res["restart_iterations"]))
     ips_dev_sustained = total_batched_iters / t_batched
+
+    # --- resolution schedule: folded (one dispatch) vs chained (pre-PR) ----
+    schedule = tuple(range(BITS, SCHED_MAX_BITS + 1, 2))
+
+    def folded_schedule():
+        return solve(problem, Distributed(mesh=mesh,
+                                          max_bits=SCHED_MAX_BITS),
+                     x0=x0, max_iters=MAX_ITERS)
+
+    def chained_schedule():
+        """The removed facade-level chaining loop: one engine dispatch per
+        resolution, parent re-encoded on the host between them."""
+        x = x0
+        best = np.inf
+        for b in schedule:
+            enc_b = enc.with_bits(b)
+            r = solve(problem.replace(encoding=enc_b),
+                      Distributed(mesh=mesh), x0=x, max_iters=MAX_ITERS)
+            best = min(best, float(r.best_f))
+            x = decode(r.extras["bits"], enc_b)
+        return best
+
+    t_folded = _median_time(folded_schedule, reps)
+    t_chained = _median_time(chained_schedule, reps)
+    r_folded = folded_schedule()
+    v_chained = chained_schedule()
+    assert r_folded.extras["schedule"] == schedule
+    assert np.isclose(float(r_folded.best_f), v_chained, atol=1e-6), \
+        (float(r_folded.best_f), v_chained)
+
     cstats = cache.totals()
     rows = [
         ("bench_distributed.sequential_wall_s", t_seq,
-         "run_sequential end-to-end (numpy baseline)"),
+         "Sequential strategy end-to-end (numpy baseline)"),
         ("bench_distributed.iterations", iters,
          "population steps to convergence (identical in all loop forms)"),
         ("bench_distributed.host_loop_wall_s", t_host_loop,
@@ -179,14 +215,25 @@ def run(fast: bool = True):
          "loop, which cannot batch — the populations-of-runs measure the "
          "ISSUE motivation cites from PAPERS"),
         ("bench_distributed.speedup_device_vs_sequential", t_seq / t_dev,
-         "wall-clock vs run_sequential"),
+         "wall-clock vs the sequential baseline"),
         ("bench_distributed.batched_r8_wall_s", t_batched,
-         f"run_distributed_batched, R={N_RESTARTS} restarts, one dispatch"),
+         f"Batched strategy, R={N_RESTARTS} restarts, one dispatch"),
         ("bench_distributed.batched_over_single", t_batched / t_dev,
          "batched wall / single-run wall (< 2x target: R runs for the "
          "dispatch+sync cost of ~one)"),
         ("bench_distributed.batched_runs_per_s", N_RESTARTS / t_batched,
          "completed optimizations per second in the batched path"),
+        ("bench_distributed.schedule_chained_wall_s", t_chained,
+         f"pre-PR resolution chaining: {len(schedule)} engine dispatches "
+         f"(one per resolution), host re-encode between them"),
+        ("bench_distributed.schedule_folded_wall_s", t_folded,
+         "folded on-device schedule: the SAME escalation in ONE compiled "
+         "dispatch (stacked tables + resolution counter in the while_loop)"),
+        ("bench_distributed.speedup_folded_vs_chained",
+         t_chained / t_folded,
+         "dispatch-overhead saving of folding the schedule on device "
+         "(same trajectory — asserted — so the ratio is pure dispatch/"
+         "re-encode overhead)"),
         # compilation-cache health (core/cache.py): engines_built should
         # stay flat across PRs for this fixed workload — a jump means a
         # cache key started churning (recompile regression); hits growing

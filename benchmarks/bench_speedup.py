@@ -18,10 +18,11 @@ two machines map to two measurements we CAN make faithfully:
    comparable (the paper saw this at ~16 PEs on NCUBE's fast nodes).
 
 3. Fused-engine end-to-end speedup == the paper's Fig. 7 curve measured
-   against the same baseline: ``dgo.run`` (the whole optimization — every
-   population step AND the resolution schedule — in one compiled
-   while_loop) vs ``run_sequential`` (the numpy one-child-at-a-time SPARC
-   analogue), for the paper's problem sizes n in {3, 5, 9}.
+   against the same baseline: the ``Fused`` strategy (the whole
+   optimization — every population step AND the resolution schedule — in
+   one compiled while_loop) vs ``Sequential`` (the numpy
+   one-child-at-a-time SPARC analogue), for the paper's sizes n in
+   {3, 5, 9}.
 """
 from __future__ import annotations
 
@@ -137,7 +138,7 @@ def run(fast: bool = True):
     for n in (3, 5, 9):
         ts, tf, s = measure_fused_engine_speedup(n)
         out.append((f"bench_speedup.fused_engine_seq_s_n{n}", ts,
-                    "run_sequential end-to-end"))
+                    "sequential baseline end-to-end"))
         out.append((f"bench_speedup.fused_engine_s_n{n}", tf,
                     "fused while-loop engine end-to-end"))
         out.append((f"bench_speedup.fused_engine_speedup_n{n}", s,

@@ -32,7 +32,7 @@ import jax
 from repro.configs import REGISTRY
 from repro.configs.shapes import SHAPES, applicable
 from repro.models.lm import ArchConfig, build_plan, model_spec
-from repro.models.layers import ParamSpec, is_spec
+from repro.models.layers import is_spec
 
 HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"

@@ -4,13 +4,12 @@ d-dimensional reparameterized subspace of the model's weights.
 
   PYTHONPATH=src python examples/dgo_subspace_lm.py
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import REGISTRY, reduced
-from repro.core.dgo import DGOConfig, dgo_resolution_step
+from repro.core.dgo import dgo_resolution_step
 from repro.core.encoding import Encoding, decode, encode
 from repro.core.subspace import apply_subspace, materialize_winner
 from repro.data import lm_synthetic_batch

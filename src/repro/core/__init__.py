@@ -3,8 +3,8 @@
 The supported front door is :func:`repro.core.solve` — one call serving
 every execution substrate (see ``core/solver.py``).  The legacy per-engine
 entry points (``run``, ``run_clustered``, ``run_sequential``,
-``run_distributed``, ``run_distributed_batched``) remain as deprecated
-wrappers over it; see README.md for the migration table.
+``run_distributed``, ``run_distributed_batched``) were removed after one
+deprecation cycle (PR 3 -> PR 4); see README.md for the migration table.
 
 ``__all__`` is the public API snapshot — tests pin it
 (``tests/test_api.py``) so accidental surface changes fail loudly.
@@ -12,14 +12,12 @@ wrappers over it; see README.md for the migration table.
 from repro.core import cache, objectives
 from repro.core.encoding import Encoding, binary_to_gray, decode, encode, gray_to_binary
 from repro.core.population import generate_children, generate_population, population_size
-from repro.core.dgo import DGOConfig, DGOResult, dgo_iteration, run, run_clustered, run_sequential
+from repro.core.dgo import DGOConfig, DGOResult, dgo_iteration
 from repro.core.distributed import (
     BatchedResult,
     make_distributed_engine,
     make_distributed_engine_batched,
     make_distributed_step,
-    run_distributed,
-    run_distributed_batched,
 )
 from repro.core.solver import (
     Batched,
@@ -67,12 +65,6 @@ __all__ = [
     "make_distributed_engine",
     "make_distributed_engine_batched",
     "make_distributed_step",
-    # deprecated legacy entry points (wrappers over solve())
-    "run",
-    "run_clustered",
-    "run_distributed",
-    "run_distributed_batched",
-    "run_sequential",
     # subspace DGO (LM training path)
     "apply_subspace",
     "make_dgo_train_step",

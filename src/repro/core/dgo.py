@@ -10,25 +10,27 @@ The paper's algorithm (its "Outline of DGO", steps 1-6):
   5. else increase the resolution (bits per variable);
   6. stop past the maximum resolution.
 
-Three drivers live here:
+Three engines live here, all reached through ``solver.solve()``:
 
-* ``run_sequential`` — literal one-child-at-a-time Python/numpy loop. This is
-  the O(n^2)-per-iteration baseline used by ``benchmarks/bench_complexity``
-  (paper Fig. 6) and the denominator of every speedup number (the paper's
-  SPARC IV role).
-* ``run`` — the fused single-device engine: the *entire* optimization —
-  population generation, decode, evaluation, selection AND the resolution
-  schedule — is one jitted ``lax.while_loop`` over a max-width bit buffer
-  (``n_vars * max_bits`` bits). The active resolution is a loop-carried
-  scalar; children are generated against stacked per-resolution segment
-  tables and invalid tail children are masked to +inf. One compilation per
-  (objective, config) instead of one per (N, bits) shape.
-* ``run_clustered`` — vmap of the same fused engine over independent start
-  points, the paper's "cluster" mode on MP-1 (16K PEs >> 2N-1 for small
-  problems).
+* the sequential baseline (``Sequential`` strategy) — literal
+  one-child-at-a-time Python/numpy loop. This is the O(n^2)-per-iteration
+  baseline used by ``benchmarks/bench_complexity`` (paper Fig. 6) and the
+  denominator of every speedup number (the paper's SPARC IV role).
+* the fused single-device engine (``Fused`` strategy): the *entire*
+  optimization — population generation, decode, evaluation, selection AND
+  the resolution schedule — is one jitted ``lax.while_loop`` over a
+  max-width bit buffer (``n_vars * max_bits`` bits). The active resolution
+  is a loop-carried scalar indexing the stacked per-resolution tables of
+  ``population.schedule_tables``; invalid tail children are masked to
+  +inf. One compilation per (objective, config) instead of one per
+  (N, bits) shape.
+* the clustered engine (``Clustered`` strategy) — vmap of the same fused
+  engine over independent start points, the paper's "cluster" mode on
+  MP-1 (16K PEs >> 2N-1 for small problems).
 
 The multi-device population distribution (shard_map over the mesh) lives in
-``core/distributed.py``; its per-shard inner loop is the Pallas-fused
+``core/distributed.py``; it folds the same stacked-table schedule into its
+on-device while_loop, and its per-shard inner loop can be the Pallas-fused
 population step in ``kernels/popstep`` (the static-shape kernel twin of the
 engine here — same generate -> decode -> evaluate -> argmin pass, tiled in
 VMEM).
@@ -37,7 +39,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -46,18 +47,10 @@ import numpy as np
 
 from repro.core.cache import get_cache
 
-from repro.core.encoding import (
-    Encoding,
-    binary_to_gray,
-    decode,
-    encode,
-    gray_to_binary,
-    reencode,
-)
+from repro.core.encoding import Encoding, decode
 from repro.core.population import (
     generate_population,
-    population_size,
-    segment_mask,
+    schedule_tables,
     segment_table,
 )
 
@@ -157,7 +150,7 @@ class EngineState(NamedTuple):
     """Loop carry of the fused engine (one whole optimization)."""
 
     res_idx: jax.Array       # () i32 — index into the resolution schedule
-    levels: jax.Array        # (n_vars,) u32 — parent as per-var lattice levels
+    bits: jax.Array          # (n_max,) int8 — parent bit buffer (live prefix)
     val: jax.Array           # () f32 — current parent value
     best_val: jax.Array      # () f32 — monotone best-so-far
     best_x: jax.Array        # (n_vars,) f32 — argbest point
@@ -194,131 +187,66 @@ def _engine_static(cfg: DGOConfig) -> _EngineStatic:
         t_max=len(res_bits) * cfg.max_iters_per_resolution)
 
 
-def _stacked_segment_tables(st: _EngineStatic) -> np.ndarray:
-    """(n_res, P_max, 2) — segment table of every resolution, zero-padded.
-
-    Pad rows carry the empty segment [0, 0): such a child equals the parent
-    and is additionally masked to +inf by the population-size check."""
-    out = np.zeros((len(st.res_bits), st.p_max, 2), np.int32)
-    for r, b in enumerate(st.res_bits):
-        t = segment_table(st.n_vars * b)
-        out[r, : t.shape[0]] = t
-    return out
-
-
-def _decode_levels(levels: jax.Array, bits: jax.Array,
-                   st: _EngineStatic) -> jax.Array:
-    """(..., n_vars) u32 lattice levels at dynamic resolution -> floats."""
-    max_level = jnp.exp2(bits.astype(jnp.float32)) - 1.0
-    span = st.hi - st.lo
-    return st.lo + levels.astype(jnp.float32) * (span / max_level)
-
-
-def _encode_levels(x: jax.Array, bits: jax.Array,
-                   st: _EngineStatic) -> jax.Array:
-    max_level = jnp.exp2(bits.astype(jnp.float32)) - 1.0
-    span = st.hi - st.lo
-    lv = jnp.round((x - st.lo) / span * max_level)
-    return jnp.clip(lv, 0.0, max_level).astype(jnp.uint32)
-
-
-def _string_weights(bits: jax.Array, st: _EngineStatic):
-    """Per-position (var id, shift, bit weight, active mask) of the
-    concatenated string laid out in the max-width buffer: position i
-    belongs to variable i // bits, MSB-first weight 2^(bits - 1 - i % bits).
-    """
-    i = jnp.arange(st.n_max, dtype=jnp.int32)
-    var = jnp.minimum(i // bits, st.n_vars - 1)
-    pos = i % bits
-    active = i < st.n_vars * bits
-    shift = jnp.clip(bits - 1 - pos, 0, 31).astype(jnp.uint32)
-    weight = jnp.where(active,
-                       jnp.exp2((bits - 1 - pos).astype(jnp.float32)), 0.0)
-    return var, shift, weight, active
-
-
-def _string_bits(levels: jax.Array, bits: jax.Array,
-                 st: _EngineStatic) -> jax.Array:
-    """(n_vars,) levels -> (N_max,) int32 bit buffer (active prefix)."""
-    var, shift, _, active = _string_weights(bits, st)
-    b = (levels[var] >> shift) & jnp.uint32(1)
-    return jnp.where(active, b.astype(jnp.int32), 0)
+def _engine_tables(cfg: DGOConfig):
+    """The engine's stacked per-resolution tables (shared escalation path:
+    ``population.schedule_tables`` also backs the folded distributed and
+    batched engines in ``core/distributed.py``)."""
+    st = _engine_static(cfg)
+    return st, schedule_tables(st.n_vars, st.res_bits, st.lo, st.hi)
 
 
 def make_fused_engine(f: Callable[[jax.Array], jax.Array],
                       cfg: DGOConfig) -> Callable:
-    """Build ``engine(levels0, val0) -> EngineState``: full DGO in ONE
+    """Build ``engine(bits0, val0) -> EngineState``: full DGO in ONE
     jitted ``lax.while_loop``.
 
-    Children of the current parent are generated at full buffer width from
-    the stacked segment tables (the resolution index gathers its table);
-    decode happens through a dynamically-weighted one-hot matmul so the
-    same compiled program serves every resolution; tail children beyond the
-    live population 2*n_vars*bits-1 are masked to +inf. This is the engine
-    that ``run`` drives and ``run_clustered`` vmaps; ``kernels/popstep`` is
-    its static-shape Pallas counterpart for the sharded path.
+    Children of the current parent are generated at full buffer width by
+    XOR against the stacked per-resolution pattern tables
+    (``population.schedule_tables`` — the resolution index carried in the
+    loop state gathers its table); decode is one exact matmul against the
+    stacked weight tables; tail children beyond the live population
+    2*n_vars*bits-1 are masked to +inf. This is the engine that the
+    ``fused`` strategy drives and ``clustered`` vmaps; ``kernels/popstep``
+    is its static-shape Pallas counterpart for the sharded path.
     """
-    st = _engine_static(cfg)
-    tables = jnp.asarray(_stacked_segment_tables(st))        # (R, P_max, 2)
-    bits_arr = jnp.asarray(st.res_bits, jnp.int32)           # (R,)
-    n_res = len(st.res_bits)
+    st, tables = _engine_tables(cfg)
+    n_res = tables.n_res
     f_batch = jax.vmap(f)
+    child_ids = jnp.arange(st.p_max, dtype=jnp.int32)
 
-    def population_values(levels, bits, res_idx):
-        """All children at the current resolution: (vals, child_levels)."""
-        var, _, weight, active = _string_weights(bits, st)
-        sbits = _string_bits(levels, bits, st)               # (N_max,)
-        gray = binary_to_gray(sbits)
-        table = tables[jnp.minimum(res_idx, n_res - 1)]      # (P_max, 2)
-        i = jnp.arange(st.n_max, dtype=jnp.int32)[None, :]
-        masks = (i >= table[:, :1]) & (i < table[:, 1:])     # (P_max, N_max)
-        cgray = jnp.bitwise_xor(gray[None, :], masks.astype(jnp.int32))
-        children = jnp.cumsum(cgray, axis=-1) % 2            # inverse Gray
-        # decode: one-hot matmul with dynamic MSB-first weights. Weights are
-        # powers of two < 2^24, so the f32 accumulation is exact.
-        onehot = (var[:, None] == jnp.arange(st.n_vars)[None, :])
-        wmat = jnp.where(onehot, weight[:, None], 0.0)       # (N_max, n_vars)
-        child_levels = children.astype(jnp.float32) @ wmat   # (P_max, n_vars)
-        max_level = jnp.exp2(bits.astype(jnp.float32)) - 1.0
-        xs = st.lo + child_levels * ((st.hi - st.lo) / max_level)
-        vals = f_batch(xs)                                   # (P_max,)
-        pop = 2 * st.n_vars * bits - 1
-        c = jnp.arange(st.p_max, dtype=jnp.int32)
-        vals = jnp.where(c < pop, vals, jnp.inf)
-        return vals, child_levels
+    def population_values(bits, res_idx):
+        """All children at the current resolution: (vals, children)."""
+        children = tables.children(bits, child_ids, res_idx)  # (P_max, N_max)
+        xs = tables.decode(children, res_idx)                 # (P_max, n_vars)
+        vals = f_batch(xs)                                    # (P_max,)
+        vals = jnp.where(child_ids < tables.pop[res_idx], vals, jnp.inf)
+        return vals, children
 
     def iterate(s: EngineState) -> EngineState:
-        bits = bits_arr[jnp.minimum(s.res_idx, n_res - 1)]
-        vals, child_levels = population_values(s.levels, bits, s.res_idx)
+        ri = jnp.minimum(s.res_idx, n_res - 1)
+        vals, children = population_values(s.bits, ri)
         best = jnp.argmin(vals)
         best_val = vals[best]
         improved = best_val < s.val
-        new_levels = jnp.where(improved,
-                               child_levels[best].astype(jnp.uint32),
-                               s.levels)
+        new_bits = jnp.where(improved, children[best], s.bits)
         new_val = jnp.where(improved, best_val, s.val)
         better_ever = new_val < s.best_val
-        best_x = jnp.where(better_ever,
-                           _decode_levels(new_levels, bits, st), s.best_x)
+        best_x = jnp.where(better_ever, tables.decode(new_bits, ri), s.best_x)
         best_run = jnp.where(better_ever, new_val, s.best_val)
         trace = s.trace.at[jnp.clip(s.iters, 0, st.t_max - 1)].set(best_run)
-        pop = 2 * st.n_vars * bits - 1
-        return EngineState(s.res_idx, new_levels, new_val, best_run, best_x,
+        return EngineState(s.res_idx, new_bits, new_val, best_run, best_x,
                            improved, s.it_in_res + 1, s.iters + 1,
-                           s.evals + pop, trace)
+                           s.evals + tables.pop[ri], trace)
 
     def escalate(s: EngineState) -> EngineState:
-        bits = bits_arr[jnp.minimum(s.res_idx, n_res - 1)]
+        ri = jnp.minimum(s.res_idx, n_res - 1)
         nxt = jnp.minimum(s.res_idx + 1, n_res - 1)
-        bits_next = bits_arr[nxt]
-        x = _decode_levels(s.levels, bits, st)
-        levels2 = _encode_levels(x, bits_next, st)           # paper step 5
-        val2 = f(_decode_levels(levels2, bits_next, st))
+        bits2 = tables.reencode(s.bits, ri, nxt)             # paper step 5
+        val2 = f(tables.decode(bits2, nxt))
         better = val2 < s.best_val
-        best_x = jnp.where(better, _decode_levels(levels2, bits_next, st),
-                           s.best_x)
+        best_x = jnp.where(better, tables.decode(bits2, nxt), s.best_x)
         best_val = jnp.where(better, val2, s.best_val)
-        return EngineState(s.res_idx + 1, levels2, val2.astype(jnp.float32),
+        return EngineState(s.res_idx + 1, bits2, val2.astype(jnp.float32),
                            best_val, best_x, jnp.bool_(True), jnp.int32(0),
                            s.iters, s.evals, s.trace)
 
@@ -329,11 +257,11 @@ def make_fused_engine(f: Callable[[jax.Array], jax.Array],
         stall = jnp.logical_or(~s.improved, s.it_in_res >= st.max_iters)
         return jax.lax.cond(stall, escalate, iterate, s)
 
-    def engine(levels0: jax.Array, val0: jax.Array) -> EngineState:
+    def engine(bits0: jax.Array, val0: jax.Array) -> EngineState:
         s0 = EngineState(
-            res_idx=jnp.int32(0), levels=levels0,
+            res_idx=jnp.int32(0), bits=bits0,
             val=val0.astype(jnp.float32), best_val=val0.astype(jnp.float32),
-            best_x=_decode_levels(levels0, bits_arr[0], st),
+            best_x=tables.decode(bits0, jnp.int32(0)),
             improved=jnp.bool_(True), it_in_res=jnp.int32(0),
             iters=jnp.int32(0), evals=jnp.int32(0),
             trace=jnp.full((st.t_max,), val0, jnp.float32))
@@ -359,29 +287,21 @@ def _clustered_engine(f: Callable, cfg: DGOConfig):
                         lambda: jax.jit(jax.vmap(make_fused_engine(f, cfg))))
 
 
-def _warn_deprecated(old: str, new: str) -> None:
-    warnings.warn(f"{old} is deprecated; use repro.core.solver.{new} "
-                  f"(see README.md migration table)",
-                  DeprecationWarning, stacklevel=3)
-
-
-def _best_bits(best_x: jax.Array, st: _EngineStatic) -> jax.Array:
+def _best_bits(best_x: jax.Array, cfg: DGOConfig) -> jax.Array:
     """Bit string of the best point, quantized to the final resolution —
     ``decode(result.bits, enc.with_bits(max))`` reconstructs the reported
     solution (up to half a final-lattice step when the best point was found
     at a coarser resolution)."""
-    fb = jnp.int32(st.res_bits[-1])
-    return jnp.asarray(
-        _string_bits(_encode_levels(best_x, fb, st), fb, st), jnp.int8)
+    _, tables = _engine_tables(cfg)
+    return tables.encode(best_x, jnp.int32(tables.n_res - 1))
 
 
 def _result_from_state(s: EngineState, cfg: DGOConfig) -> DGOResult:
-    st = _engine_static(cfg)
     iters = int(s.iters)
     trace = (np.asarray(s.trace[:iters]) if iters
              else np.asarray([float(s.best_val)]))
     return DGOResult(x=s.best_x, value=s.best_val,
-                     bits=_best_bits(s.best_x, st),
+                     bits=_best_bits(s.best_x, cfg),
                      evaluations=int(s.evals), iterations=iters, trace=trace)
 
 
@@ -404,34 +324,12 @@ def _fused_result(f: Callable[[jax.Array], jax.Array],
             key = jax.random.PRNGKey(0)
         x0 = jax.random.uniform(key, (enc0.n_vars,), minval=enc0.lo,
                                 maxval=enc0.hi)
-    st = _engine_static(cfg)
-    bits0 = jnp.int32(st.res_bits[0])
-    levels0 = _encode_levels(jnp.asarray(x0, jnp.float32), bits0, st)
-    val0 = f(_decode_levels(levels0, bits0, st))
-    state = _fused_engine(f, cfg)(levels0, val0)
+    _, tables = _engine_tables(cfg)
+    r0 = jnp.int32(0)
+    bits0 = tables.encode(jnp.asarray(x0, jnp.float32), r0)
+    val0 = f(tables.decode(bits0, r0))
+    state = _fused_engine(f, cfg)(bits0, val0)
     return _result_from_state(state, cfg)
-
-
-def run(f: Callable[[jax.Array], jax.Array],
-        cfg: DGOConfig,
-        x0: jax.Array | None = None,
-        key: jax.Array | None = None) -> DGOResult:
-    """Deprecated front end: ``solve(problem, strategy="fused")``.
-
-    Thin wrapper so existing call sites keep working; the fused engine
-    itself is unchanged and now reached through the solver facade.
-    """
-    from repro.core import solver
-    _warn_deprecated("dgo.run", 'solve(problem, strategy="fused")')
-    res = solver.solve(
-        solver.Problem(fn=f, encoding=cfg.encoding, kind="jax"),
-        solver.Fused(max_bits=cfg.max_bits, bits_step=cfg.bits_step),
-        seed=key if key is not None else 0, x0=x0,
-        max_iters=cfg.max_iters_per_resolution)
-    return DGOResult(x=res.best_x, value=res.best_f,
-                     bits=res.extras["bits"],
-                     evaluations=res.extras["evaluations"],
-                     iterations=int(res.iterations), trace=res.trace)
 
 
 # ---------------------------------------------------------------------------
@@ -459,7 +357,7 @@ def _clustered_result(f: Callable[[jax.Array], jax.Array],
     final values) plus an aux dict with the winner's own step trace.
     """
     enc0 = cfg.encoding
-    st = _engine_static(cfg)
+    _, tables = _engine_tables(cfg)
     if x0s is None:
         if key is None:
             raise ValueError("clustered DGO needs either key or x0s")
@@ -471,54 +369,24 @@ def _clustered_result(f: Callable[[jax.Array], jax.Array],
         if x0s.shape[0] != n_clusters:
             raise ValueError(f"x0s has {x0s.shape[0]} rows for "
                              f"n_clusters={n_clusters}")
-    bits0 = jnp.int32(st.res_bits[0])
-    levels0 = _encode_levels(x0s, bits0, st)                 # (C, n_vars)
-    vals0 = jax.vmap(f)(_decode_levels(levels0, bits0, st))
+    r0 = jnp.int32(0)
+    bits0 = tables.encode(x0s, r0)                           # (C, n_max)
+    vals0 = jax.vmap(f)(tables.decode(bits0, r0))
 
-    states = _clustered_engine(f, cfg)(levels0, vals0)
+    states = _clustered_engine(f, cfg)(bits0, vals0)
     winner = int(jnp.argmin(states.best_val))
     w_iters = int(states.iters[winner])
     winner_trace = (np.asarray(states.trace[winner][:w_iters]) if w_iters
                     else np.asarray([float(states.best_val[winner])]))
     result = DGOResult(x=states.best_x[winner],
                        value=states.best_val[winner],
-                       bits=_best_bits(states.best_x[winner], st),
+                       bits=_best_bits(states.best_x[winner], cfg),
                        evaluations=int(jnp.sum(states.evals)),
                        iterations=int(jnp.max(states.iters)),
                        trace=np.asarray(states.best_val))
     aux = {"cluster_values": np.asarray(states.best_val),
            "winner": winner, "winner_trace": winner_trace}
     return result, aux
-
-
-def run_clustered(f: Callable[[jax.Array], jax.Array],
-                  cfg: DGOConfig,
-                  n_clusters: int,
-                  key: jax.Array | None = None,
-                  x0s: jax.Array | None = None) -> DGOResult:
-    """Deprecated front end: ``solve(problem, strategy=Clustered(...))``.
-
-    Note the legacy quirk preserved here: ``DGOResult.trace`` holds the
-    per-cluster final values, not a step trace (the solver facade returns
-    the winner's step trace and puts the per-cluster values in
-    ``extras["cluster_values"]``).
-    """
-    from repro.core import solver
-    _warn_deprecated("dgo.run_clustered",
-                     "solve(problem, strategy=Clustered(n_clusters=...))")
-    if x0s is None and key is None:
-        raise ValueError("run_clustered needs either key or x0s")
-    res = solver.solve(
-        solver.Problem(fn=f, encoding=cfg.encoding, kind="jax"),
-        solver.Clustered(n_clusters=n_clusters, max_bits=cfg.max_bits,
-                         bits_step=cfg.bits_step),
-        seed=key if key is not None else 0, x0=x0s,
-        max_iters=cfg.max_iters_per_resolution)
-    return DGOResult(x=res.best_x, value=res.best_f,
-                     bits=res.extras["bits"],
-                     evaluations=res.extras["evaluations"],
-                     iterations=int(res.iterations),
-                     trace=res.extras["cluster_values"])
 
 
 # ---------------------------------------------------------------------------
@@ -619,35 +487,3 @@ def _sequential_result(f: Callable[[np.ndarray], float],
                      bits=jnp.asarray(best_run_bits),
                      evaluations=evals, iterations=iters,
                      trace=np.asarray(trace))
-
-
-def run_sequential(f: Callable[[np.ndarray], float],
-                   cfg: DGOConfig,
-                   x0: np.ndarray,
-                   time_budget_s: float | None = None,
-                   max_iters: int | None = None) -> DGOResult:
-    """Deprecated front end: ``solve(problem, strategy=Sequential(...))``.
-
-    ``f`` may follow EITHER calling convention — host ``np.ndarray ->
-    float`` (the historical contract) or a jax-traceable scalar function
-    like every other engine takes: :class:`repro.core.solver.Problem`
-    detects which and adapts.  ``max_iters`` is the total-iteration guard
-    the device engines already had.
-    """
-    from repro.core import solver
-    _warn_deprecated("dgo.run_sequential",
-                     "solve(problem, strategy=Sequential(...))")
-    res = solver.solve(
-        solver.Problem(fn=f, encoding=cfg.encoding),
-        solver.Sequential(max_bits=cfg.max_bits, bits_step=cfg.bits_step,
-                          time_budget_s=time_budget_s,
-                          max_total_iters=max_iters),
-        x0=np.asarray(x0, np.float64),
-        max_iters=cfg.max_iters_per_resolution)
-    # legacy contract: the RAW parent-value history (re-quantization bumps
-    # visible), not the facade's monotone best-so-far trace
-    return DGOResult(x=res.best_x, value=res.best_f,
-                     bits=res.extras["bits"],
-                     evaluations=res.extras["evaluations"],
-                     iterations=int(res.iterations),
-                     trace=res.extras["raw_trace"])

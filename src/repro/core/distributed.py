@@ -40,17 +40,24 @@ Drivers (DESIGN §2/§6 mapping of the *outer* loop):
        ``runtime/elastic.py`` and the loop continues — DGO's native
        elasticity (children on dead shards regenerate next round).
   MP-1 cluster mode over concurrent requests
-    -> ``run_distributed_batched``: R independent restarts (heterogeneous
-       start points) advance in lockstep inside ONE while_loop — the
-       restart axis rides the shard-local inner loop as a leading batch
-       dimension, sharing a single compilation and a single reduce per
-       iteration (throughput measured over populations of runs, not one
-       trajectory).
+    -> the batched engine (``Batched`` strategy): R independent restarts
+       (heterogeneous start points) advance in lockstep inside ONE
+       while_loop — the restart axis rides the shard-local inner loop as
+       a leading batch dimension, sharing a single compilation and a
+       single reduce per iteration (throughput measured over populations
+       of runs, not one trajectory).
+
+Resolution schedules (paper step 5) are FOLDED into the device engines:
+``res_bits`` stacks one XOR-pattern/decode table per resolution
+(``population.schedule_tables``) and the while_loop carries a resolution
+counter that indexes them, so escalation happens inside ``shard_map`` and
+a whole multi-resolution optimization — single or batched — is still one
+compiled dispatch.  The host driver chains resolutions from Python
+instead (it exists precisely so host policy can interpose per iteration).
 """
 from __future__ import annotations
 
 import math
-import warnings
 from typing import Callable, NamedTuple, Sequence
 
 import jax
@@ -118,14 +125,21 @@ class _ShardPlan(NamedTuple):
     block: int       # children per scan step
 
 
-def _shard_plan(enc: Encoding, mesh: Mesh, pop_axes: Sequence[str],
+def _shard_plan(pop: int, mesh: Mesh, pop_axes: Sequence[str],
                 virtual_block: int) -> _ShardPlan:
     n_shards = _axis_prod(mesh, pop_axes)
-    pop = enc.population
     chunk = math.ceil(pop / n_shards)
     n_blocks = math.ceil(chunk / virtual_block)
     block = math.ceil(chunk / n_blocks)
     return _ShardPlan(n_shards, pop, chunk, n_blocks, block)
+
+
+def _resolve_res_bits(enc: Encoding, res_bits) -> tuple:
+    """Normalize a schedule argument: ``None`` -> fixed at ``enc.bits``."""
+    if res_bits is None:
+        return (enc.bits,)
+    res_bits = tuple(int(b) for b in res_bits)
+    return res_bits or (enc.bits,)
 
 
 def _build_shard_step(f_batch: Callable[[jax.Array], jax.Array],
@@ -239,6 +253,90 @@ def _build_shard_step(f_batch: Callable[[jax.Array], jax.Array],
     return prepare
 
 
+def _build_shard_schedule_step(f_batch: Callable[[jax.Array], jax.Array],
+                               tables, plan: _ShardPlan,
+                               pop_axes: Sequence[str]):
+    """Schedule-aware twin of ``_build_shard_step`` for the folded engine.
+
+    The step takes the resolution index carried in the engine's while_loop
+    state and gathers the active resolution's XOR-pattern/decode tables
+    from the stacked ``population.schedule_tables`` arrays — the hoisted
+    "fused" inner generalized over the schedule axis.  Geometry (chunk /
+    rotation) is planned at the FINEST resolution; at coarser resolutions
+    the tail slots fall beyond the live population and are masked to +inf,
+    exactly like the fused single-device engine's tail children.
+    """
+    p_max, chunk, n_blocks, block = (plan.pop, plan.chunk, plan.n_blocks,
+                                     plan.block)
+    n_shards = plan.n_shards
+
+    def prepare(quorum_mask: jax.Array):
+        shard = _flat_axis_index(pop_axes)
+        alive = quorum_mask[shard]
+
+        def step(parent_bits: jax.Array, parent_val: jax.Array,
+                 it: jax.Array, res_idx: jax.Array):
+            pat = tables.patterns[res_idx]            # (p_max, n_max)
+            pop = tables.pop[res_idx]                 # () i32, live children
+            # per-resolution virtual-processing chunk, computed on device:
+            # each shard owns exactly ceil(pop/n_shards) children of the
+            # LIVE population (offsets past it are masked), so the
+            # child->shard assignment — and therefore the trajectory under
+            # any quorum mask — is identical to re-planning per resolution
+            chunk_r = jax.lax.div(pop + n_shards - 1, jnp.int32(n_shards))
+            base = jax.lax.rem(shard + it, n_shards) * chunk_r
+
+            def block_best(offs):
+                """(best value, best id) of one offset block, ties ->
+                smallest id — identical selection to the fixed-resolution
+                inners."""
+                ids = base + offs
+                valid = (offs < chunk_r) & (ids < pop) & alive
+                ids_c = jnp.minimum(ids, p_max - 1)
+                children = jnp.bitwise_xor(parent_bits[None, :], pat[ids_c])
+                xs = tables.decode(children, res_idx)
+                vals = jnp.where(valid, f_batch(xs), jnp.inf)
+                v = jnp.min(vals)
+                gid = jnp.min(jnp.where(vals == v, ids_c, p_max))
+                return v, gid
+
+            if n_blocks == 1:
+                local_val, local_id = block_best(jnp.arange(chunk))
+            else:
+                def eval_block(carry, b):
+                    best_val, best_id = carry
+                    v, gid = block_best(b * block + jnp.arange(block))
+                    better = jnp.logical_or(
+                        v < best_val, (v == best_val) & (gid < best_id))
+                    return (jnp.where(better, v, best_val),
+                            jnp.where(better, gid, best_id)), None
+
+                init = (jnp.asarray(jnp.inf, jnp.float32), jnp.int32(p_max))
+                (local_val, local_id), _ = jax.lax.scan(
+                    eval_block, init, jnp.arange(n_blocks))
+
+            # same packed (val, id) cube-reduction as the fixed path
+            packed = jnp.stack([local_val, local_id.astype(jnp.float32)])
+            for ax in pop_axes:
+                packed = jax.lax.all_gather(packed, ax)
+            packed = packed.reshape(-1, 2)
+            win_val = jnp.min(packed[:, 0])
+            ids = packed[:, 1].astype(jnp.int32)
+            win_id = jnp.min(jnp.where(packed[:, 0] == win_val, ids, p_max))
+
+            improved = win_val < parent_val
+            win_bits = jnp.bitwise_xor(
+                parent_bits, pat[jnp.minimum(win_id, p_max - 1)])
+            new_bits = jnp.where(improved, win_bits,
+                                 parent_bits).astype(jnp.int8)
+            new_val = jnp.where(improved, win_val, parent_val)
+            return new_bits, new_val, improved
+
+        return step
+
+    return prepare
+
+
 def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
                           enc: Encoding,
                           mesh: Mesh,
@@ -276,7 +374,7 @@ def make_distributed_step(f_batch: Callable[[jax.Array], jax.Array],
     ``kernels.popstep.ops.autotune_tile_p(...)`` output to pin a tuned tile.
     """
     inner = _resolve_inner(inner)
-    plan = _shard_plan(enc, mesh, pop_axes, virtual_block)
+    plan = _shard_plan(enc.population, mesh, pop_axes, virtual_block)
     prepare = _build_shard_step(f_batch, enc, plan, pop_axes, inner,
                                 interpret, tile_p)
 
@@ -306,11 +404,15 @@ def make_distributed_engine(f_batch: Callable[[jax.Array], jax.Array],
                             virtual_block: int = 256,
                             inner: str | None = None,
                             interpret: bool | None = None,
-                            tile_p: int | None = None):
-    """Build the on-device distributed engine: the ENTIRE fixed-resolution
-    loop as one ``lax.while_loop`` traced inside ``shard_map``.
+                            tile_p: int | None = None,
+                            res_bits: Sequence[int] | None = None):
+    """Build the on-device distributed engine: the ENTIRE optimization —
+    every population step AND, when ``res_bits`` names a multi-resolution
+    schedule, the paper's step-5 escalation — as one ``lax.while_loop``
+    traced inside ``shard_map``.
 
-    Returns ``engine(x0, quorum_mask) -> (bits, val, iters, trace)`` with
+    Fixed resolution (``res_bits`` None or a single entry): returns
+    ``engine(x0, quorum_mask) -> (bits, val, iters, trace)`` with
     ``trace`` a (max_iters + 1,) monotone best-value history (``trace[0]``
     the starting value; entries past ``iters`` padded with the final
     value). The initial encode/evaluation happens inside the program, so
@@ -318,11 +420,108 @@ def make_distributed_engine(f_batch: Callable[[jax.Array], jax.Array],
     winner failing to beat the parent — is decided on device from values
     replicated across shards, so every shard exits the loop on the same
     iteration and no per-iteration host round-trip exists.
+
+    Folded schedule (``res_bits`` with several resolutions): returns
+    ``engine(x0, quorum_mask) -> (best_bits, best_val, best_res_idx,
+    iters, trace)`` where ``best_bits`` is the max-width bit buffer of the
+    best parent found (live prefix ``n_vars * res_bits[best_res_idx]``)
+    and ``trace`` has capacity ``len(res_bits) * max_iters + 1`` (raw
+    per-iteration parent values; escalation re-encodes are not recorded,
+    matching the historical host-chained history).  The resolution counter
+    rides the while_loop state and indexes the stacked
+    ``population.schedule_tables`` — the whole schedule is still ONE
+    dispatch and ONE compilation.  The schedule path always uses the
+    hoisted-pattern "fused" inner (``inner`` must be None or "fused").
     """
     from repro.core.encoding import encode
+    from repro.core.population import schedule_tables
+
+    schedule = _resolve_res_bits(enc, res_bits)
+    if len(schedule) > 1:
+        if inner not in (None, "fused"):
+            raise ValueError(
+                f"the folded resolution schedule supports inner='fused' "
+                f"only (stacked XOR-pattern tables); got inner={inner!r}")
+        tables = schedule_tables(enc.n_vars, schedule, enc.lo, enc.hi)
+        plan = _shard_plan(tables.p_max, mesh, pop_axes, virtual_block)
+        prepare = _build_shard_schedule_step(f_batch, tables, plan,
+                                             pop_axes)
+        n_shards = plan.n_shards
+        n_res = tables.n_res
+        t_max = n_res * max_iters + 1
+
+        def shard_schedule_engine(x0, quorum_mask):
+            r0 = jnp.int32(0)
+            bits0 = tables.encode(x0, r0)
+            val0 = f_batch(tables.decode(bits0, r0)[None])[0]
+            val0 = val0.astype(jnp.float32)
+            one_step = prepare(quorum_mask)
+            stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
+
+            def stalled(s):
+                stalls, it_in_res = s[6], s[7]
+                return jnp.logical_or(stalls >= stall_limit,
+                                      it_in_res >= max_iters)
+
+            def cond(s):
+                res_idx = s[0]
+                last = res_idx >= n_res - 1
+                return ~jnp.logical_and(last, stalled(s))
+
+            def iterate(s):
+                (res_idx, bits, val, best_val, best_bits, best_res,
+                 stalls, it_in_res, iters, trace) = s
+                new_bits, new_val, improved = one_step(bits, val,
+                                                       it_in_res, res_idx)
+                trace = trace.at[iters + 1].set(new_val)
+                stalls = jnp.where(improved, 0, stalls + 1)
+                better = new_val < best_val
+                best_val = jnp.where(better, new_val, best_val)
+                best_bits = jnp.where(better, new_bits, best_bits)
+                best_res = jnp.where(better, res_idx, best_res)
+                return (res_idx, new_bits, new_val, best_val, best_bits,
+                        best_res, stalls, it_in_res + 1, iters + 1, trace)
+
+            def escalate(s):
+                (res_idx, bits, val, best_val, best_bits, best_res,
+                 stalls, it_in_res, iters, trace) = s
+                nxt = jnp.minimum(res_idx + 1, n_res - 1)
+                bits2 = tables.reencode(bits, res_idx, nxt)  # paper step 5
+                val2 = f_batch(tables.decode(bits2, nxt)[None])[0]
+                val2 = val2.astype(jnp.float32)
+                # a finer quantization of the same parent can already beat
+                # the best — the chained path caught this via the next
+                # resolution's final value, so catch it here too
+                better = val2 < best_val
+                best_val = jnp.where(better, val2, best_val)
+                best_bits = jnp.where(better, bits2, best_bits)
+                best_res = jnp.where(better, nxt, best_res)
+                return (nxt, bits2, val2, best_val, best_bits, best_res,
+                        jnp.int32(0), jnp.int32(0), iters, trace)
+
+            def body(s):
+                return jax.lax.cond(stalled(s), escalate, iterate, s)
+
+            trace0 = jnp.full((t_max,), val0, jnp.float32)
+            s0 = (jnp.int32(0), bits0, val0, val0, bits0, jnp.int32(0),
+                  jnp.int32(0), jnp.int32(0), jnp.int32(0), trace0)
+            s = jax.lax.while_loop(cond, body, s0)
+            (_, _, val, best_val, best_bits, best_res, _, _, iters,
+             trace) = s
+            idx = jnp.arange(t_max)
+            trace = jnp.where(idx <= iters, trace, val)
+            return best_bits, best_val, best_res, iters, trace
+
+        replicated = P()
+        mapped = shard_map(
+            shard_schedule_engine, mesh=mesh,
+            in_specs=(replicated, replicated),
+            out_specs=(replicated,) * 5,
+            check_vma=False)
+        return jax.jit(mapped)
 
     inner = _resolve_inner(inner)
-    plan = _shard_plan(enc, mesh, pop_axes, virtual_block)
+    plan = _shard_plan(enc.population, mesh, pop_axes, virtual_block)
     prepare = _build_shard_step(f_batch, enc, plan, pop_axes, inner,
                                 interpret, tile_p)
 
@@ -385,73 +584,38 @@ def _step_for(f, enc, mesh, pop_axes, virtual_block, inner, interpret,
 
 
 def _engine_for(f, enc, mesh, pop_axes, max_iters, virtual_block, inner,
-                interpret, tile_p):
+                interpret, tile_p, res_bits=None):
+    # the schedule signature is part of the key: ONE compilation covers the
+    # whole folded resolution schedule, not one per resolution
     return _ENGINES.get(
         ("engine", f, enc, mesh, pop_axes, max_iters, virtual_block, inner,
-         interpret, tile_p),
+         interpret, tile_p, res_bits),
         lambda: make_distributed_engine(jax.vmap(f), enc, mesh, pop_axes,
                                         max_iters, virtual_block,
                                         inner=inner, interpret=interpret,
-                                        tile_p=tile_p))
+                                        tile_p=tile_p, res_bits=res_bits))
 
 
 def _batched_engine_for(f, enc, mesh, n_restarts, pop_axes, max_iters,
-                        virtual_block):
+                        virtual_block, res_bits=None):
     return _ENGINES.get(
         ("batched", f, enc, mesh, n_restarts, pop_axes, max_iters,
-         virtual_block),
+         virtual_block, res_bits),
         lambda: make_distributed_engine_batched(jax.vmap(f), enc, mesh,
                                                 n_restarts, pop_axes,
-                                                max_iters, virtual_block))
+                                                max_iters, virtual_block,
+                                                res_bits=res_bits))
 
 
-def _run_distributed(f: Callable[[jax.Array], jax.Array],
-                    enc: Encoding,
-                    mesh: Mesh,
-                    x0: jax.Array,
-                    pop_axes: Sequence[str] = ("data",),
-                    max_iters: int = 256,
-                    virtual_block: int = 256,
-                    quorum_mask=None,
-                    inner: str | None = None,
-                    interpret: bool | None = None,
-                    driver: str = "device",
-                    injector=None,
-                    tile_p: int | None = None):
-    """Distributed DGO at a fixed resolution.
-
-    ``driver="device"`` (default) runs the whole loop on device (see
-    ``make_distributed_engine``) and fetches the value history in one
-    transfer. ``driver="host"`` keeps the Python-stepped loop so host-side
-    policy can interpose between iterations: an optional ``injector``
-    (``runtime.failure.FailureInjector``; host driver only — the on-device
-    loop cannot interpose host policy, so pairing it with
-    ``driver="device"`` raises) is polled each round and an injected
-    failure removes one shard from the quorum
-    (``runtime.elastic.drop_shard``) instead of aborting — the surviving
-    shards regenerate the lost children next round; if failures exhaust
-    the quorum the loop stops and returns the best point found so far.
-    Even the host path avoids the old per-iteration ``float(val)`` sync:
-    values accumulate on device and only the ``bool(improved)``
-    convergence scalar crosses per iteration. Both drivers share the
-    stall rule: one non-improving round ends a full-quorum run, while a
-    degraded quorum needs a full rotation cycle (``n_shards`` consecutive
-    non-improving rounds) before a child can be declared unreachable.
-
-    Returns ``(bits, val, history)`` with ``history`` a Python list of
-    floats, ``history[0]`` the starting value.
-    """
+def _run_fixed_resolution(f, enc, mesh, x0, pop_axes, max_iters,
+                          virtual_block, quorum_mask, inner, interpret,
+                          driver, injector, tile_p):
+    """One fixed-resolution distributed run at ``enc.bits``; returns
+    ``(bits, val, history)`` — the per-resolution unit the host driver
+    chains (the device driver folds the whole schedule instead)."""
     from repro.core.encoding import encode
 
-    if driver not in ("device", "host"):
-        raise ValueError(f"driver must be 'device' or 'host', got {driver!r}")
-    if injector is not None and driver != "host":
-        raise ValueError("failure injection requires driver='host' — the "
-                         "on-device loop cannot interpose host policy")
-    pop_axes = tuple(pop_axes)
     n_shards = _axis_prod(mesh, pop_axes)
-    if quorum_mask is None:
-        quorum_mask = jnp.ones((n_shards,), bool)
 
     if driver == "device":
         engine = _engine_for(f, enc, mesh, pop_axes, max_iters,
@@ -496,7 +660,7 @@ def _run_distributed(f: Callable[[jax.Array], jax.Array],
     return bits, val, history
 
 
-def run_distributed(f: Callable[[jax.Array], jax.Array],
+def _run_distributed(f: Callable[[jax.Array], jax.Array],
                     enc: Encoding,
                     mesh: Mesh,
                     x0: jax.Array,
@@ -508,29 +672,79 @@ def run_distributed(f: Callable[[jax.Array], jax.Array],
                     interpret: bool | None = None,
                     driver: str = "device",
                     injector=None,
-                    tile_p: int | None = None):
-    """Deprecated front end: ``solve(problem, strategy=Distributed(...))``.
+                    tile_p: int | None = None,
+                    res_bits: Sequence[int] | None = None):
+    """Distributed DGO over the resolution schedule ``res_bits`` (``None``
+    -> fixed at ``enc.bits``).
 
-    Preserves the historical contract exactly — fixed resolution at
-    ``enc.bits``, return value ``(bits, val, history)`` — by delegating to
-    the solver facade with a single-resolution :class:`Distributed`
-    strategy.
+    ``driver="device"`` (default) runs the ENTIRE schedule on device — a
+    multi-resolution ``res_bits`` is folded into the single compiled
+    ``lax.while_loop`` (see ``make_distributed_engine``), so one
+    optimization stays ONE dispatch regardless of how many resolutions it
+    escalates through, and the value history is fetched in one transfer.
+    ``driver="host"`` keeps the Python-stepped loop (chaining resolutions
+    from the host) so host-side policy can interpose between iterations:
+    an optional ``injector`` (``runtime.failure.FailureInjector``; host
+    driver only — the on-device loop cannot interpose host policy, so
+    pairing it with ``driver="device"`` raises) is polled each round and
+    an injected failure removes one shard from the quorum
+    (``runtime.elastic.drop_shard``) instead of aborting — the surviving
+    shards regenerate the lost children next round; if failures exhaust
+    the quorum the loop stops and returns the best point found so far.
+    Even the host path avoids the old per-iteration ``float(val)`` sync:
+    values accumulate on device and only the ``bool(improved)``
+    convergence scalar crosses per iteration. Both drivers share the
+    stall rule: one non-improving round ends a full-quorum resolution,
+    while a degraded quorum needs a full rotation cycle (``n_shards``
+    consecutive non-improving rounds) before a child can be declared
+    unreachable.
+
+    Returns ``(bits, val, history, bits_resolution)``: the best parent's
+    bit string at its own resolution ``bits_resolution`` (bits per
+    variable), its value, and the raw per-iteration value history
+    (``history[0]`` the starting value; escalation re-encodes are not
+    recorded).
     """
-    from repro.core import solver
-    warnings.warn(
-        "run_distributed is deprecated; use repro.core.solver.solve("
-        "problem, strategy=Distributed(mesh=..., driver=...)) "
-        "(see README.md migration table)",
-        DeprecationWarning, stacklevel=2)
-    res = solver.solve(
-        solver.Problem(fn=f, encoding=enc, kind="jax"),
-        solver.Distributed(mesh=mesh, pop_axes=tuple(pop_axes),
-                           driver=driver, inner=inner,
-                           virtual_block=virtual_block, interpret=interpret,
-                           tile_p=tile_p, quorum_mask=quorum_mask,
-                           injector=injector),
-        x0=x0, max_iters=max_iters)
-    return res.extras["bits"], res.best_f, res.extras["history"]
+    if driver not in ("device", "host"):
+        raise ValueError(f"driver must be 'device' or 'host', got {driver!r}")
+    if injector is not None and driver != "host":
+        raise ValueError("failure injection requires driver='host' — the "
+                         "on-device loop cannot interpose host policy")
+    pop_axes = tuple(pop_axes)
+    n_shards = _axis_prod(mesh, pop_axes)
+    if quorum_mask is None:
+        quorum_mask = jnp.ones((n_shards,), bool)
+    schedule = _resolve_res_bits(enc, res_bits)
+
+    if driver == "device" and len(schedule) > 1:
+        # the folded path: schedule escalation inside the while_loop —
+        # one engine build + one dispatch per schedule signature
+        engine = _engine_for(f, enc.with_bits(schedule[0]), mesh, pop_axes,
+                             max_iters, virtual_block, inner, interpret,
+                             tile_p, res_bits=schedule)
+        best_bits, best_val, best_res, iters, trace = engine(
+            jnp.asarray(x0, jnp.float32), quorum_mask)
+        iters_h, trace_h, best_res_h = jax.device_get(
+            (iters, trace, best_res))
+        history = [float(v) for v in trace_h[: int(iters_h) + 1]]
+        b = schedule[int(best_res_h)]
+        bits = best_bits[: enc.n_vars * b]      # live prefix of the buffer
+        return bits, best_val, history, b
+
+    x = jnp.asarray(x0, jnp.float32)
+    history: list[float] = []
+    best = None   # (float val, device val, bits, bits-per-var)
+    for i, b in enumerate(schedule):
+        enc_b = enc.with_bits(b)
+        bits, val, hist = _run_fixed_resolution(
+            f, enc_b, mesh, x, pop_axes, max_iters, virtual_block,
+            quorum_mask, inner, interpret, driver, injector, tile_p)
+        history.extend(hist if i == 0 else hist[1:])
+        if best is None or float(val) < best[0]:
+            best = (float(val), val, bits, b)
+        x = decode(bits, enc_b)
+    _, best_val, best_bits, best_b = best
+    return best_bits, best_val, history, best_b
 
 
 # ---------------------------------------------------------------------------
@@ -619,6 +833,87 @@ def _build_shard_step_batched(f_batch: Callable[[jax.Array], jax.Array],
     return prepare
 
 
+def _build_shard_schedule_step_batched(
+        f_batch: Callable[[jax.Array], jax.Array], tables,
+        plan: _ShardPlan, pop_axes: Sequence[str], n_restarts: int):
+    """Schedule-aware twin of ``_build_shard_step_batched``: the restart
+    axis rides the shard-local loop AND the step gathers the active
+    resolution's stacked tables from the carried resolution counter."""
+    p_max, chunk, n_blocks, block = (plan.pop, plan.chunk, plan.n_blocks,
+                                     plan.block)
+    n_shards = plan.n_shards
+
+    def prepare(quorum_mask: jax.Array):
+        shard = _flat_axis_index(pop_axes)
+        alive = quorum_mask[shard]
+
+        def one_step(parent_bits: jax.Array,   # (R, n_max) int8
+                     parent_val: jax.Array,    # (R,) f32
+                     it: jax.Array,            # () i32 — rotation round
+                     res_idx: jax.Array):      # () i32 — schedule position
+            pat = tables.patterns[res_idx]
+            pop = tables.pop[res_idx]
+            # dynamic per-resolution chunk: same live-population assignment
+            # as the single-restart schedule step (see its comment)
+            chunk_r = jax.lax.div(pop + n_shards - 1, jnp.int32(n_shards))
+            base = jax.lax.rem(shard + it, n_shards) * chunk_r
+
+            def local_best_block(offs):
+                """Ties -> smallest id, matching the single-restart path."""
+                ids = base + offs
+                valid = (offs < chunk_r) & (ids < pop) & alive
+                ids_c = jnp.minimum(ids, p_max - 1)
+                b = offs.shape[0]
+                children = jnp.bitwise_xor(parent_bits[:, None, :],
+                                           pat[ids_c][None])  # (R, b, n_max)
+                flat = children.reshape(n_restarts * b, -1)
+                xs = tables.decode(flat, res_idx)
+                vals = jnp.where(valid[None, :],
+                                 f_batch(xs).reshape(n_restarts, b), jnp.inf)
+                v = jnp.min(vals, axis=1)                     # (R,)
+                gid = jnp.min(jnp.where(vals == v[:, None], ids_c[None],
+                                        p_max), axis=1)
+                return v, gid
+
+            if n_blocks == 1:
+                local_val, local_id = local_best_block(jnp.arange(chunk))
+            else:
+                def eval_block(carry, b):
+                    best_val, best_id = carry  # (R,), (R,)
+                    v, gid = local_best_block(b * block + jnp.arange(block))
+                    better = jnp.logical_or(
+                        v < best_val, (v == best_val) & (gid < best_id))
+                    return (jnp.where(better, v, best_val),
+                            jnp.where(better, gid, best_id)), None
+
+                init = (jnp.full((n_restarts,), jnp.inf, jnp.float32),
+                        jnp.full((n_restarts,), p_max, jnp.int32))
+                (local_val, local_id), _ = jax.lax.scan(
+                    eval_block, init, jnp.arange(n_blocks))
+
+            packed = jnp.stack([local_val, local_id.astype(jnp.float32)])
+            for ax in pop_axes:
+                packed = jax.lax.all_gather(packed, ax)
+            packed = packed.reshape(-1, 2, n_restarts)
+            all_vals = packed[:, 0, :]                        # (S, R)
+            all_ids = packed[:, 1, :].astype(jnp.int32)
+            win_val = jnp.min(all_vals, axis=0)               # (R,)
+            win_id = jnp.min(jnp.where(all_vals == win_val[None], all_ids,
+                                       p_max), axis=0)
+
+            improved = win_val < parent_val                   # (R,)
+            win_bits = jnp.bitwise_xor(
+                parent_bits, pat[jnp.minimum(win_id, p_max - 1)])
+            new_bits = jnp.where(improved[:, None], win_bits,
+                                 parent_bits).astype(jnp.int8)
+            new_val = jnp.where(improved, win_val, parent_val)
+            return new_bits, new_val, improved
+
+        return one_step
+
+    return prepare
+
+
 def make_distributed_engine_batched(
         f_batch: Callable[[jax.Array], jax.Array],
         enc: Encoding,
@@ -626,19 +921,114 @@ def make_distributed_engine_batched(
         n_restarts: int,
         pop_axes: Sequence[str] = ("data",),
         max_iters: int = 256,
-        virtual_block: int = 256):
+        virtual_block: int = 256,
+        res_bits: Sequence[int] | None = None):
     """On-device engine over R lockstep restarts — one while_loop, one
     compilation, one reduce per iteration for the whole batch.
 
-    Returns ``engine(x0s (R, n_vars), quorum_mask) ->
+    Fixed resolution (``res_bits`` None or a single entry): returns
+    ``engine(x0s (R, n_vars), quorum_mask) ->
     (bits (R,N), vals (R,), iters (R,), trace (R, max_iters+1))``.
     Restarts that stall stop mutating (their bits/val/trace freeze and
     their iteration counter stops) while the loop continues until every
     restart has stalled or ``max_iters`` is hit.
+
+    Folded schedule (``res_bits`` with several resolutions): the whole
+    batch escalates in lockstep inside the same while_loop — when every
+    restart has stalled at the current resolution (or the per-resolution
+    cap is hit), all restarts re-encode onto the next lattice and resume.
+    Returns ``engine(x0s, quorum_mask) -> (bits (R, n_max), vals (R,),
+    best_vals (R,), best_bits (R, n_max), best_res (R,), iters (R,),
+    trace (R, len(res_bits)*max_iters + 1))`` where ``best_*`` track each
+    restart's best parent across resolutions and ``trace`` holds the raw
+    per-iteration values (escalation re-encodes not recorded).  Still ONE
+    compilation and ONE dispatch for the entire batch and schedule.
     """
     from repro.core.encoding import encode
+    from repro.core.population import schedule_tables
 
-    plan = _shard_plan(enc, mesh, pop_axes, virtual_block)
+    schedule = _resolve_res_bits(enc, res_bits)
+    if len(schedule) > 1:
+        tables = schedule_tables(enc.n_vars, schedule, enc.lo, enc.hi)
+        plan = _shard_plan(tables.p_max, mesh, pop_axes, virtual_block)
+        prepare = _build_shard_schedule_step_batched(
+            f_batch, tables, plan, pop_axes, n_restarts)
+        n_shards = plan.n_shards
+        n_res = tables.n_res
+        t_max = n_res * max_iters + 1
+        rows = jnp.arange(n_restarts)
+
+        def shard_schedule_engine(x0s, quorum_mask):
+            r0 = jnp.int32(0)
+            bits0 = tables.encode(x0s, r0)                   # (R, n_max)
+            vals0 = f_batch(tables.decode(bits0, r0)).astype(jnp.float32)
+            one_step = prepare(quorum_mask)
+            stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
+
+            def res_done(s):
+                stalls, it_in_res = s[6], s[7]
+                return jnp.logical_or(jnp.all(stalls >= stall_limit),
+                                      it_in_res >= max_iters)
+
+            def cond(s):
+                return ~jnp.logical_and(s[0] >= n_res - 1, res_done(s))
+
+            def iterate(s):
+                (res_idx, bits, vals, best_vals, best_bits, best_res,
+                 stalls, it_in_res, pos, trace) = s
+                live = stalls < stall_limit                  # (R,)
+                nb, nv, improved = one_step(bits, vals, it_in_res, res_idx)
+                bits = jnp.where(live[:, None], nb, bits)
+                vals = jnp.where(live, nv, vals)
+                pos = pos + live.astype(jnp.int32)
+                trace = trace.at[rows, jnp.clip(pos, 0, t_max - 1)].set(vals)
+                stalls = jnp.where(live & improved, 0,
+                                   stalls + live.astype(jnp.int32))
+                better = vals < best_vals
+                best_vals = jnp.where(better, vals, best_vals)
+                best_bits = jnp.where(better[:, None], bits, best_bits)
+                best_res = jnp.where(better, res_idx, best_res)
+                return (res_idx, bits, vals, best_vals, best_bits,
+                        best_res, stalls, it_in_res + 1, pos, trace)
+
+            def escalate(s):
+                (res_idx, bits, vals, best_vals, best_bits, best_res,
+                 stalls, it_in_res, pos, trace) = s
+                nxt = jnp.minimum(res_idx + 1, n_res - 1)
+                bits2 = tables.reencode(bits, res_idx, nxt)  # paper step 5
+                vals2 = f_batch(tables.decode(bits2, nxt)).astype(
+                    jnp.float32)
+                better = vals2 < best_vals
+                best_vals = jnp.where(better, vals2, best_vals)
+                best_bits = jnp.where(better[:, None], bits2, best_bits)
+                best_res = jnp.where(better, nxt, best_res)
+                return (nxt, bits2, vals2, best_vals, best_bits, best_res,
+                        jnp.zeros_like(stalls), jnp.int32(0), pos, trace)
+
+            def body(s):
+                return jax.lax.cond(res_done(s), escalate, iterate, s)
+
+            trace0 = jnp.tile(vals0[:, None], (1, t_max))
+            s0 = (jnp.int32(0), bits0, vals0, vals0, bits0,
+                  jnp.zeros((n_restarts,), jnp.int32),
+                  jnp.zeros((n_restarts,), jnp.int32), jnp.int32(0),
+                  jnp.zeros((n_restarts,), jnp.int32), trace0)
+            s = jax.lax.while_loop(cond, body, s0)
+            (_, bits, vals, best_vals, best_bits, best_res, _, _, pos,
+             trace) = s
+            idx = jnp.arange(t_max)[None, :]
+            trace = jnp.where(idx <= pos[:, None], trace, vals[:, None])
+            return bits, vals, best_vals, best_bits, best_res, pos, trace
+
+        replicated = P()
+        mapped = shard_map(
+            shard_schedule_engine, mesh=mesh,
+            in_specs=(replicated, replicated),
+            out_specs=(replicated,) * 7,
+            check_vma=False)
+        return jax.jit(mapped)
+
+    plan = _shard_plan(enc.population, mesh, pop_axes, virtual_block)
     prepare = _build_shard_step_batched(f_batch, enc, plan, pop_axes,
                                         n_restarts)
 
@@ -688,13 +1078,15 @@ def make_distributed_engine_batched(
 
 
 class BatchedResult(NamedTuple):
-    """Result of ``run_distributed_batched`` (R concurrent restarts)."""
+    """Result of the batched engine (R concurrent restarts)."""
 
-    bits: jax.Array        # (R, N) int8 — final parent per restart
-    values: jax.Array      # (R,) f32
-    iterations: jax.Array  # (R,) i32 — steps until stall, per restart
+    bits: jax.Array        # (R, N) int8 — final-resolution string per restart
+    values: jax.Array      # (R,) f32 — best value per restart
+    iterations: jax.Array  # (R,) i32 — population steps taken, per restart
     trace: np.ndarray      # (R, T) f32 — monotone value history per restart
     best: int              # index of the winning restart
+    best_xs: np.ndarray | None = None   # (R, n_vars) — schedule path only:
+    #                       each restart's best point at its own resolution
 
 
 def _run_batched(f: Callable[[jax.Array], jax.Array],
@@ -704,14 +1096,19 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
                  pop_axes: Sequence[str] = ("data",),
                  max_iters: int = 256,
                  virtual_block: int = 256,
-                 quorum_mask=None) -> BatchedResult:
+                 quorum_mask=None,
+                 res_bits: Sequence[int] | None = None) -> BatchedResult:
     """Batched multi-start distributed DGO: R restarts from ``x0s``
-    (R, n_vars) share one compiled on-device while_loop.
+    (R, n_vars) share one compiled on-device while_loop — including, when
+    ``res_bits`` names a schedule, every resolution escalation (the whole
+    batch and schedule is ONE dispatch).
 
     This is the batched-request serving path (launch/serve.py --dgo): R
     concurrent requests amortize the per-iteration reduce and the dispatch
     to near single-run wall-clock (see benchmarks/bench_distributed.py).
     """
+    from repro.core.encoding import decode_np, encode
+
     x0s = jnp.asarray(x0s, jnp.float32)
     if x0s.ndim != 2:
         raise ValueError(f"x0s must be (R, n_vars), got {x0s.shape}")
@@ -720,42 +1117,44 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
     n_shards = _axis_prod(mesh, pop_axes)
     if quorum_mask is None:
         quorum_mask = jnp.ones((n_shards,), bool)
+    schedule = _resolve_res_bits(enc, res_bits)
 
-    engine = _batched_engine_for(f, enc, mesh, n_restarts, pop_axes,
-                                 max_iters, virtual_block)
-    bits, vals, iters, trace = engine(x0s, quorum_mask)
-    iters_h, trace_np = jax.device_get((iters, trace))
-    return BatchedResult(bits=bits, values=vals, iterations=iters,
-                         trace=trace_np[:, : int(iters_h.max()) + 1],
-                         best=int(jnp.argmin(vals)))
+    if len(schedule) == 1:
+        engine = _batched_engine_for(f, enc.with_bits(schedule[0]), mesh,
+                                     n_restarts, pop_axes, max_iters,
+                                     virtual_block)
+        bits, vals, iters, trace = engine(x0s, quorum_mask)
+        iters_h, trace_np = jax.device_get((iters, trace))
+        return BatchedResult(bits=bits, values=vals, iterations=iters,
+                             trace=trace_np[:, : int(iters_h.max()) + 1],
+                             best=int(jnp.argmin(vals)))
 
+    engine = _batched_engine_for(f, enc.with_bits(schedule[0]), mesh,
+                                 n_restarts, pop_axes, max_iters,
+                                 virtual_block, res_bits=schedule)
+    (_, _, best_vals, best_bits, best_res, iters, trace) = engine(
+        x0s, quorum_mask)
+    iters_h, trace_h, bits_h, res_h, vals_h = jax.device_get(
+        (iters, trace, best_bits, best_res, best_vals))
 
-def run_distributed_batched(f: Callable[[jax.Array], jax.Array],
-                            enc: Encoding,
-                            mesh: Mesh,
-                            x0s: jax.Array,
-                            pop_axes: Sequence[str] = ("data",),
-                            max_iters: int = 256,
-                            virtual_block: int = 256,
-                            quorum_mask=None) -> BatchedResult:
-    """Deprecated front end: ``solve(problem, strategy=Batched(...))``.
+    # per-restart monotone histories, truncated to the longest run and
+    # padded past each restart's own end with its final best
+    t_len = int(iters_h.max()) + 1
+    mono = np.empty((n_restarts, t_len), np.float32)
+    for r in range(n_restarts):
+        h = np.minimum.accumulate(trace_h[r, : int(iters_h[r]) + 1])
+        mono[r, : len(h)] = h
+        mono[r, len(h):] = h[-1]
 
-    Preserves the historical fixed-resolution ``BatchedResult`` contract
-    by delegating to the solver facade.
-    """
-    from repro.core import solver
-    warnings.warn(
-        "run_distributed_batched is deprecated; use "
-        "repro.core.solver.solve(problem, strategy=Batched(mesh=...)) "
-        "(see README.md migration table)",
-        DeprecationWarning, stacklevel=2)
-    res = solver.solve(
-        solver.Problem(fn=f, encoding=enc, kind="jax"),
-        solver.Batched(mesh=mesh, pop_axes=tuple(pop_axes),
-                       virtual_block=virtual_block,
-                       quorum_mask=quorum_mask),
-        x0=x0s, max_iters=max_iters)
-    e = res.extras
-    return BatchedResult(bits=e["bits"], values=e["values"],
-                         iterations=e["restart_iterations"],
-                         trace=e["trace"], best=e["best"])
+    # each restart's best point decoded at its OWN resolution; the bits
+    # field reports them quantized at the FINAL resolution (matching the
+    # fused engine's DGOResult.bits convention)
+    best_xs = np.stack([
+        decode_np(bits_h[r][: enc.n_vars * schedule[int(res_h[r])]],
+                  enc.with_bits(schedule[int(res_h[r])]))
+        for r in range(n_restarts)])
+    enc_final = enc.with_bits(schedule[-1])
+    bits = encode(jnp.asarray(best_xs, jnp.float32), enc_final)
+    return BatchedResult(bits=bits, values=jnp.asarray(vals_h, jnp.float32),
+                         iterations=iters, trace=mono,
+                         best=int(np.argmin(vals_h)), best_xs=best_xs)

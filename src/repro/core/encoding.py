@@ -13,7 +13,6 @@ Bit arrays are int8 arrays of 0/1 with trailing axis N (or (n_vars, bits)).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -25,6 +25,7 @@ paper's "virtual processing"; also what the Pallas kernel tiles over).
 from __future__ import annotations
 
 from functools import lru_cache
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -107,3 +108,122 @@ def generate_population(parent_bits: jax.Array) -> jax.Array:
 
 def population_size(n_bits: int) -> int:
     return 2 * n_bits - 1
+
+
+# ---------------------------------------------------------------------------
+# stacked multi-resolution tables: the paper's step-5 escalation as data
+# ---------------------------------------------------------------------------
+
+class ScheduleTables(NamedTuple):
+    """The whole resolution schedule as stacked device tables.
+
+    Every per-resolution constant an engine needs — XOR child patterns,
+    decode weights, encode layout, live population size — is padded to the
+    width of the FINEST resolution and stacked along a leading schedule
+    axis, so a single compiled ``while_loop`` can carry a resolution
+    counter and gather the active resolution's tables instead of being
+    re-dispatched per resolution.  This is the one escalation
+    implementation shared by the fused single-device engine
+    (``core/dgo.py``) and the folded distributed / batched engines
+    (``core/distributed.py``).
+
+    Layout convention: at resolution ``res_bits[r]`` the live string is
+    the first ``n_vars * res_bits[r]`` positions of the ``n_max``-wide bit
+    buffer (position ``i`` belongs to variable ``i // res_bits[r]``,
+    MSB-first); everything past the live prefix is zero.  Pattern pad rows
+    are all-zero (such a child equals the parent) and are additionally
+    masked to +inf by the ``pop`` check, so they can never win.
+    """
+
+    n_vars: int              # static problem dimension
+    lo: float                # static search-box bounds
+    hi: float
+    res_bits: tuple          # static resolution schedule (bits per var)
+    n_max: int               # bit-buffer width: n_vars * max(res_bits)
+    p_max: int               # stacked population axis: 2 * n_max - 1
+    patterns: jax.Array      # (R, p_max, n_max) int8 binary-space XOR
+    wmat: jax.Array          # (R, n_max, n_vars) f32 MSB-first bit weights
+    var: jax.Array           # (R, n_max) i32 variable id per position
+    shift: jax.Array         # (R, n_max) u32 bit shift per position
+    active: jax.Array        # (R, n_max) bool live-prefix mask
+    pop: jax.Array           # (R,) i32 live population 2*n_vars*bits - 1
+    scale: jax.Array         # (R,) f32 lattice step (hi-lo)/(2^bits - 1)
+    max_level: jax.Array     # (R,) f32 2^bits - 1
+
+    @property
+    def n_res(self) -> int:
+        return len(self.res_bits)
+
+    def decode(self, bits: jax.Array, res_idx: jax.Array) -> jax.Array:
+        """(..., n_max) bit buffer -> (..., n_vars) floats at resolution
+        ``res_idx``.  The integer matmul is exact in f32 (weights are
+        powers of two < 2^24) and the affine map is applied afterwards, so
+        rounding matches ``encoding.decode`` bit-for-bit."""
+        levels = bits.astype(jnp.float32) @ self.wmat[res_idx]
+        return self.lo + levels * self.scale[res_idx]
+
+    def encode(self, x: jax.Array, res_idx: jax.Array) -> jax.Array:
+        """(..., n_vars) floats -> (..., n_max) int8 bit buffer at
+        resolution ``res_idx`` (zero past the live prefix)."""
+        ml = self.max_level[res_idx]
+        lv = jnp.round((x - self.lo) / (self.hi - self.lo) * ml)
+        lv = jnp.clip(lv, 0.0, ml).astype(jnp.uint32)
+        b = (jnp.take(lv, self.var[res_idx], axis=-1)
+             >> self.shift[res_idx]) & jnp.uint32(1)
+        return jnp.where(self.active[res_idx], b, 0).astype(jnp.int8)
+
+    def reencode(self, bits: jax.Array, res_idx: jax.Array,
+                 next_idx: jax.Array) -> jax.Array:
+        """Paper step 5: carry a parent to the next resolution's lattice."""
+        return self.encode(self.decode(bits, res_idx), next_idx)
+
+    def children(self, bits: jax.Array, ids: jax.Array,
+                 res_idx: jax.Array) -> jax.Array:
+        """Children ``ids`` (clipped by the caller) of a (n_max,) parent
+        at resolution ``res_idx`` — one XOR against the stacked patterns."""
+        return jnp.bitwise_xor(bits[None, :], self.patterns[res_idx, ids])
+
+
+@lru_cache(maxsize=None)
+def schedule_tables(n_vars: int, res_bits: tuple, lo: float,
+                    hi: float) -> ScheduleTables:
+    """Build (and memoize, one device copy per schedule signature) the
+    stacked tables for a resolution schedule ``res_bits``."""
+    res_bits = tuple(int(b) for b in res_bits)
+    if not res_bits:
+        raise ValueError("res_bits must name at least one resolution")
+    n_max = n_vars * max(res_bits)
+    p_max = 2 * n_max - 1
+    n_res = len(res_bits)
+
+    patterns = np.zeros((n_res, p_max, n_max), np.int8)
+    wmat = np.zeros((n_res, n_max, n_vars), np.float32)
+    var = np.zeros((n_res, n_max), np.int32)
+    shift = np.zeros((n_res, n_max), np.uint32)
+    active = np.zeros((n_res, n_max), bool)
+    pop = np.zeros((n_res,), np.int32)
+    scale = np.zeros((n_res,), np.float32)
+    max_level = np.zeros((n_res,), np.float32)
+
+    i = np.arange(n_max)
+    for r, b in enumerate(res_bits):
+        n_bits = n_vars * b
+        pat = segment_patterns(n_bits)                   # (2*n_bits-1, n_bits)
+        patterns[r, : pat.shape[0], :n_bits] = pat
+        weights = 2.0 ** np.arange(b - 1, -1, -1)
+        for v in range(n_vars):
+            wmat[r, v * b: (v + 1) * b, v] = weights
+        var[r] = np.minimum(i // b, n_vars - 1)
+        shift[r] = np.clip(b - 1 - i % b, 0, 31)
+        active[r] = i < n_bits
+        pop[r] = 2 * n_bits - 1
+        max_level[r] = 2.0**b - 1.0
+        scale[r] = (hi - lo) / max_level[r]
+
+    return ScheduleTables(
+        n_vars=n_vars, lo=float(lo), hi=float(hi), res_bits=res_bits,
+        n_max=n_max, p_max=p_max,
+        patterns=jnp.asarray(patterns), wmat=jnp.asarray(wmat),
+        var=jnp.asarray(var), shift=jnp.asarray(shift),
+        active=jnp.asarray(active), pop=jnp.asarray(pop),
+        scale=jnp.asarray(scale), max_level=jnp.asarray(max_level))

@@ -24,15 +24,17 @@ Strategies (string key -> class, see ``strategy_names()``):
 
 Resolution schedules: the schedule engines (sequential/fused/clustered)
 default to the paper's step-5/6 escalation up to ``max_bits=16``.  The
-distributed engines are fixed-resolution by construction; passing
-``max_bits`` to ``Distributed``/``Batched`` chains one engine per
-resolution (re-encoding the parent between them — paper step 5 on the
-mesh), which is how they join resolution-schedule parity with the rest.
+distributed engines are fixed-resolution by default; passing ``max_bits``
+to ``Distributed``/``Batched`` configures the ON-DEVICE schedule — the
+whole escalation is folded into the engine's single compiled while_loop
+via stacked per-resolution tables (paper step 5 on the mesh, one dispatch
+per optimization), which is how they join resolution-schedule parity
+with the rest.
 
-Legacy entry points (``dgo.run``, ``run_clustered``, ``run_sequential``,
-``distributed.run_distributed``, ``run_distributed_batched``) are thin
-deprecated wrappers over :func:`solve`; see README.md for the migration
-table.
+The legacy entry points (``dgo.run``, ``run_clustered``,
+``run_sequential``, ``distributed.run_distributed``,
+``run_distributed_batched``) were removed after their deprecation cycle;
+see README.md for the migration table.
 """
 from __future__ import annotations
 
@@ -369,9 +371,10 @@ class Distributed(Strategy):
     whole loop as one dispatch, ``driver="host"`` steps from Python so
     failure injection / elastic policy can interpose.
 
-    Fixed-resolution by default (the legacy ``run_distributed``
-    contract); setting ``max_bits`` chains one engine per resolution,
-    re-encoding the parent between them (paper step 5).
+    Fixed-resolution by default; setting ``max_bits`` folds the paper's
+    step-5 escalation INTO the on-device while_loop (one compiled
+    dispatch for the whole schedule — ``driver="host"`` chains
+    resolutions from Python instead so policy can interpose).
 
     extras: ``bits`` (final parent bit string at the best resolution),
     ``history`` (raw per-iteration parent values, list of floats),
@@ -398,31 +401,25 @@ class Distributed(Strategy):
         enc0 = problem.encoding
         if x0 is None:
             x0 = problem.random_x0(key)
-        x = jnp.asarray(x0, jnp.float32)
-        f = problem.jax_fn
 
+        # the whole schedule goes down in one call: the device driver
+        # folds it into its single compiled while_loop, the host driver
+        # chains resolutions internally — no facade-level dispatch loop
         schedule = _resolution_schedule(enc0, self.max_bits, self.bits_step)
-        history: list[float] = []
-        best = None   # (float val, device val, bits, enc)
-        for i, b in enumerate(schedule):
-            enc = enc0.with_bits(b)
-            bits, val, hist = distributed._run_distributed(
-                f, enc, mesh, x, pop_axes=tuple(self.pop_axes),
-                max_iters=mi, virtual_block=self.virtual_block,
-                quorum_mask=self.quorum_mask, inner=self.inner,
-                interpret=self.interpret, driver=self.driver,
-                injector=self.injector, tile_p=self.tile_p)
-            history.extend(hist if i == 0 else hist[1:])
-            if best is None or float(val) < best[0]:
-                best = (float(val), val, bits, enc)
-            x = decode(bits, enc)
-        _, best_val, best_bits, best_enc = best
+        bits, val, history, best_b = distributed._run_distributed(
+            problem.jax_fn, enc0, mesh, jnp.asarray(x0, jnp.float32),
+            pop_axes=tuple(self.pop_axes), max_iters=mi,
+            virtual_block=self.virtual_block, quorum_mask=self.quorum_mask,
+            inner=self.inner, interpret=self.interpret, driver=self.driver,
+            injector=self.injector, tile_p=self.tile_p,
+            res_bits=tuple(schedule))
+        best_enc = enc0.with_bits(best_b)
         trace = np.minimum.accumulate(np.asarray(history, np.float32))
-        return SolveResult(best_x=decode(best_bits, best_enc),
-                           best_f=best_val,
+        return SolveResult(best_x=decode(bits, best_enc),
+                           best_f=val,
                            iterations=len(history) - 1, trace=trace,
-                           extras={"bits": best_bits,
-                                   "bits_resolution": best_enc.bits,
+                           extras={"bits": bits,
+                                   "bits_resolution": best_b,
                                    "history": history,
                                    "schedule": tuple(schedule)})
 
@@ -435,8 +432,9 @@ class Batched(Strategy):
 
     ``x0`` pins start points as ``(R, n_vars)`` (its leading dim then
     overrides ``restarts``); omitted, ``restarts`` uniform starts are
-    drawn from the seed.  Fixed-resolution by default; ``max_bits``
-    chains resolutions like :class:`Distributed`.
+    drawn from the seed.  Fixed-resolution by default; ``max_bits`` folds
+    the resolution schedule into the same single dispatch (the batch
+    escalates in lockstep), like :class:`Distributed`.
 
     extras: ``bits`` ((R, N) per-restart best points as final-resolution
     strings — the engine's final parents on the fixed-resolution path),
@@ -465,75 +463,30 @@ class Batched(Strategy):
         if x0s.ndim != 2:
             raise ValueError(f"batched starts must be (R, n_vars), "
                              f"got {x0s.shape}")
-        n_restarts = x0s.shape[0]
         f = problem.jax_fn
 
+        # one call, one dispatch: a multi-resolution schedule is folded
+        # into the batched engine's while_loop (escalation in lockstep
+        # across the whole batch) — no facade-level chaining loop
         schedule = _resolution_schedule(enc0, self.max_bits, self.bits_step)
-        if len(schedule) == 1:
-            # fixed resolution — the hot serving path: hand the engine's
-            # result through untouched (its traces are already monotone
-            # and padded); no per-restart host loop, no extra syncs
-            res = distributed._run_batched(
-                f, enc0, mesh, x0s, pop_axes=tuple(self.pop_axes),
-                max_iters=mi, virtual_block=self.virtual_block,
-                quorum_mask=self.quorum_mask)
-            winner = res.best
-            return SolveResult(
-                best_x=jnp.asarray(
-                    decode_np(jax.device_get(res.bits)[winner], enc0)),
-                best_f=res.values[winner],
-                iterations=int(np.asarray(res.iterations).max()),
-                trace=res.trace[winner],
-                extras={"bits": res.bits, "values": res.values,
-                        "restart_iterations": res.iterations,
-                        "trace": res.trace, "best": winner,
-                        "schedule": tuple(schedule)})
-
-        segments: list[list[np.ndarray]] = [[] for _ in range(n_restarts)]
-        iters_total = np.zeros((n_restarts,), np.int64)
-        best_vals = np.full((n_restarts,), np.inf, np.float64)
-        best_xs = [None] * n_restarts
-        for i, b in enumerate(schedule):
-            enc = enc0.with_bits(b)
-            res = distributed._run_batched(
-                f, enc, mesh, x0s, pop_axes=tuple(self.pop_axes),
-                max_iters=mi, virtual_block=self.virtual_block,
-                quorum_mask=self.quorum_mask)
-            iters_h = np.asarray(jax.device_get(res.iterations))
-            vals_h = np.asarray(jax.device_get(res.values))
-            xs = decode(res.bits, enc)
-            for r in range(n_restarts):
-                seg = np.asarray(res.trace[r][: int(iters_h[r]) + 1])
-                segments[r].append(seg if i == 0 else seg[1:])
-                iters_total[r] += int(iters_h[r])
-                if vals_h[r] < best_vals[r]:
-                    best_vals[r] = vals_h[r]
-                    best_xs[r] = xs[r]
-            x0s = xs
-
-        t_max = max(sum(len(s) for s in segs) for segs in segments)
-        trace = np.empty((n_restarts, t_max), np.float32)
-        for r, segs in enumerate(segments):
-            h = np.minimum.accumulate(np.concatenate(segs))
-            trace[r, : len(h)] = h
-            trace[r, len(h):] = h[-1]
-
-        final_values = jnp.asarray(best_vals, jnp.float32)
-        winner = int(np.argmin(best_vals))
-        # per-restart bests may come from different resolutions, so report
-        # each best point quantized at the FINAL resolution — decode(bits)
-        # matches values up to half a finest-lattice step (same convention
-        # as the fused engine's DGOResult.bits)
-        from repro.core.encoding import encode
-        enc_final = enc0.with_bits(schedule[-1])
-        bits = encode(jnp.stack(best_xs), enc_final)
+        res = distributed._run_batched(
+            f, enc0, mesh, x0s, pop_axes=tuple(self.pop_axes),
+            max_iters=mi, virtual_block=self.virtual_block,
+            quorum_mask=self.quorum_mask, res_bits=tuple(schedule))
+        winner = res.best
+        if res.best_xs is not None:           # schedule path: best points
+            best_x = jnp.asarray(res.best_xs[winner])
+        else:                                 # fixed resolution: decode
+            best_x = jnp.asarray(
+                decode_np(jax.device_get(res.bits)[winner], enc0))
         return SolveResult(
-            best_x=best_xs[winner], best_f=final_values[winner],
-            iterations=int(iters_total.max()), trace=trace[winner],
-            extras={"bits": bits, "values": final_values,
-                    "restart_iterations": jnp.asarray(iters_total,
-                                                      jnp.int32),
-                    "trace": trace, "best": winner,
+            best_x=best_x,
+            best_f=res.values[winner],
+            iterations=int(np.asarray(res.iterations).max()),
+            trace=res.trace[winner],
+            extras={"bits": res.bits, "values": res.values,
+                    "restart_iterations": res.iterations,
+                    "trace": res.trace, "best": winner,
                     "schedule": tuple(schedule)})
 
 

@@ -19,12 +19,11 @@ over ``model`` — lowered/compiled by the dry-run like any other step.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.compat import axis_size
 from repro.core.encoding import Encoding, decode

@@ -6,7 +6,6 @@ to the tile size.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ unpacked bit-array path (core.population) and pack the result."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.encoding import pack_bits
 from repro.core.population import generate_children

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import REGISTRY, get_arch
-from repro.configs.shapes import SHAPES, applicable, skip_reason
+from repro.configs.shapes import SHAPES, skip_reason
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell
 from repro.optim.gradient import AdamWConfig
@@ -260,7 +260,7 @@ def run_dgo_cell(multi_pod: bool, out_dir: Path = ARTIFACTS) -> dict:
     (value, child-id) pairs — O(P * 8 bytes) — regardless of model size.
     """
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
     from repro.compat import shard_map
     from repro.core.encoding import Encoding
     from repro.core.subspace import make_dgo_train_step

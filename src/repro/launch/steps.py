@@ -25,7 +25,7 @@ from repro.models.layers import abstract_params, is_spec, logical_axes
 from repro.models.moe import CURRENT_MESH
 from repro.models.lm import ArchConfig, lm_decode, lm_loss, lm_prefill, model_spec
 from repro.optim.gradient import AdamWConfig, adamw_init, adamw_update
-from repro.launch.mesh import batch_axes, data_shards
+from repro.launch.mesh import data_shards
 from repro.launch.sharding import (
     SERVE_RULES,
     TRAIN_RULES,

@@ -16,7 +16,6 @@ token stream is identical across restarts.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from pathlib import Path

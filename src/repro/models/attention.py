@@ -12,12 +12,11 @@ real-TPU deployment; the XLA chunked path is what the dry-run rooflines
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ParamSpec, apply_rope, dense_spec, rmsnorm
+from repro.models.layers import ParamSpec, apply_rope, rmsnorm
 
 NEG_INF = -1e30
 

@@ -18,7 +18,6 @@ logits tensor is never materialized — decisive for gemma3's 262k vocab.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -11,7 +11,6 @@ per element vs 4 (f32) — a 4x reduction on the DP axis.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,7 @@ def remesh(n_devices: int, model_parallel: int = 1):
 def drop_shard(quorum_mask, victim: int | None = None):
     """Remove one shard from a DGO quorum mask (lowest alive index by
     default) — the elastic response to an injected/observed shard failure
-    in ``run_distributed(driver="host")``: no re-mesh, no restart; the
+    in ``Distributed(driver="host")``: no re-mesh, no restart; the
     survivors regenerate the lost children next round.
 
     Raises ``RuntimeError`` when the drop would leave an empty quorum.

@@ -8,7 +8,7 @@ baseline fault-tolerance mechanism; DGO additionally tolerates losing
 children mid-iteration via the quorum reduce, core/distributed.py).
 
 For DGO the injector also plugs straight into the *host-stepped* driver:
-``run_distributed(driver="host", injector=...)`` polls ``maybe_fail`` each
+``Distributed(driver="host", injector=...)`` polls ``maybe_fail`` each
 round and answers an injected failure by shrinking the quorum
 (``runtime.elastic.drop_shard``) instead of restarting — the on-device
 ``driver="device"`` loop cannot interpose host policy mid-run, which is

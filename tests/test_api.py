@@ -37,12 +37,6 @@ PUBLIC_API = [
     "make_distributed_engine",
     "make_distributed_engine_batched",
     "make_distributed_step",
-    # deprecated legacy entry points (wrappers over solve())
-    "run",
-    "run_clustered",
-    "run_distributed",
-    "run_distributed_batched",
-    "run_sequential",
     # subspace DGO (LM training path)
     "apply_subspace",
     "make_dgo_train_step",
@@ -57,6 +51,18 @@ def test_public_api_snapshot():
 def test_public_api_resolves():
     for name in core.__all__:
         assert hasattr(core, name), name
+
+
+def test_legacy_entry_points_removed():
+    """The five deprecated wrappers completed their removal cycle (PR 3
+    deprecation -> PR 4 removal per ROADMAP criteria): gone from the
+    facade AND from the engine modules."""
+    from repro.core import dgo, distributed
+    for name in ("run", "run_clustered", "run_sequential",
+                 "run_distributed", "run_distributed_batched"):
+        assert not hasattr(core, name), name
+        assert not hasattr(dgo, name), name
+        assert not hasattr(distributed, name), name
 
 
 def test_strategy_registry_snapshot():

@@ -1,5 +1,4 @@
 """Checkpoint: atomic save/restore, corruption detection, keep-k."""
-import json
 from pathlib import Path
 
 import jax

@@ -5,13 +5,13 @@ import numpy as np
 import pytest
 from conftest import given, settings, st
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig, dgo_iteration
+from repro.core.dgo import dgo_iteration
 from repro.core.encoding import Encoding, decode, encode
 from repro.core.objectives import (
-    TEST_FUNCTIONS, ackley, becker_lago, griewank, quadratic_nd,
+    ackley, becker_lago, griewank, quadratic_nd,
     rastrigin, sample_2d, xor_objective,
 )
+from repro.core.solver import Clustered, Fused, Problem, Sequential, solve
 
 
 @given(st.integers(0, 10**6))
@@ -30,9 +30,7 @@ def test_iteration_never_increases(seed):
 
 
 def test_trace_monotone_nonincreasing():
-    obj = ackley(2)
-    res = dgo.run(obj.fn, DGOConfig(encoding=obj.encoding, max_bits=12),
-                  key=jax.random.PRNGKey(0))
+    res = solve(ackley(2), strategy=Fused(max_bits=12), seed=0)
     assert (np.diff(res.trace) <= 1e-7).all()
 
 
@@ -41,40 +39,38 @@ def test_trace_monotone_nonincreasing():
     (becker_lago(), 12), (sample_2d(), 14),
 ])
 def test_finds_global_optimum_single_start(obj, max_bits):
-    res = dgo.run(obj.fn, DGOConfig(encoding=obj.encoding, max_bits=max_bits),
-                  key=jax.random.PRNGKey(1))
-    assert abs(float(res.value) - obj.f_opt) < obj.tol, obj.name
+    res = solve(obj, strategy=Fused(max_bits=max_bits), seed=1)
+    assert abs(float(res.best_f) - obj.f_opt) < obj.tol, obj.name
 
 
 def test_clustered_solves_quadratic_and_shekel():
     from repro.core.objectives import shekel
     for obj, mb in [(quadratic_nd(3), 14), (shekel(5), 14)]:
-        res = dgo.run_clustered(
-            obj.fn, DGOConfig(encoding=obj.encoding, max_bits=mb),
-            n_clusters=8, key=jax.random.PRNGKey(1))
-        assert abs(float(res.value) - obj.f_opt) < obj.tol, obj.name
+        res = solve(obj, strategy=Clustered(n_clusters=8, max_bits=mb),
+                    seed=1)
+        assert abs(float(res.best_f) - obj.f_opt) < obj.tol, obj.name
 
 
 def test_sequential_matches_vectorized_selection():
-    """One resolution step of the numpy driver equals the jit driver."""
+    """The numpy driver and the fused engine land on the same value at a
+    single fixed resolution."""
     obj = quadratic_nd(2)
     enc = obj.encoding
     x0 = np.asarray([4.0, -3.0])
-    seq = dgo.run_sequential(
-        obj.fn, DGOConfig(encoding=enc, max_bits=enc.bits), x0)
-    vec = dgo.run(obj.fn, DGOConfig(encoding=enc, max_bits=enc.bits),
-                  x0=jnp.asarray(x0))
-    assert np.isclose(float(seq.value), float(vec.value), atol=1e-5)
+    seq = solve(obj, strategy=Sequential(max_bits=enc.bits), x0=x0)
+    vec = solve(obj, strategy=Fused(max_bits=enc.bits), x0=jnp.asarray(x0))
+    assert np.isclose(float(seq.best_f), float(vec.best_f), atol=1e-5)
 
 
 def test_xor_beats_plain_gradient_descent():
     """Paper Fig. 4: DGO reaches a lower XOR error than GD."""
     from repro.optim.descent import gd_minimize
     obj = xor_objective()
-    res = dgo.run_clustered(
-        obj.fn, DGOConfig(encoding=Encoding(8, 4, -8.0, 8.0), max_bits=16),
-        n_clusters=16, key=jax.random.PRNGKey(0))
+    prob = Problem(fn=obj.fn, encoding=Encoding(8, 4, -8.0, 8.0),
+                   kind="jax")
+    res = solve(prob, strategy=Clustered(n_clusters=16, max_bits=16),
+                seed=0)
     gd_best = min(float(gd_minimize(obj.fn, obj.encoding,
                                     jax.random.PRNGKey(i), steps=3000)[1])
                   for i in range(4))
-    assert float(res.value) < gd_best
+    assert float(res.best_f) < gd_best

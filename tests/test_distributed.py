@@ -7,7 +7,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -27,25 +26,26 @@ def test_distributed_dgo_matches_single_device():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, json
         from functools import partial
-        from repro.core.distributed import run_distributed
         from repro.core.dgo import dgo_resolution_step
         from repro.core.encoding import encode, decode
         from repro.core.objectives import rastrigin
+        from repro.core.solver import Distributed, solve
         from repro.compat import AxisType, make_mesh
         mesh = make_mesh((4, 2), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
         obj = rastrigin(2)
         x0 = jnp.asarray([3.1, -2.2])
-        bits, val, hist = run_distributed(obj.fn, obj.encoding, mesh, x0,
-                                          max_iters=48)
+        res = solve(obj, strategy=Distributed(mesh=mesh), x0=x0,
+                    max_iters=48)
         f_batch = jax.vmap(obj.fn)
         b0 = encode(x0, obj.encoding)
         v0 = obj.fn(decode(b0, obj.encoding))
         state, _ = jax.jit(partial(dgo_resolution_step, f_batch,
                                    obj.encoding, 48))(b0, v0)
-        assert np.isclose(float(val), float(state.parent_val), atol=1e-6), \\
-            (float(val), float(state.parent_val))
-        print(json.dumps({"ok": True, "val": float(val)}))
+        assert np.isclose(float(res.best_f), float(state.parent_val),
+                          atol=1e-6), \\
+            (float(res.best_f), float(state.parent_val))
+        print(json.dumps({"ok": True, "val": float(res.best_f)}))
     """)
     assert json.loads(out.splitlines()[-1])["ok"]
 
@@ -53,18 +53,17 @@ def test_distributed_dgo_matches_single_device():
 def test_distributed_dgo_quorum_survives_shard_loss():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, json
-        from repro.core.distributed import run_distributed
         from repro.core.objectives import rastrigin
+        from repro.core.solver import Distributed, solve
         from repro.compat import AxisType, make_mesh
         mesh = make_mesh((8,), ("data",),
                          axis_types=(AxisType.Auto,))
         obj = rastrigin(2)
         mask = jnp.asarray([True, False, True, True, False, True, True, True])
-        bits, val, hist = run_distributed(
-            obj.fn, obj.encoding, mesh, jnp.asarray([3.1, -2.2]),
-            max_iters=48, quorum_mask=mask)
+        res = solve(obj, strategy=Distributed(mesh=mesh, quorum_mask=mask),
+                    x0=jnp.asarray([3.1, -2.2]), max_iters=48)
         # still descends despite losing 2/8 shards
-        assert float(val) < hist[0]
+        assert float(res.best_f) < res.extras["history"][0]
         print(json.dumps({"ok": True}))
     """)
     assert json.loads(out.splitlines()[-1])["ok"]
@@ -75,8 +74,8 @@ def test_on_device_driver_matches_host_driver():
     algorithm: identical trajectory, value history and final value."""
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, json
-        from repro.core.distributed import run_distributed
         from repro.core.objectives import rastrigin
+        from repro.core.solver import Distributed, solve
         from repro.compat import AxisType, make_mesh
         mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         obj = rastrigin(2)
@@ -84,9 +83,11 @@ def test_on_device_driver_matches_host_driver():
         ref = None
         for inner in ("fused", "popstep", "jnp"):
             for driver in ("device", "host"):
-                b, v, h = run_distributed(obj.fn, obj.encoding, mesh, x0,
-                                          max_iters=48, inner=inner,
-                                          driver=driver)
+                res = solve(obj, strategy=Distributed(mesh=mesh,
+                                                      inner=inner,
+                                                      driver=driver),
+                            x0=x0, max_iters=48)
+                v, h = res.best_f, res.extras["history"]
                 if ref is None:
                     ref = (float(v), h)
                 assert np.isclose(float(v), ref[0], atol=1e-6), \\
@@ -104,50 +105,84 @@ def test_quorum_masked_mesh_reaches_all_alive_optimum():
     children are a strict subset each round, regenerated deterministically."""
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, json
-        from repro.core.distributed import run_distributed
         from repro.core.objectives import quadratic_nd
+        from repro.core.solver import Distributed, solve
         from repro.compat import AxisType, make_mesh
         mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         obj = quadratic_nd(2)
         x0 = jnp.asarray([4.0, -3.0])
-        _, v_full, _ = run_distributed(obj.fn, obj.encoding, mesh, x0,
-                                       max_iters=128)
+        full = solve(obj, strategy=Distributed(mesh=mesh), x0=x0,
+                     max_iters=128)
         mask = jnp.asarray([True, False, True, True,
                             False, True, True, True])
-        _, v_masked, h = run_distributed(obj.fn, obj.encoding, mesh, x0,
-                                         max_iters=128, quorum_mask=mask)
-        assert float(v_masked) < h[0]
-        assert np.isclose(float(v_masked), float(v_full), atol=1e-5), \\
-            (float(v_masked), float(v_full))
-        print(json.dumps({"ok": True, "full": float(v_full),
-                          "masked": float(v_masked)}))
+        masked = solve(obj, strategy=Distributed(mesh=mesh,
+                                                 quorum_mask=mask),
+                       x0=x0, max_iters=128)
+        assert float(masked.best_f) < masked.extras["history"][0]
+        assert np.isclose(float(masked.best_f), float(full.best_f),
+                          atol=1e-5), \\
+            (float(masked.best_f), float(full.best_f))
+        print(json.dumps({"ok": True, "full": float(full.best_f),
+                          "masked": float(masked.best_f)}))
+    """)
+    assert json.loads(out.splitlines()[-1])["ok"]
+
+
+def test_folded_schedule_masked_shards_converge():
+    """Satellite coverage for the folded on-device schedule: escalation
+    inside the while_loop still converges to the all-alive optimum under
+    quorum loss (the missed children are regenerated by rotation within
+    each resolution, and every shard escalates on the same round)."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core.objectives import quadratic_nd
+        from repro.core.solver import Distributed, solve
+        from repro.compat import AxisType, make_mesh
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        obj = quadratic_nd(2)
+        x0 = jnp.asarray([4.0, -3.0])
+        full = solve(obj, strategy=Distributed(mesh=mesh, max_bits=12),
+                     x0=x0, max_iters=128)
+        mask = jnp.asarray([True, False, True, True,
+                            False, True, True, True])
+        masked = solve(obj, strategy=Distributed(mesh=mesh, max_bits=12,
+                                                 quorum_mask=mask),
+                       x0=x0, max_iters=128)
+        assert full.extras["schedule"] == (8, 10, 12)
+        assert float(masked.best_f) < masked.extras["history"][0]
+        assert np.isclose(float(masked.best_f), float(full.best_f),
+                          atol=1e-5), \\
+            (float(masked.best_f), float(full.best_f))
+        print(json.dumps({"ok": True, "full": float(full.best_f),
+                          "masked": float(masked.best_f)}))
     """)
     assert json.loads(out.splitlines()[-1])["ok"]
 
 
 def test_batched_engine_matches_independent_runs():
-    """run_distributed_batched(R starts) == R independent run_distributed
-    trajectories (values AND histories), amortized into one compilation."""
+    """Batched(R starts) == R independent Distributed trajectories
+    (values AND histories), amortized into one compilation."""
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, json
-        from repro.core.distributed import run_distributed, \\
-            run_distributed_batched
         from repro.core.objectives import rastrigin
+        from repro.core.solver import Batched, Distributed, solve
         from repro.compat import AxisType, make_mesh
         mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         obj = rastrigin(2)
         x0s = jnp.asarray([[3.1, -2.2], [1.0, 1.0],
                            [-4.0, 2.0], [0.5, -0.5]])
-        res = run_distributed_batched(obj.fn, obj.encoding, mesh, x0s,
-                                      max_iters=48)
+        res = solve(obj, strategy=Batched(mesh=mesh), x0=x0s,
+                    max_iters=48).extras
         for r in range(x0s.shape[0]):
-            _, v, h = run_distributed(obj.fn, obj.encoding, mesh, x0s[r],
-                                      max_iters=48)
-            assert np.isclose(float(v), float(res.values[r]), atol=1e-6), \\
-                (r, float(v), float(res.values[r]))
-            assert int(res.iterations[r]) == len(h) - 1, r
-            assert np.allclose(res.trace[r][:len(h)], h, atol=1e-6), r
-        assert int(res.best) == int(jnp.argmin(res.values))
+            single = solve(obj, strategy=Distributed(mesh=mesh),
+                           x0=x0s[r], max_iters=48)
+            v, h = single.best_f, single.extras["history"]
+            assert np.isclose(float(v), float(res["values"][r]),
+                              atol=1e-6), \\
+                (r, float(v), float(res["values"][r]))
+            assert int(res["restart_iterations"][r]) == len(h) - 1, r
+            assert np.allclose(res["trace"][r][:len(h)], h, atol=1e-6), r
+        assert int(res["best"]) == int(jnp.argmin(res["values"]))
         print(json.dumps({"ok": True}))
     """)
     assert json.loads(out.splitlines()[-1])["ok"]
@@ -158,18 +193,18 @@ def test_host_driver_failure_injection_shrinks_quorum_and_descends():
     the quorum (elastic response) instead of aborting the optimization."""
     out = run_with_devices("""
         import jax, jax.numpy as jnp, json
-        from repro.core.distributed import run_distributed
         from repro.core.objectives import quadratic_nd
+        from repro.core.solver import Distributed, solve
         from repro.runtime.failure import FailureInjector
         from repro.compat import AxisType, make_mesh
         mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         obj = quadratic_nd(2)
         inj = FailureInjector(rate=0.5, seed=3)
-        _, v, h = run_distributed(obj.fn, obj.encoding, mesh,
-                                  jnp.asarray([4.0, -3.0]), max_iters=48,
-                                  driver="host", injector=inj)
+        res = solve(obj, strategy=Distributed(mesh=mesh, driver="host",
+                                              injector=inj),
+                    x0=jnp.asarray([4.0, -3.0]), max_iters=48)
         assert inj.injected > 0
-        assert float(v) < h[0]
+        assert float(res.best_f) < res.extras["history"][0]
         print(json.dumps({"ok": True, "injected": inj.injected}))
     """)
     assert json.loads(out.splitlines()[-1])["ok"]
@@ -179,17 +214,17 @@ def test_virtual_processing_chunking_invariance():
     """NCUBE virtual processing: results identical for any virtual_block."""
     out = run_with_devices("""
         import jax, jax.numpy as jnp, json
-        from repro.core.distributed import run_distributed
         from repro.core.objectives import ackley
+        from repro.core.solver import Distributed, solve
         from repro.compat import AxisType, make_mesh
         mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         obj = ackley(2)
         vals = []
         for vb in (4, 16, 256):
-            _, v, _ = run_distributed(obj.fn, obj.encoding, mesh,
-                                      jnp.asarray([2.0, -4.0]),
-                                      max_iters=32, virtual_block=vb)
-            vals.append(float(v))
+            res = solve(obj, strategy=Distributed(mesh=mesh,
+                                                  virtual_block=vb),
+                        x0=jnp.asarray([2.0, -4.0]), max_iters=32)
+            vals.append(float(res.best_f))
         assert max(vals) - min(vals) < 1e-6, vals
         print(json.dumps({"ok": True}))
     """)

@@ -11,7 +11,7 @@ from repro.core.encoding import (
     pack_bits, unpack_bits,
 )
 from repro.core.population import (
-    generate_children, generate_population, segment_mask, segment_table,
+    generate_children, generate_population, segment_table,
 )
 
 bits_arrays = st.integers(1, 200).flatmap(

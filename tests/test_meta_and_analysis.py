@@ -4,9 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig
 from repro.core.meta import HyperBox, meta_objective
+from repro.core.solver import Fused, solve
 
 
 def test_hyperbox_decode_ranges():
@@ -26,10 +25,9 @@ def test_meta_dgo_finds_good_lr():
         w, _ = jax.lax.scan(body, w, None, length=30)
         return w * w
     obj = meta_objective(short_train, HyperBox(bits=5))
-    res = dgo.run(obj.fn, DGOConfig(encoding=obj.encoding, max_bits=7),
-                  key=jax.random.PRNGKey(0))
+    res = solve(obj, strategy=Fused(max_bits=7), seed=0)
     # lr* ~ anything in [0.05, 0.7]; random box sampling often lands ~1e-3
-    assert float(res.value) < 1e-2
+    assert float(res.best_f) < 1e-2
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +78,7 @@ def test_promoted_f32_counted_as_bf16():
 
 def test_active_params_deepseek_v3():
     """v3: ~37B active of ~670B total (paper's own numbers)."""
-    from benchmarks.roofline import active_params, param_budget
+    from benchmarks.roofline import active_params
     from repro.configs import REGISTRY
     arch = REGISTRY["deepseek-v3-671b"]
     act = active_params(arch)

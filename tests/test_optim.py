@@ -1,7 +1,6 @@
 """Optimizers: gradient trainers converge; baselines behave as published."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core.objectives import quadratic_nd, rastrigin, shekel
 from repro.optim import (

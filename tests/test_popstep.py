@@ -4,8 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import dgo
-from repro.core.dgo import DGOConfig
 from repro.core.encoding import Encoding
 from repro.core.objectives import (
     ackley, becker_lago, quadratic_nd, rastrigin, sample_2d, shekel,
@@ -145,10 +143,11 @@ def test_resolve_interpret_backend_default():
 def test_fused_run_matches_sequential_optimum(obj, max_bits):
     """The single-compilation engine lands on the same optimum as the numpy
     one-child-at-a-time baseline it is benchmarked against."""
-    cfg = DGOConfig(encoding=obj.encoding, max_bits=max_bits,
-                    max_iters_per_resolution=64)
+    from repro.core.solver import Fused, Sequential, solve
     x0 = np.asarray([4.0, -3.0])
-    seq = dgo.run_sequential(obj.fn, cfg, x0)
-    vec = dgo.run(obj.fn, cfg, x0=jnp.asarray(x0))
-    assert abs(float(vec.value) - float(seq.value)) < max(obj.tol, 1e-3), \
-        (obj.name, float(vec.value), float(seq.value))
+    seq = solve(obj, strategy=Sequential(max_bits=max_bits), x0=x0,
+                max_iters=64)
+    vec = solve(obj, strategy=Fused(max_bits=max_bits),
+                x0=jnp.asarray(x0), max_iters=64)
+    assert abs(float(vec.best_f) - float(seq.best_f)) < max(obj.tol, 1e-3), \
+        (obj.name, float(vec.best_f), float(seq.best_f))

@@ -3,11 +3,9 @@ failure-injected training restart."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.runtime import (
-    FailureInjector, SimulatedFailure, StragglerPolicy,
-    dequantize_int8, elastic_population_plan, quantize_int8,
+    StragglerPolicy, dequantize_int8, elastic_population_plan, quantize_int8,
 )
 
 

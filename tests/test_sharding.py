@@ -1,6 +1,5 @@
 """Sharding rules: divisibility fallback, axis uniqueness, cache heuristics."""
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import abstract_mesh

@@ -1,13 +1,12 @@
 """The solve() front door: strategy parity, callable adaptation, the
-compilation-cache subsystem, and legacy-wrapper delegation."""
-import jax
+compilation-cache subsystem, and the folded on-device resolution
+schedule."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import cache
-from repro.core.dgo import DGOConfig, DGOResult
-from repro.core.encoding import Encoding
+from repro.core.encoding import Encoding, decode
 from repro.core.solver import (
     Batched, Clustered, Distributed, Fused, Problem, Sequential,
     SolveResult, as_strategy, solve, strategy_names,
@@ -65,10 +64,10 @@ def test_strategy_parity(pname, n, x0):
             finals
 
 
-def test_distributed_schedule_chaining_improves_resolution():
-    """Distributed(max_bits=...) chains fixed-resolution engines through
-    the paper's step-5 escalation and must match the fused engine's
-    schedule result from the same start."""
+def test_distributed_schedule_folding_improves_resolution():
+    """Distributed(max_bits=...) folds the paper's step-5 escalation into
+    the on-device while_loop and must match the fused engine's schedule
+    result from the same start."""
     prob = Problem.get("quadratic", n=2)
     x0 = jnp.asarray([4.0, -3.0])
     coarse = solve(prob, Distributed(), x0=x0, max_iters=MAX_ITERS)
@@ -77,6 +76,73 @@ def test_distributed_schedule_chaining_improves_resolution():
     assert fine.extras["schedule"] == (8, 10, 12, 14)
     assert float(fine.best_f) < float(coarse.best_f)
     assert np.isclose(float(fine.best_f), float(fused.best_f), atol=1e-4)
+
+
+def _chained_reference(prob, schedule, x0, max_iters, strategy_kw=None):
+    """The removed Python-level chaining loop, reconstructed as a test
+    oracle: one fixed-resolution solve() per resolution, re-encoding the
+    parent between them — what Distributed(max_bits=...) used to do."""
+    enc0 = prob.encoding
+    x = x0
+    history: list[float] = []
+    best = None          # (val, x, bits-per-var)
+    for i, b in enumerate(schedule):
+        enc = enc0.with_bits(b)
+        res = solve(prob.replace(encoding=enc),
+                    Distributed(**(strategy_kw or {})), x0=x,
+                    max_iters=max_iters)
+        h = res.extras["history"]
+        history.extend(h if i == 0 else h[1:])
+        if best is None or float(res.best_f) < best[0]:
+            best = (float(res.best_f), res.best_x, b)
+        x = decode(res.extras["bits"], enc)
+    return best, history
+
+
+@pytest.mark.parametrize("pname,n,x0", [
+    ("quadratic", 3, [4.0, -3.0, 6.5]),
+    ("rastrigin", 2, [3.1, -2.2]),
+])
+def test_folded_schedule_matches_python_chaining(pname, n, x0):
+    """The folded on-device schedule is the SAME algorithm the removed
+    Python-level chaining ran: identical best value, best resolution and
+    per-iteration value history on the parity problems."""
+    prob = Problem.get(pname, n=n)
+    x0 = jnp.asarray(x0)
+    schedule = (8, 10, 12)
+    folded = solve(prob, Distributed(max_bits=12), x0=x0,
+                   max_iters=MAX_ITERS)
+    assert folded.extras["schedule"] == schedule
+    (ref_val, ref_x, ref_b), ref_history = _chained_reference(
+        prob, schedule, x0, MAX_ITERS)
+    assert np.isclose(float(folded.best_f), ref_val, atol=1e-6)
+    assert folded.extras["bits_resolution"] == ref_b
+    assert np.allclose(np.asarray(folded.best_x), np.asarray(ref_x),
+                       atol=1e-6)
+    assert len(folded.extras["history"]) == len(ref_history)
+    assert np.allclose(folded.extras["history"], ref_history, atol=1e-6)
+    # trace tail: both monotone accumulations end at the same best
+    assert np.isclose(folded.trace[-1],
+                      np.minimum.accumulate(ref_history)[-1], atol=1e-6)
+
+
+def test_folded_schedule_single_engine_build():
+    """Acceptance: the whole schedule is ONE engine compilation (keyed by
+    the schedule signature), not one per resolution — and a second solve
+    with the same signature reuses it."""
+    cache.clear()
+    prob = Problem.get("quadratic", n=2)
+    x0 = jnp.asarray([4.0, -3.0])
+    solve(prob, Distributed(max_bits=14), x0=x0, max_iters=32)
+    c = cache.get_cache("distributed.engine")
+    assert c.stats()["built"] == 1, c.stats()     # 4 resolutions, 1 build
+    solve(prob, Distributed(max_bits=14), x0=x0 + 0.25, max_iters=32)
+    assert c.stats()["built"] == 1
+    assert c.stats()["hits"] == 1
+    # batched schedule: also exactly one additional build for its signature
+    solve(prob, Batched(max_bits=14), x0=jnp.stack([x0, x0 + 0.5]),
+          max_iters=32)
+    assert c.stats()["built"] == 2
 
 
 def test_solve_string_front_door_and_errors():
@@ -169,78 +235,12 @@ def test_problem_adapts_both_callable_conventions():
 
 
 def test_sequential_max_iters_guard():
-    """run_sequential gained the device engines' total-iteration guard."""
-    from repro.core import dgo
+    """The sequential engine honours the total-iteration guard the device
+    engines carry."""
     prob = Problem.get("quadratic", n=2)
-    cfg = DGOConfig(encoding=prob.encoding, max_bits=14)
-    with pytest.warns(DeprecationWarning):
-        res = dgo.run_sequential(prob.host_fn(), cfg,
-                                 np.asarray([4.0, -3.0]), max_iters=3)
-    assert res.iterations <= 3
     guarded = solve(prob, Sequential(max_bits=14, max_total_iters=3),
                     x0=np.asarray([4.0, -3.0]))
     assert guarded.iterations <= 3
-
-
-# ---------------------------------------------------------------------------
-# legacy wrappers: thin, warning, delegating to solve()
-# ---------------------------------------------------------------------------
-
-def test_legacy_run_delegates_to_solve():
-    from repro.core import dgo
-    prob = Problem.get("rastrigin", n=2)
-    cfg = DGOConfig(encoding=prob.encoding, max_bits=12)
-    x0 = jnp.asarray([3.1, -2.2])
-    with pytest.warns(DeprecationWarning, match="dgo.run is deprecated"):
-        legacy = dgo.run(prob.fn, cfg, x0=x0)
-    facade = solve(prob, Fused(max_bits=12), x0=x0, max_iters=512)
-    assert isinstance(legacy, DGOResult)
-    assert np.isclose(float(legacy.value), float(facade.best_f))
-    assert legacy.evaluations == facade.extras["evaluations"]
-    assert np.allclose(legacy.trace, facade.trace)
-
-
-def test_legacy_run_clustered_delegates_to_solve():
-    from repro.core import dgo
-    prob = Problem.get("rastrigin", n=2)
-    cfg = DGOConfig(encoding=prob.encoding, max_bits=12)
-    key = jax.random.PRNGKey(3)
-    with pytest.warns(DeprecationWarning, match="run_clustered"):
-        legacy = dgo.run_clustered(prob.fn, cfg, n_clusters=4, key=key)
-    facade = solve(prob, Clustered(n_clusters=4, max_bits=12), seed=key,
-                   max_iters=512)
-    assert np.isclose(float(legacy.value), float(facade.best_f))
-    # legacy quirk preserved: trace = per-cluster final values
-    assert np.allclose(legacy.trace, facade.extras["cluster_values"])
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="either key or x0s"):
-            dgo.run_clustered(prob.fn, cfg, n_clusters=4)
-
-
-def test_legacy_distributed_wrappers_delegate_to_solve():
-    from repro.core.distributed import (
-        run_distributed, run_distributed_batched)
-    from repro.core.solver import _default_mesh
-    prob = Problem.get("rastrigin", n=2)
-    mesh = _default_mesh()
-    x0 = jnp.asarray([3.1, -2.2])
-    with pytest.warns(DeprecationWarning, match="run_distributed is"):
-        bits, val, hist = run_distributed(prob.fn, prob.encoding, mesh, x0,
-                                          max_iters=32)
-    facade = solve(prob, Distributed(mesh=mesh), x0=x0, max_iters=32)
-    assert np.isclose(float(val), float(facade.best_f))
-    assert np.allclose(hist, facade.extras["history"])
-    assert np.array_equal(np.asarray(bits), np.asarray(facade.extras["bits"]))
-
-    x0s = jnp.stack([x0, x0 + 0.5])
-    with pytest.warns(DeprecationWarning, match="run_distributed_batched"):
-        legacy = run_distributed_batched(prob.fn, prob.encoding, mesh, x0s,
-                                         max_iters=32)
-    fb = solve(prob, Batched(mesh=mesh), x0=x0s, max_iters=32)
-    assert np.allclose(np.asarray(legacy.values),
-                       np.asarray(fb.extras["values"]))
-    assert legacy.best == fb.extras["best"]
-    assert np.allclose(legacy.trace, fb.extras["trace"])
 
 
 def test_exactly_one_cache_subsystem_remains():
