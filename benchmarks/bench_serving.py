@@ -1,0 +1,175 @@
+"""Serving-path benchmark: signature-bucketed batched dispatch vs one
+dispatch per request, on a mixed heterogeneous workload.
+
+The serving subsystem's claim is that continuous batching by engine
+signature buys throughput without changing answers: a wave of W
+same-signature requests rides ONE compiled on-device while_loop (padded
+with inactive slots when partial), so the per-iteration reduce and the
+dispatch are amortized across the wave.  This bench measures exactly
+that:
+
+* ``per_request`` — every request dispatched alone
+  (``solve(strategy=Batched(restarts=1))``), the no-batching baseline a
+  naive server would run;
+* ``bucketed`` — the same requests drained through
+  ``serving.Scheduler`` (bucket by signature, pad to ``--wave``,
+  dispatch via ``solve_many``), results asserted IDENTICAL per request.
+
+``bucketed_over_per_request`` (>1 = batching wins) is the CI-gated ratio
+(``benchmarks/check_regression.py``).  Emits ``BENCH_serving.json``:
+
+  PYTHONPATH=src python benchmarks/bench_serving.py [--fast]
+
+Run standalone it forces an 8-virtual-device CPU mesh (the SNIPPETS
+idiom); under ``benchmarks.run`` it uses whatever devices exist.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__" and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import time
+
+import jax
+import numpy as np
+
+WAVE = 8            # scheduler wave width (engine restart slots)
+N_REQUESTS = 24     # mixed workload size
+MAX_ITERS = 48      # per-resolution cap
+MAX_BITS = 12       # folded schedule: every run escalates on device —
+#                     enough device work per dispatch that the measured
+#                     ratio is amortization, not host-side small-op noise
+
+
+def _workload(problems, n_requests, max_iters):
+    """Requests with PINNED start points (derived once, outside any timed
+    region) so neither path pays per-rep PRNG dispatches."""
+    from repro.core.solver import SolveRequest
+
+    reqs = []
+    for i in range(n_requests):
+        prob = problems[i % len(problems)]
+        x0 = prob.random_x0(jax.random.PRNGKey(100 + i))
+        reqs.append(SolveRequest(prob, x0=np.asarray(x0),
+                                 max_iters=max_iters))
+    return reqs
+
+
+def _median_time(fn, reps: int) -> float:
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run(fast: bool = True):
+    from repro.compat import AxisType, make_mesh
+    from repro.core import cache
+    from repro.core.solver import Batched, Problem, solve
+    from repro.serving import Scheduler
+    from repro.serving.scheduler import warmup
+
+    reps = 5 if fast else 15
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
+    # three distinct signatures: two dimensioned families + one fixed-dim
+    problems = [Problem.get("rastrigin", n=2), Problem.get("quadratic", n=3),
+                Problem.get("shekel", m=5)]
+    requests = _workload(problems, N_REQUESTS, MAX_ITERS)
+    cache.clear()   # cold start so the emitted cache stats cover this run
+
+    # warm both paths' engines once so the timed reps are steady-state:
+    # the bucketed W-slot engines via the shared serving warm-up helper,
+    # the per-request width-1 engines via one untimed baseline pass
+    warmup(problems, wave_size=WAVE, mesh=mesh, max_iters=MAX_ITERS,
+           max_bits=MAX_BITS)
+
+    def per_request():
+        return [solve(r.problem,
+                      Batched(restarts=1, mesh=mesh, max_bits=MAX_BITS),
+                      x0=np.asarray(r.x0)[None], max_iters=r.max_iters)
+                for r in requests]
+
+    ref = per_request()
+    t_per_request = _median_time(per_request, reps)
+
+    def bucketed():
+        sched = Scheduler(wave_size=WAVE, mesh=mesh, max_bits=MAX_BITS)
+        handles = [sched.submit(r) for r in requests]
+        sched.drain()
+        return sched, handles
+
+    sched, handles = bucketed()
+    t_bucketed = _median_time(lambda: bucketed(), reps)
+
+    # the batching claim is only interesting because answers are
+    # IDENTICAL: assert bitwise per-request parity against the baseline
+    for r, h in zip(ref, handles):
+        out = h.result()
+        assert float(out.best_f) == float(r.best_f)
+        assert np.array_equal(np.asarray(out.best_x), np.asarray(r.best_x))
+        assert out.iterations == r.iterations
+
+    m = sched.metrics()
+    thr_per_request = N_REQUESTS / t_per_request
+    thr_bucketed = N_REQUESTS / t_bucketed
+    cstats = cache.totals(suffix=".engine")   # engine compilations only
+    rows = [
+        ("bench_serving.n_requests", N_REQUESTS,
+         f"mixed workload: {len(problems)} signatures, wave width {WAVE}, "
+         f"{MAX_ITERS} iters/resolution, folded schedule to "
+         f"{MAX_BITS} bits"),
+        ("bench_serving.per_request_wall_s", t_per_request,
+         "one dispatch per request (Batched(restarts=1) per solve)"),
+        ("bench_serving.per_request_runs_per_s", thr_per_request,
+         "throughput of the unbatched baseline"),
+        ("bench_serving.bucketed_wall_s", t_bucketed,
+         "scheduler drain: signature buckets padded to the wave width, "
+         "one compiled dispatch per wave"),
+        ("bench_serving.bucketed_runs_per_s", thr_bucketed,
+         "throughput of the serving scheduler on the same workload"),
+        ("bench_serving.bucketed_over_per_request",
+         thr_bucketed / thr_per_request,
+         "GATED ratio: continuous-batching win over per-request dispatch "
+         "(same results, asserted bitwise)"),
+        ("bench_serving.bucket_fill_fraction", m["fill_fraction"],
+         "active slots / total slots across dispatched waves (padding "
+         "overhead of the partial final buckets)"),
+        ("bench_serving.waves", m["waves"],
+         "dispatches the scheduler needed for the workload"),
+        ("bench_serving.cache_engines_built", cstats["built"],
+         "distinct engine compilations paid for during this bench"),
+        ("bench_serving.cache_hits", cstats["hits"],
+         "compiled-engine reuses (steady-state serving property)"),
+        ("bench_serving.cache_evictions", cstats["evictions"],
+         "LRU evictions (should be 0 — signature churn alarm)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    try:
+        from benchmarks.bench_speedup import write_json
+    except ImportError:       # invoked as a script, not a module
+        from bench_speedup import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="path for the machine-readable artifact "
+                         "('' disables)")
+    args = ap.parse_args()
+    rows = run(fast=args.fast)
+    for name, val, note in rows:
+        print(f"{name},{val},{note}")
+    if args.json:
+        write_json(rows, args.json, bench="serving")

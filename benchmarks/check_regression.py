@@ -38,13 +38,20 @@ GATED = {
         "bench_speedup.fused_engine_speedup_n5": "higher",
         "bench_speedup.fused_engine_speedup_n9": "higher",
     },
+    # speedup_device_vs_sequential is reported but NOT gated: its
+    # denominator is the numpy sequential loop, so the ratio compares
+    # different substrates and does not cancel machine speed (measured
+    # 17.8 vs 53.3 across environments with identical code) — same
+    # rationale as the wall-clock exemption
     "distributed": {
         "bench_distributed.speedup_device_vs_host_loop": "higher",
         "bench_distributed.speedup_device_vs_host_driver": "higher",
         "bench_distributed.speedup_device_sustained_vs_host_loop": "higher",
-        "bench_distributed.speedup_device_vs_sequential": "higher",
         "bench_distributed.speedup_folded_vs_chained": "higher",
         "bench_distributed.batched_over_single": "lower",
+    },
+    "serving": {
+        "bench_serving.bucketed_over_per_request": "higher",
     },
 }
 

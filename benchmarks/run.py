@@ -25,6 +25,7 @@ def main() -> None:
         bench_ann,
         bench_complexity,
         bench_distributed,
+        bench_serving,
         bench_speedup,
         bench_testfunctions,
         roofline,
@@ -33,6 +34,7 @@ def main() -> None:
         "complexity": bench_complexity.run,      # paper Fig. 6
         "speedup": bench_speedup.run,            # paper Table 1 / Fig. 7
         "distributed": bench_distributed.run,    # driver/loop comparison
+        "serving": bench_serving.run,            # bucketed vs per-request
         "testfunctions": bench_testfunctions.run,  # paper Figs. 2-3 + text
         "ann": bench_ann.run,                    # paper Figs. 4-5
         "roofline": roofline.run,                # scale deliverable

@@ -1,5 +1,7 @@
 """Batched serving example: LM decode waves on a reduced zamba2 model,
-then batched DGO optimization-as-a-service through the same driver.
+then DGO optimization-as-a-service through the serving subsystem
+(repro.serving: request queue -> signature-bucketed scheduler ->
+solve_many), in both closed-loop and open-loop arrival modes.
 
   PYTHONPATH=src python examples/serving_batched.py
 """
@@ -23,12 +25,26 @@ if out.returncode != 0:
     print(out.stderr[-2000:])
     sys.exit(1)
 
-# wave 2: batched DGO requests — R optimizations advance in lockstep in
-# ONE compiled on-device loop (solve(strategy=Batched), the registry
-# resolves --problem by name)
+# wave 2: closed-loop DGO serving — restarts*waves requests drained
+# through the scheduler; same-signature requests ride one compiled
+# on-device loop per wave
 cmd = [sys.executable, "-m", "repro.launch.serve",
        "--dgo", "--problem", "rastrigin",
        "--restarts", "8", "--waves", "2", "--max-iters", "48"]
+print("$", " ".join(cmd))
+out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                     timeout=900)
+print(out.stdout)
+if out.returncode != 0:
+    print(out.stderr[-2000:])
+    sys.exit(1)
+
+# wave 3: open-loop DGO serving — Poisson arrivals over a mixed workload;
+# the scheduler buckets by engine signature and reports tail latency
+cmd = [sys.executable, "-m", "repro.launch.serve",
+       "--dgo", "--problems", "rastrigin:2,shekel,ackley:5",
+       "--rps", "25", "--duration", "3",
+       "--restarts", "4", "--max-iters", "32"]
 print("$", " ".join(cmd))
 out = subprocess.run(cmd, env=env, capture_output=True, text=True,
                      timeout=900)

@@ -26,9 +26,12 @@ from repro.core.solver import (
     Fused,
     Problem,
     Sequential,
+    SolveRequest,
     SolveResult,
     Strategy,
+    engine_signature,
     solve,
+    solve_many,
     strategy_names,
 )
 from repro.core.subspace import apply_subspace, make_dgo_train_step, materialize_winner
@@ -41,9 +44,12 @@ __all__ = [
     "Fused",
     "Problem",
     "Sequential",
+    "SolveRequest",
     "SolveResult",
     "Strategy",
+    "engine_signature",
     "solve",
+    "solve_many",
     "strategy_names",
     # shared specs / subsystems
     "DGOConfig",

@@ -22,20 +22,29 @@ the first element names the engine family for readable stats.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable
 
 
 class CompileCache:
-    """A named, bounded, instrumented memo table for compiled engines."""
+    """A named, bounded, instrumented memo table for compiled engines.
+
+    ``get`` is thread-safe (the serving queue documents thread-safe
+    submits, and submission resolves Problems through a cache); the lock
+    is held ACROSS the build so two racing threads cannot pay for — or
+    worse, register distinct instances of — the same key.
+    """
 
     def __init__(self, name: str, maxsize: int = 64):
         self.name = name
         self.maxsize = maxsize
         self._store: OrderedDict[Hashable, Any] = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.uncached = 0   # unhashable keys: built fresh, never stored
+        self.evictions = 0  # LRU drops (a compiled engine was discarded)
 
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the cached value for ``key``, building it on first use.
@@ -45,21 +54,23 @@ class CompileCache:
         to an uncached build — same behaviour the old ``except TypeError``
         paths provided, but visible in :meth:`stats`.
         """
-        try:
-            hit = key in self._store
-        except TypeError:
-            self.uncached += 1
-            return build()
-        if hit:
-            self.hits += 1
-            self._store.move_to_end(key)
-            return self._store[key]
-        self.misses += 1
-        value = build()
-        self._store[key] = value
-        while len(self._store) > self.maxsize:
-            self._store.popitem(last=False)
-        return value
+        with self._lock:
+            try:
+                hit = key in self._store
+            except TypeError:
+                self.uncached += 1
+                return build()
+            if hit:
+                self.hits += 1
+                self._store.move_to_end(key)
+                return self._store[key]
+            self.misses += 1
+            value = build()
+            self._store[key] = value
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+                self.evictions += 1
+            return value
 
     @property
     def built(self) -> int:
@@ -72,12 +83,18 @@ class CompileCache:
     def stats(self) -> dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "uncached": self.uncached, "built": self.built,
-                "size": len(self._store)}
+                "evictions": self.evictions, "size": len(self._store)}
+
+    def snapshot(self) -> dict:
+        """Identity + counters as one flat dict — the unit the serving
+        metrics endpoint reports per cache."""
+        return {"name": self.name, "maxsize": self.maxsize, **self.stats()}
 
     def clear(self) -> None:
         """Drop every entry AND reset the counters (cold-compile tests)."""
-        self._store.clear()
-        self.hits = self.misses = self.uncached = 0
+        with self._lock:
+            self._store.clear()
+            self.hits = self.misses = self.uncached = self.evictions = 0
 
 
 _CACHES: dict[str, CompileCache] = {}
@@ -97,13 +114,28 @@ def stats() -> dict[str, dict[str, int]]:
     return {name: cache.stats() for name, cache in sorted(_CACHES.items())}
 
 
-def totals() -> dict[str, int]:
-    """Counters summed across every registered cache."""
-    out = {"hits": 0, "misses": 0, "uncached": 0, "built": 0, "size": 0}
-    for cache in _CACHES.values():
+def totals(suffix: str | None = None) -> dict[str, int]:
+    """Counters summed across registered caches; ``suffix`` restricts to
+    cache names ending with it (``".engine"`` sums only the compiled-
+    engine caches — the serving/bench reports use this so memo tables
+    like ``solver.problem`` cannot inflate 'engines built' numbers)."""
+    out = {"hits": 0, "misses": 0, "uncached": 0, "built": 0,
+           "evictions": 0, "size": 0}
+    for name, cache in _CACHES.items():
+        if suffix is not None and not name.endswith(suffix):
+            continue
         for k, v in cache.stats().items():
             out[k] += v
     return out
+
+
+def snapshot() -> dict:
+    """One observability dict for the whole subsystem: per-cache snapshots
+    plus the summed totals — what the serving metrics endpoint embeds
+    under its ``"cache"`` key."""
+    return {"caches": {name: cache.snapshot()
+                       for name, cache in sorted(_CACHES.items())},
+            "totals": totals()}
 
 
 def clear() -> None:

@@ -926,19 +926,31 @@ def make_distributed_engine_batched(
     """On-device engine over R lockstep restarts — one while_loop, one
     compilation, one reduce per iteration for the whole batch.
 
+    Every engine takes two per-slot call-time arrays alongside the start
+    points (dynamic, so heterogeneous waves share one compilation):
+    ``active`` (R,) bool — inactive slots are padding and never step (a
+    partially-filled serving wave reuses the full-width engine) — and
+    ``slot_iters`` (R,) i32, each slot's own iteration cap (per resolution
+    on the schedule path).  A slot's trajectory is a pure function of its
+    own x0/cap: it is bitwise independent of which other slots ride the
+    wave, which is what lets the serving scheduler promise per-request
+    results identical to individual solves.
+
     Fixed resolution (``res_bits`` None or a single entry): returns
-    ``engine(x0s (R, n_vars), quorum_mask) ->
+    ``engine(x0s (R, n_vars), quorum_mask, active, slot_iters) ->
     (bits (R,N), vals (R,), iters (R,), trace (R, max_iters+1))``.
-    Restarts that stall stop mutating (their bits/val/trace freeze and
-    their iteration counter stops) while the loop continues until every
-    restart has stalled or ``max_iters`` is hit.
+    Restarts that stall (or hit their slot cap) stop mutating — their
+    bits/val/trace freeze and their iteration counter stops — while the
+    loop continues until every active restart is done or ``max_iters``
+    (the static trace-capacity cap) is hit.
 
     Folded schedule (``res_bits`` with several resolutions): the whole
     batch escalates in lockstep inside the same while_loop — when every
-    restart has stalled at the current resolution (or the per-resolution
-    cap is hit), all restarts re-encode onto the next lattice and resume.
-    Returns ``engine(x0s, quorum_mask) -> (bits (R, n_max), vals (R,),
-    best_vals (R,), best_bits (R, n_max), best_res (R,), iters (R,),
+    active restart has stalled or hit its per-resolution slot cap (or the
+    static per-resolution cap is hit), all restarts re-encode onto the
+    next lattice and resume.  Returns ``engine(x0s, quorum_mask, active,
+    slot_iters) -> (bits (R, n_max), vals (R,), best_vals (R,),
+    best_bits (R, n_max), best_res (R,), iters (R,),
     trace (R, len(res_bits)*max_iters + 1))`` where ``best_*`` track each
     restart's best parent across resolutions and ``trace`` holds the raw
     per-iteration values (escalation re-encodes not recorded).  Still ONE
@@ -958,16 +970,23 @@ def make_distributed_engine_batched(
         t_max = n_res * max_iters + 1
         rows = jnp.arange(n_restarts)
 
-        def shard_schedule_engine(x0s, quorum_mask):
+        def shard_schedule_engine(x0s, quorum_mask, active, slot_iters):
             r0 = jnp.int32(0)
             bits0 = tables.encode(x0s, r0)                   # (R, n_max)
             vals0 = f_batch(tables.decode(bits0, r0)).astype(jnp.float32)
             one_step = prepare(quorum_mask)
             stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
 
+            def live_of(stalls, it_in_res):
+                # a slot steps while it is real, unstalled and under its
+                # own per-resolution cap (the static max_iters only sizes
+                # the trace buffer / backstops the loop)
+                return active & (stalls < stall_limit) & \
+                    (it_in_res < slot_iters)
+
             def res_done(s):
                 stalls, it_in_res = s[6], s[7]
-                return jnp.logical_or(jnp.all(stalls >= stall_limit),
+                return jnp.logical_or(~jnp.any(live_of(stalls, it_in_res)),
                                       it_in_res >= max_iters)
 
             def cond(s):
@@ -976,7 +995,7 @@ def make_distributed_engine_batched(
             def iterate(s):
                 (res_idx, bits, vals, best_vals, best_bits, best_res,
                  stalls, it_in_res, pos, trace) = s
-                live = stalls < stall_limit                  # (R,)
+                live = live_of(stalls, it_in_res)            # (R,)
                 nb, nv, improved = one_step(bits, vals, it_in_res, res_idx)
                 bits = jnp.where(live[:, None], nb, bits)
                 vals = jnp.where(live, nv, vals)
@@ -1023,7 +1042,7 @@ def make_distributed_engine_batched(
         replicated = P()
         mapped = shard_map(
             shard_schedule_engine, mesh=mesh,
-            in_specs=(replicated, replicated),
+            in_specs=(replicated,) * 4,
             out_specs=(replicated,) * 7,
             check_vma=False)
         return jax.jit(mapped)
@@ -1034,21 +1053,24 @@ def make_distributed_engine_batched(
 
     n_shards = plan.n_shards
 
-    def shard_engine(x0s, quorum_mask):
+    def shard_engine(x0s, quorum_mask, active, slot_iters):
         bits0 = encode(x0s, enc)                          # (R, N)
         vals0 = f_batch(decode(bits0, enc)).astype(jnp.float32)
         one_step = prepare(quorum_mask)
         # same stall rule as the single-restart engine, per restart
         stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
 
+        def live_of(stalls, iters):
+            return active & (stalls < stall_limit) & (iters < slot_iters)
+
         def cond(s):
-            _, _, stalls, it, _, _ = s
-            return jnp.logical_and(jnp.any(stalls < stall_limit),
+            _, _, stalls, it, iters, _ = s
+            return jnp.logical_and(jnp.any(live_of(stalls, iters)),
                                    it < max_iters)
 
         def body(s):
             bits, vals, stalls, it, iters, trace = s
-            live = stalls < stall_limit                   # (R,)
+            live = live_of(stalls, iters)                 # (R,)
             nb, nv, improved = one_step(bits, vals, it)
             bits = jnp.where(live[:, None], nb, bits)
             vals = jnp.where(live, nv, vals)
@@ -1071,7 +1093,7 @@ def make_distributed_engine_batched(
     replicated = P()
     mapped = shard_map(
         shard_engine, mesh=mesh,
-        in_specs=(replicated, replicated),
+        in_specs=(replicated,) * 4,
         out_specs=(replicated,) * 4,
         check_vma=False)
     return jax.jit(mapped)
@@ -1097,11 +1119,20 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
                  max_iters: int = 256,
                  virtual_block: int = 256,
                  quorum_mask=None,
-                 res_bits: Sequence[int] | None = None) -> BatchedResult:
+                 res_bits: Sequence[int] | None = None,
+                 active=None,
+                 slot_iters=None) -> BatchedResult:
     """Batched multi-start distributed DGO: R restarts from ``x0s``
     (R, n_vars) share one compiled on-device while_loop — including, when
     ``res_bits`` names a schedule, every resolution escalation (the whole
     batch and schedule is ONE dispatch).
+
+    ``active`` (R,) bool marks padding slots (False = never stepped —
+    a partially-filled serving wave reuses the full-width compilation);
+    ``slot_iters`` (R,) i32 gives each slot its own iteration cap (per
+    resolution on the schedule path).  Both are call-time arrays: they do
+    not enter the compile-cache key, so heterogeneous waves share one
+    engine.  Defaults: all slots active, every cap = ``max_iters``.
 
     This is the batched-request serving path (launch/serve.py --dgo): R
     concurrent requests amortize the per-iteration reduce and the dispatch
@@ -1117,13 +1148,26 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
     n_shards = _axis_prod(mesh, pop_axes)
     if quorum_mask is None:
         quorum_mask = jnp.ones((n_shards,), bool)
+    if active is None:
+        active = jnp.ones((n_restarts,), bool)
+    else:
+        active = jnp.asarray(active, bool)
+    if slot_iters is None:
+        slot_iters = jnp.full((n_restarts,), max_iters, jnp.int32)
+    else:
+        slot_iters = jnp.asarray(slot_iters, jnp.int32)
+    if active.shape != (n_restarts,) or slot_iters.shape != (n_restarts,):
+        raise ValueError(
+            f"active/slot_iters must be ({n_restarts},), got "
+            f"{active.shape}/{slot_iters.shape}")
     schedule = _resolve_res_bits(enc, res_bits)
 
     if len(schedule) == 1:
         engine = _batched_engine_for(f, enc.with_bits(schedule[0]), mesh,
                                      n_restarts, pop_axes, max_iters,
                                      virtual_block)
-        bits, vals, iters, trace = engine(x0s, quorum_mask)
+        bits, vals, iters, trace = engine(x0s, quorum_mask, active,
+                                          slot_iters)
         iters_h, trace_np = jax.device_get((iters, trace))
         return BatchedResult(bits=bits, values=vals, iterations=iters,
                              trace=trace_np[:, : int(iters_h.max()) + 1],
@@ -1133,26 +1177,28 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
                                  n_restarts, pop_axes, max_iters,
                                  virtual_block, res_bits=schedule)
     (_, _, best_vals, best_bits, best_res, iters, trace) = engine(
-        x0s, quorum_mask)
-    iters_h, trace_h, bits_h, res_h, vals_h = jax.device_get(
-        (iters, trace, best_bits, best_res, best_vals))
+        x0s, quorum_mask, active, slot_iters)
+    iters_h, trace_h, bits_h, res_h, vals_h, act_h = jax.device_get(
+        (iters, trace, best_bits, best_res, best_vals, active))
 
     # per-restart monotone histories, truncated to the longest run and
-    # padded past each restart's own end with its final best
+    # padded past each restart's own end with its final best.  Inactive
+    # padding slots skip the host-side accumulate/decode entirely — at
+    # low bucket fill most of a wave's post-processing would otherwise be
+    # spent on clones whose results are discarded
     t_len = int(iters_h.max()) + 1
-    mono = np.empty((n_restarts, t_len), np.float32)
-    for r in range(n_restarts):
+    mono = np.repeat(trace_h[:, :1], t_len, axis=1)
+    best_xs = np.zeros((n_restarts, enc.n_vars), np.float32)
+    for r in np.flatnonzero(act_h):
         h = np.minimum.accumulate(trace_h[r, : int(iters_h[r]) + 1])
         mono[r, : len(h)] = h
         mono[r, len(h):] = h[-1]
-
-    # each restart's best point decoded at its OWN resolution; the bits
-    # field reports them quantized at the FINAL resolution (matching the
-    # fused engine's DGOResult.bits convention)
-    best_xs = np.stack([
-        decode_np(bits_h[r][: enc.n_vars * schedule[int(res_h[r])]],
-                  enc.with_bits(schedule[int(res_h[r])]))
-        for r in range(n_restarts)])
+        # each restart's best point decoded at its OWN resolution; the
+        # bits field reports them quantized at the FINAL resolution
+        # (matching the fused engine's DGOResult.bits convention)
+        b = schedule[int(res_h[r])]
+        best_xs[r] = decode_np(bits_h[r][: enc.n_vars * b],
+                               enc.with_bits(b))
     enc_final = enc.with_bits(schedule[-1])
     bits = encode(jnp.asarray(best_xs, jnp.float32), enc_final)
     return BatchedResult(bits=bits, values=jnp.asarray(vals_h, jnp.float32),

@@ -14,6 +14,7 @@ same objects drive tests, benchmarks and examples.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -147,6 +148,37 @@ def accepts_n(name: str) -> bool:
         raise ValueError(f"unknown objective {name!r}; "
                          f"valid names: {', '.join(names())}")
     return _REGISTRY[name][1]
+
+
+@functools.lru_cache(maxsize=None)
+def _factory_defaults(name: str) -> tuple:
+    """(param, default) pairs of a registry factory — signatures are
+    static, so introspect once per name, not per lookup."""
+    import inspect
+
+    return tuple(
+        (pname, p.default)
+        for pname, p in inspect.signature(
+            _REGISTRY[name][0]).parameters.items()
+        if p.kind not in (inspect.Parameter.VAR_POSITIONAL,
+                          inspect.Parameter.VAR_KEYWORD)
+        and p.default is not inspect.Parameter.empty)
+
+
+def canonical_spec(name: str, n: int | None = None, **kwargs) -> tuple:
+    """One hashable key per SEMANTIC objective spec: factory defaults are
+    filled in, so ``("rastrigin",)`` and ``("rastrigin", n=2)`` — or
+    ``("shekel",)`` and ``("shekel", m=5)`` — normalize to the same key.
+    Callers that memoize per spec (``Problem.get``) route through this,
+    otherwise an explicitly-passed default would silently split one
+    workload into two engine buckets/compilations."""
+    accepts_n(name)                  # validates the name
+    merged = dict(kwargs)
+    if n is not None:                # n for a fixed-dim objective is
+        merged["n"] = n              # rejected by get() at build time
+    for pname, default in _factory_defaults(name):
+        merged.setdefault(pname, default)
+    return (name, tuple(sorted(merged.items())))
 
 
 def get(name: str, n: int | None = None, **kwargs) -> Objective:

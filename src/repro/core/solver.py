@@ -47,13 +47,15 @@ import numpy as np
 
 from repro.compat import AxisType, make_mesh, pure_callback
 from repro.core import objectives as objectives_registry
+from repro.core.cache import get_cache
 from repro.core.dgo import DGOConfig
 from repro.core.encoding import Encoding, decode, decode_np
 from repro.core.objectives import Objective
 
 __all__ = [
     "Batched", "Clustered", "Distributed", "Fused", "Problem", "Sequential",
-    "SolveResult", "Strategy", "solve", "strategy_names",
+    "SolveRequest", "SolveResult", "Strategy", "engine_signature", "solve",
+    "solve_many", "strategy_names",
 ]
 
 
@@ -158,9 +160,21 @@ class Problem:
     @classmethod
     def get(cls, name: str, n: int | None = None, **kwargs) -> "Problem":
         """Build from the objective registry: ``Problem.get("rastrigin",
-        n=5)``.  Unknown names raise with the list of valid ones."""
-        return cls.from_objective(objectives_registry.get(name, n=n,
-                                                          **kwargs))
+        n=5)``.  Unknown names raise with the list of valid ones.
+
+        Instances are MEMOIZED per semantic spec
+        (``objectives.canonical_spec`` — factory defaults filled in, so
+        ``get("rastrigin")`` and ``get("rastrigin", n=2)`` are one spec):
+        the registry factories close over fresh callables on every call,
+        and both the engine compile cache and the serving bucket
+        signature key on callable identity — without memoization every
+        name-built request would land in its own bucket and pay its own
+        compilation.  Problems are frozen, so sharing is safe; unhashable
+        kwargs (e.g. an array key) fall back to an unshared build.
+        """
+        key = objectives_registry.canonical_spec(name, n=n, **kwargs)
+        return _PROBLEMS.get(key, lambda: cls.from_objective(
+            objectives_registry.get(name, n=n, **kwargs)))
 
     def replace(self, **changes) -> "Problem":
         """Functional update (e.g. ``problem.replace(encoding=enc)``)."""
@@ -191,6 +205,12 @@ class Problem:
         return jax.random.uniform(key, shape, minval=enc.lo, maxval=enc.hi)
 
 
+# name-built Problems are shared per spec (see Problem.get): the registry
+# would otherwise mint a fresh objective closure per call, splitting the
+# engine compile cache and the serving bucket signature on every request
+_PROBLEMS = get_cache("solver.problem", maxsize=128)
+
+
 # ---------------------------------------------------------------------------
 # SolveResult: the one result pytree every strategy populates
 # ---------------------------------------------------------------------------
@@ -198,10 +218,29 @@ class Problem:
 class SolveResult(NamedTuple):
     """Uniform result of :func:`solve` across every strategy.
 
-    ``extras`` carries per-strategy detail (bit strings, evaluation
-    counts, per-restart values, raw histories, ...) keyed by short names —
-    see each strategy's docstring.  The tuple itself is a pytree, so it
-    can cross jit/pmap boundaries and be tree-mapped.
+    ``extras`` carries per-strategy detail keyed by short names.  The key
+    set is a CONTRACT per strategy (pinned by ``tests/test_api.py`` so
+    drift is caught, not discovered by a KeyError in a dashboard):
+
+    =============  ========================================================
+    strategy       extras keys
+    =============  ========================================================
+    sequential     ``bits``, ``evaluations``, ``raw_trace``
+    fused          ``bits``, ``evaluations``
+    clustered      ``bits``, ``evaluations``, ``cluster_values``, ``winner``
+    distributed    ``bits``, ``bits_resolution``, ``history``, ``schedule``
+    batched        ``bits``, ``values``, ``restart_iterations``, ``trace``,
+                   ``best``, ``schedule``
+    solve_many     ``bits``, ``schedule``, ``wave_slot``, ``wave_size``
+                   (per-request results from the serving path)
+    =============  ========================================================
+
+    Per-restart arrays (``values``, ``restart_iterations``, the (R, T)
+    ``trace``) exist ONLY on ``batched`` — every other strategy reports
+    its single winner; ``cluster_values``/``winner`` are the clustered
+    analogue.  ``schedule`` appears wherever a resolution schedule can be
+    configured on the engine (the distributed family).  The tuple itself
+    is a pytree, so it can cross jit/pmap boundaries and be tree-mapped.
     """
 
     best_x: jax.Array        # (n_vars,) best point found
@@ -546,3 +585,183 @@ def solve(problem, strategy="fused", *, seed: int | jax.Array = 0,
     else:
         key = jax.random.PRNGKey(int(seed))
     return strat._solve(prob, key=key, x0=x0, max_iters=max_iters)
+
+
+# ---------------------------------------------------------------------------
+# solve_many(): heterogeneous requests over the batched engine
+# ---------------------------------------------------------------------------
+
+_DEFAULT_REQUEST_ITERS = 256     # the distributed engines' max_iters default
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One optimization request for :func:`solve_many` / the serving
+    subsystem (``repro.serving``).
+
+    ``problem`` is anything :func:`as_problem` accepts (a
+    :class:`Problem`, an ``Objective``, or a registry name).  ``x0`` pins
+    the start point; omitted, it is derived from ``seed`` exactly the way
+    a per-request ``solve(..., strategy=Batched(restarts=1), seed=seed)``
+    would derive it, so batching requests never changes their answers.
+    ``max_iters`` caps iterations (per resolution when the dispatch
+    configures a schedule); ``priority`` orders the serving queue (higher
+    first — ignored by a direct ``solve_many`` call, which preserves
+    input order).
+    """
+
+    problem: Any
+    seed: int = 0
+    x0: Any = None
+    max_iters: int | None = None
+    priority: int = 0
+
+    def resolve(self) -> "SolveRequest":
+        """Coerce ``problem`` to a :class:`Problem` and validate ``x0``
+        against its encoding — errors surface at the submission boundary,
+        so one malformed request can never poison the wave it would have
+        been bucketed into."""
+        prob = as_problem(self.problem)
+        if self.x0 is not None:
+            _check_request_x0(prob, self.x0)
+        if prob is self.problem:
+            return self
+        return dataclasses.replace(self, problem=prob)
+
+
+def engine_signature(problem, *, mesh=None, pop_axes=("data",),
+                     virtual_block: int = 256, max_bits: int | None = None,
+                     bits_step: int = 2) -> tuple:
+    """The compile-cache bucket key of the batched engine that would serve
+    ``problem`` under the given dispatch configuration.
+
+    Two requests with equal signatures share one compiled engine (the
+    tuple is exactly the static part of ``core.cache``'s
+    ``distributed.engine`` key: objective callable, base encoding, mesh,
+    population axes, virtual block and resolution schedule — everything
+    except the wave width and iteration caps, which the serving scheduler
+    chooses).  The serving scheduler buckets queued requests by this
+    value; :func:`solve_many` groups by it internally.
+    """
+    prob = as_problem(problem)
+    schedule = _resolution_schedule(prob.encoding, max_bits, bits_step)
+    mesh = mesh if mesh is not None else _default_mesh()
+    enc0 = prob.encoding.with_bits(schedule[0])
+    return ("batched", prob.jax_fn, enc0, mesh, tuple(pop_axes),
+            virtual_block, tuple(schedule))
+
+
+def _as_request(req) -> SolveRequest:
+    if isinstance(req, SolveRequest):
+        return req.resolve()
+    return SolveRequest(problem=as_problem(req))
+
+
+def _check_request_x0(prob: Problem, x0) -> None:
+    shape = np.shape(x0)
+    if shape != (prob.encoding.n_vars,):
+        raise ValueError(
+            f"request x0 must be ({prob.encoding.n_vars},) for "
+            f"problem {prob.name!r}, got {shape}")
+
+
+def _request_x0(prob: Problem, req: SolveRequest) -> jax.Array:
+    """The request's start point — pinned, or the SAME seed-derived draw a
+    per-request ``solve(Batched(restarts=1), seed=...)`` would make."""
+    if req.x0 is not None:
+        _check_request_x0(prob, req.x0)
+        return jnp.asarray(req.x0, jnp.float32)
+    key = jax.random.PRNGKey(int(req.seed))
+    return prob.random_x0(key, batch=1)[0]
+
+
+def _slot_result(res, bits_h, slot: int, enc0: Encoding, schedule: tuple,
+                 wave_size: int) -> SolveResult:
+    """Per-slot SolveResult assembly — the same post-processing
+    ``Batched._solve`` applies to its winner, applied to one slot, so a
+    bucketed request's result is bitwise the per-request one.  ``bits_h``
+    is the wave's bits fetched ONCE (None on the schedule path, which
+    carries decoded best points already)."""
+    if res.best_xs is not None:           # schedule path: best points
+        best_x = jnp.asarray(res.best_xs[slot])
+    else:                                 # fixed resolution: decode
+        best_x = jnp.asarray(decode_np(bits_h[slot], enc0))
+    iters = int(np.asarray(res.iterations)[slot])
+    return SolveResult(
+        best_x=best_x,
+        best_f=res.values[slot],
+        iterations=iters,
+        trace=res.trace[slot][: iters + 1],
+        extras={"bits": res.bits[slot], "schedule": schedule,
+                "wave_slot": slot, "wave_size": wave_size})
+
+
+def solve_many(requests, *, mesh=None, pop_axes=("data",),
+               virtual_block: int = 256, max_bits: int | None = None,
+               bits_step: int = 2, pad_to: int | None = None,
+               quorum_mask=None) -> list[SolveResult]:
+    """Solve N heterogeneous requests through the batched engine, one
+    dispatch per signature bucket — results in input order.
+
+    Requests are grouped by :func:`engine_signature` (problem spec +
+    encoding + resolution schedule + mesh geometry); each group runs as
+    waves of lockstep restarts in ONE compiled on-device while_loop with
+    per-slot start points and iteration caps.  ``pad_to`` fixes the wave
+    width: groups are chunked to it and the final partial wave is padded
+    with inactive slots, so every wave of a signature reuses the SAME
+    compiled engine (the serving scheduler passes its configured wave
+    size).  ``pad_to=None`` dispatches each group at its own width.
+
+    Parity contract: each request's ``best_x``/``best_f``/``iterations``/
+    ``trace`` are bitwise identical to a per-request
+    ``solve(problem, Batched(restarts=1, ...), ...)`` — slots advance
+    independently inside the wave (``tests/test_serving.py`` pins this,
+    including a partially-filled final wave).  Per-request extras:
+    ``bits``, ``schedule``, ``wave_slot``, ``wave_size``.
+    """
+    from repro.core import distributed
+
+    reqs = [_as_request(r) for r in requests]
+    mesh = mesh if mesh is not None else _default_mesh()
+    if pad_to is not None and pad_to < 1:
+        raise ValueError(f"pad_to must be >= 1, got {pad_to}")
+
+    groups: dict[tuple, list[int]] = {}
+    for i, req in enumerate(reqs):
+        sig = engine_signature(req.problem, mesh=mesh, pop_axes=pop_axes,
+                               virtual_block=virtual_block,
+                               max_bits=max_bits, bits_step=bits_step)
+        groups.setdefault(sig, []).append(i)
+
+    results: list[SolveResult | None] = [None] * len(reqs)
+    for idxs in groups.values():
+        prob: Problem = reqs[idxs[0]].problem
+        schedule = tuple(_resolution_schedule(prob.encoding, max_bits,
+                                              bits_step))
+        enc0 = prob.encoding.with_bits(schedule[0])
+        width = pad_to if pad_to is not None else len(idxs)
+        for start in range(0, len(idxs), width):
+            wave = idxs[start: start + width]
+            x0s = [_request_x0(reqs[i].problem, reqs[i]) for i in wave]
+            caps = [reqs[i].max_iters if reqs[i].max_iters is not None
+                    else _DEFAULT_REQUEST_ITERS for i in wave]
+            n_pad = width - len(wave)
+            if n_pad:                     # padding: clones of slot 0,
+                x0s += [x0s[0]] * n_pad   # masked inactive, zero budget
+                caps += [0] * n_pad
+            active = np.arange(width) < len(wave)
+            # static cap sizes the trace buffer only (slots gate on their
+            # own cap); rounded up so cap mixes don't churn the compile key
+            cap = max(64, -(-max(caps) // 64) * 64)
+            res = distributed._run_batched(
+                prob.jax_fn, enc0, mesh, jnp.stack(x0s),
+                pop_axes=tuple(pop_axes), max_iters=cap,
+                virtual_block=virtual_block, quorum_mask=quorum_mask,
+                res_bits=schedule, active=active, slot_iters=caps)
+            # one host fetch of the wave's bit strings, not one per slot
+            bits_h = (None if res.best_xs is not None
+                      else jax.device_get(res.bits))
+            for slot, i in enumerate(wave):
+                results[i] = _slot_result(res, bits_h, slot, enc0,
+                                          schedule, width)
+    return results

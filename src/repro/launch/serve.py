@@ -9,17 +9,28 @@ decode tokens/s. The production-mesh serving path (TP-sharded params,
 batch-sharded cache, sequence-parallel long-context) is what dryrun.py
 lowers for the decode_32k / long_500k cells.
 
-DGO batched-request path (the optimization-as-a-service analogue):
+DGO optimization-serving path — a thin CLI over ``repro.serving``
+(RequestQueue + signature-bucketed Scheduler + ``solve_many``):
 
+  # open-loop arrival simulation: Poisson arrivals at --rps for --duration
+  # seconds, a mixed workload of problems, p50/p95 latency + runs/s out
+  PYTHONPATH=src python -m repro.launch.serve --dgo \\
+      --problems rastrigin:2,shekel,ackley:5 --rps 20 --duration 5
+
+  # closed-loop waves (the legacy shape): submit restarts*waves requests,
+  # drain the queue
   PYTHONPATH=src python -m repro.launch.serve --dgo --problem rastrigin \\
       --n-vars 2 --restarts 8 --waves 2
 
-Each wave is a batch of R optimization requests (random start points) run
-through ``solve(problem, strategy=Batched(...))`` — one compiled on-device
-while_loop advances all R restarts in lockstep over the population mesh,
-so wave wall-clock amortizes to near a single run; throughput reported as
-completed runs/s and population iterations/s. ``--problem`` accepts any
-objective registry name (``repro.core.objectives.names()``).
+``--problems`` takes ``name[:n_vars]`` specs, comma-separated; every name
+comes from the objective registry (``repro.core.objectives.names()``) and
+is validated HERE, at the CLI boundary — an unknown name, a bad variable
+count, or ``n`` passed to a fixed-dimensional objective exits with the
+valid names/range instead of erroring deep inside a solve.  The scheduler
+buckets queued requests by engine signature, pads each bucket to
+``--restarts`` slots with inactive lanes, and dispatches it as ONE
+compiled on-device while_loop; per-request results are bitwise what
+individual solves would return.
 """
 from __future__ import annotations
 
@@ -34,64 +45,164 @@ from repro.configs import REGISTRY, get_arch, reduced
 from repro.models import init_model, lm_decode, lm_prefill
 
 
-def serve_dgo(args) -> None:
-    """Serve waves of batched DGO requests via ``solve(strategy=Batched)``.
+# upper bound on --n-vars accepted at the CLI: the population is
+# 2*n_vars*bits-1 children per step — beyond this the wave would not fit
+# a sane demo budget (the library itself has no hard cap)
+MAX_CLI_N_VARS = 1024
 
-    The objective comes from the registry (``objectives.get``) — any
-    registered name works, including the fixed-dimensional families
-    (shekel, becker_lago, xor, ...) the old hand-rolled factory table
-    omitted; an unknown name exits with the list of valid ones.
+
+def _parse_problem_specs(args) -> list:
+    """Resolve ``--problems name[:n],...`` (or legacy ``--problem`` +
+    ``--n-vars``) into Problem instances, validating at the CLI boundary.
+
+    ``Problem.get`` memoizes per spec, so every request of a spec (and
+    duplicate specs) shares ONE Problem instance — engine signatures key
+    on the objective callable, so rebuilding per request would defeat
+    both bucketing and the compile cache.
     """
-    from repro.compat import AxisType, make_mesh
-    from repro.core import objectives
-    from repro.core.solver import Batched, Problem, solve
+    from repro.core.solver import Problem
 
-    try:
-        obj = objectives.get(args.problem, n=args.n_vars)
-    except ValueError as e:
-        raise SystemExit(f"--problem: {e}")
-    problem = Problem.from_objective(obj)
-    n_dev = jax.device_count()
-    mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
-    enc = problem.encoding
-    strategy = Batched(restarts=args.restarts, mesh=mesh)
+    specs: list[tuple[str, int | None]] = []
+    if args.problems:
+        for item in args.problems.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            name, sep, n_str = item.partition(":")
+            if sep and not n_str.lstrip("-").isdigit():
+                raise SystemExit(
+                    f"--problems: bad spec {item!r} (want name or name:n)")
+            specs.append((name, int(n_str) if sep else None))
+    else:
+        specs.append((args.problem, args.n_vars))
 
-    key = jax.random.PRNGKey(args.seed)
-    total_runs = 0
-    total_iters = 0
-    t_serve = 0.0
-    best = float("inf")
-    for wave in range(args.waves):
-        key, kw = jax.random.split(key)
-        x0s = jax.random.uniform(kw, (args.restarts, enc.n_vars),
-                                 minval=enc.lo, maxval=enc.hi)
-        if wave == 0:   # compile wave — steady-state timing starts after
-            solve(problem, strategy, x0=x0s, max_iters=args.max_iters)
-        t0 = time.time()
-        res = solve(problem, strategy, x0=x0s, max_iters=args.max_iters)
-        jax.block_until_ready(res.extras["values"])
-        t_serve += time.time() - t0
-        total_runs += args.restarts
-        total_iters += int(jnp.sum(res.extras["restart_iterations"]))
-        best = min(best, float(res.best_f))
-        print(f"[serve] wave {wave}: {args.restarts} runs, best "
-              f"{float(res.best_f):.5f}")
+    if not specs:
+        raise SystemExit("--problems: no problem specs given "
+                         "(want comma-separated name[:n_vars])")
+    problems = []
+    for name, n in specs:
+        if n is not None and not 1 <= n <= MAX_CLI_N_VARS:
+            raise SystemExit(
+                f"--problems: n_vars for {name!r} must be in "
+                f"[1, {MAX_CLI_N_VARS}], got {n}")
+        try:
+            problems.append(Problem.get(name, n=n))
+        except ValueError as e:
+            raise SystemExit(f"--problems: {e}")
+    return problems
 
+
+def _build_scheduler(args, problems):
+    from repro.serving import Scheduler
+
+    # mesh=None -> the library's shared default (all local devices on
+    # ("data",)) — one source of truth for the serving geometry
+    sched = Scheduler(wave_size=args.restarts, max_bits=args.max_bits)
+    sched.warmup(problems, max_iters=args.max_iters)
+    return sched
+
+
+def _report(sched, problems, best: float, wall_s: float) -> None:
+    from repro.core import cache
+
+    m = sched.metrics()
+    # engine caches only: memo tables (solver.problem) would otherwise
+    # inflate "engines built"/"hits" by one per request spec/submission
+    eng = cache.totals(suffix=".engine")
     print(json.dumps({
-        "problem": problem.name,
-        "runs_per_s": round(total_runs / max(t_serve, 1e-9), 1),
-        "iters_per_s": round(total_iters / max(t_serve, 1e-9), 1),
-        "total_runs": total_runs,
-        "best_value": best,
+        "problems": [p.name for p in problems],
+        "completed": m["completed"],
+        "failed": m["failed"],
+        "requeued": m["requeued"],
+        "runs_per_s": (round(m["completed"] / wall_s, 1)
+                       if wall_s > 0 else None),
+        "latency_p50_ms": (round(m["latency_p50_ms"], 1)
+                           if m["latency_p50_ms"] is not None else None),
+        "latency_p95_ms": (round(m["latency_p95_ms"], 1)
+                           if m["latency_p95_ms"] is not None else None),
+        "waves": m["waves"],
+        "bucket_fill": (round(m["fill_fraction"], 3)
+                        if m["fill_fraction"] is not None else None),
+        "cache_engines_built": eng["built"],
+        "cache_hits": eng["hits"],
+        "best_value": None if best == float("inf") else best,
     }))
+
+
+def serve_dgo(args) -> None:
+    """Serve DGO requests through the serving subsystem.
+
+    Open loop (``--rps``/``--duration``): requests arrive on a Poisson
+    clock independent of service progress (arrival times never wait on
+    dispatches — the open-loop discipline the distributed-GA serving
+    literature measures under); the scheduler serves signature buckets
+    whenever work is queued.  Closed loop (``--waves``): submit
+    ``restarts * waves`` requests up front and drain.
+    """
+    import numpy as np
+
+    from repro.core.solver import SolveRequest
+
+    if args.rps is not None and args.rps <= 0:
+        raise SystemExit(f"--rps must be > 0, got {args.rps}")
+    if args.rps is not None and args.duration <= 0:
+        raise SystemExit(f"--duration must be > 0, got {args.duration}")
+    problems = _parse_problem_specs(args)
+    sched = _build_scheduler(args, problems)
+
+    rng = np.random.default_rng(args.seed)
+    best = float("inf")
+    submitted = 0
+    handles = []
+
+    def submit_next(arrived_at: float | None = None):
+        nonlocal submitted
+        prob = problems[submitted % len(problems)]
+        h = sched.submit(SolveRequest(
+            prob, seed=args.seed + submitted, max_iters=args.max_iters))
+        if arrived_at is not None:
+            # open-loop discipline: latency counts from the simulated
+            # ARRIVAL, not from when the loop got around to submitting —
+            # arrivals during a blocking dispatch must still pay their
+            # queueing delay (no coordinated omission)
+            h.submitted_at = arrived_at
+        handles.append(h)
+        submitted += 1
+
+    t_start = time.perf_counter()
+    if args.rps is not None:
+        t_end = t_start + args.duration
+        next_arrival = t_start
+        while True:
+            now = time.perf_counter()
+            while next_arrival <= now and next_arrival < t_end:
+                submit_next(arrived_at=next_arrival)
+                next_arrival += rng.exponential(1.0 / args.rps)
+            if len(sched.queue):
+                sched.run_wave()
+            elif now >= t_end:
+                break
+            else:
+                time.sleep(min(0.002, max(next_arrival - now, 0.0)))
+        sched.drain()
+    else:
+        for _ in range(args.restarts * args.waves):
+            submit_next()
+        sched.drain()
+    wall_s = time.perf_counter() - t_start
+
+    for h in handles:
+        if h.done() and h.error is None:
+            best = min(best, float(h.result().best_f))
+    _report(sched, problems, best, wall_s)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=list(REGISTRY))
     ap.add_argument("--dgo", action="store_true",
-                    help="serve batched DGO optimization requests instead "
-                         "of LM decode")
+                    help="serve DGO optimization requests (via the "
+                         "repro.serving scheduler) instead of LM decode")
     ap.add_argument("--problem", default="rastrigin",
                     help="objective registry name (see "
                          "repro.core.objectives.names()); unknown names "
@@ -100,9 +211,22 @@ def main():
                     help="variable count for dimensioned objectives "
                          "(quadratic/rastrigin/ackley/griewank); omit for "
                          "fixed-dimensional ones (shekel, xor, ...)")
+    ap.add_argument("--problems", default=None,
+                    help="mixed workload as comma-separated name[:n_vars] "
+                         "specs, e.g. rastrigin:2,shekel,ackley:5 "
+                         "(overrides --problem/--n-vars)")
+    ap.add_argument("--rps", type=float, default=None,
+                    help="open-loop mode: mean Poisson arrival rate "
+                         "(requests/s); requires --duration")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="open-loop mode: seconds of simulated arrivals")
     ap.add_argument("--restarts", type=int, default=8,
-                    help="DGO requests per wave")
+                    help="scheduler wave width (requests per dispatch; "
+                         "buckets are padded to it with inactive slots)")
     ap.add_argument("--max-iters", type=int, default=64)
+    ap.add_argument("--max-bits", type=int, default=None,
+                    help="fold a resolution schedule up to this many bits "
+                         "into every dispatch (None = fixed resolution)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

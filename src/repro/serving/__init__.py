@@ -1,0 +1,45 @@
+"""Optimization serving: queue -> signature buckets -> batched engine.
+
+The paper's throughput story (128 PEs amortizing a population step to
+near-constant time) becomes a serving subsystem here: callers submit
+heterogeneous :class:`~repro.core.solver.SolveRequest`s to a
+:class:`RequestQueue` and get future-like :class:`RequestHandle`s back; a
+:class:`Scheduler` pulls same-engine-signature buckets off the queue
+(continuous batching keyed by the compile-cache signature), pads each
+bucket to its wave width with inactive slots, and dispatches it through
+:func:`repro.core.solver.solve_many` — one compiled on-device while_loop
+per wave, per-request results bitwise identical to individual solves.
+
+Quickstart::
+
+    from repro.core.solver import SolveRequest
+    from repro.serving import Scheduler
+
+    sched = Scheduler(wave_size=8)
+    handles = [sched.submit(SolveRequest("rastrigin", seed=i,
+                                         max_iters=64))
+               for i in range(20)]
+    sched.drain()
+    best = [h.result().best_f for h in handles]
+    print(sched.metrics())          # p50/p95 latency, runs/s, cache stats
+
+Failed dispatches (real errors or an injected
+``runtime.failure.FailureInjector`` failure) requeue their requests with
+retry accounting; ``runtime.straggler.StragglerPolicy`` can feed the
+scheduler's wave-size choice.  ``launch/serve.py --dgo`` is a thin CLI
+over this package (open-loop arrival simulation), and
+``benchmarks/bench_serving.py`` measures bucketed-vs-per-request
+throughput.
+"""
+from repro.serving.metrics import ServingMetrics, percentile
+from repro.serving.queue import RequestHandle, RequestQueue
+from repro.serving.scheduler import Scheduler, warmup
+
+__all__ = [
+    "RequestHandle",
+    "RequestQueue",
+    "Scheduler",
+    "ServingMetrics",
+    "percentile",
+    "warmup",
+]

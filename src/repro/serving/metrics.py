@@ -1,0 +1,105 @@
+"""Serving observability: latency percentiles, wave/bucket counters, and
+the compile-cache snapshot — one ``snapshot()`` dict the CLI prints and
+tests assert on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+# latency percentiles are computed over a bounded window of the most
+# recent completions — a long-lived scheduler must not grow (or sort)
+# an unbounded history on every metrics poll
+LATENCY_WINDOW = 4096
+
+
+def percentile(values, q: float) -> float:
+    """Linear-interpolated percentile (``q`` in [0, 100]) of a sequence.
+
+    Tiny and dependency-free so the metrics path never imports numpy/jax
+    (handles are completed on the dispatch thread; keep it cheap).
+    """
+    xs = sorted(values)
+    if not xs:
+        raise ValueError("percentile of an empty sequence")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q must be in [0, 100], got {q}")
+    pos = (len(xs) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Counters + latency samples for one scheduler's lifetime."""
+
+    completed: int = 0
+    failed: int = 0
+    requeued: int = 0
+    waves: int = 0
+    warmup_waves: int = 0
+    failed_waves: int = 0
+    slots: int = 0          # total wave slots dispatched (active + padded)
+    padded_slots: int = 0   # inactive padding slots
+    busy_s: float = 0.0     # wall seconds inside dispatches
+
+    def __post_init__(self):
+        self._latencies: deque[float] = deque(maxlen=LATENCY_WINDOW)
+
+    def record_wave(self, n_active: int, width: int, elapsed_s: float):
+        self.waves += 1
+        self.slots += width
+        self.padded_slots += width - n_active
+        self.busy_s += elapsed_s
+
+    def record_failed_wave(self, elapsed_s: float):
+        self.failed_waves += 1
+        self.busy_s += elapsed_s
+
+    def record_completion(self, latency_s: float):
+        self.completed += 1
+        self._latencies.append(latency_s)
+
+    def record_requeue(self):
+        self.requeued += 1
+
+    def record_failure(self):
+        self.failed += 1
+
+    def record_warmup(self):
+        self.warmup_waves += 1
+
+    def snapshot(self) -> dict:
+        """Everything a serving endpoint reports: request/wave counters,
+        bucket fill, latency percentiles, throughput over busy time, and
+        the compile-cache subsystem snapshot (``core.cache.snapshot()``)."""
+        from repro.core import cache
+
+        out = {
+            "completed": self.completed,
+            "failed": self.failed,
+            "requeued": self.requeued,
+            "waves": self.waves,
+            "failed_waves": self.failed_waves,
+            "warmup_waves": self.warmup_waves,
+            "slots": self.slots,
+            "padded_slots": self.padded_slots,
+            "fill_fraction": ((self.slots - self.padded_slots) / self.slots
+                              if self.slots else None),
+            "busy_s": self.busy_s,
+            "runs_per_s": (self.completed / self.busy_s
+                           if self.busy_s > 0 else None),
+            # percentiles over the LATENCY_WINDOW most recent completions
+            "latency_p50_ms": None,
+            "latency_p95_ms": None,
+            "cache": cache.snapshot(),
+        }
+        # snapshot the deque first: a monitoring thread may poll while
+        # the dispatch thread appends completions
+        latencies = list(self._latencies)
+        if latencies:
+            out["latency_p50_ms"] = 1e3 * percentile(latencies, 50)
+            out["latency_p95_ms"] = 1e3 * percentile(latencies, 95)
+        return out

@@ -1,0 +1,151 @@
+"""Request queue + future-like handles for the serving subsystem.
+
+The queue is priority-ordered (higher ``SolveRequest.priority`` first,
+FIFO within a priority class) and policy-free: it knows nothing about
+engines or buckets.  The scheduler supplies the signature function to
+:meth:`RequestQueue.pop_bucket`, which implements the continuous-batching
+pop — take up to ``limit`` queued requests sharing the FRONT request's
+engine signature, skipping (and keeping) everything else.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Callable
+
+from repro.core.solver import SolveRequest, SolveResult
+
+
+class RequestHandle:
+    """Future-like handle for one submitted request.
+
+    ``result()`` blocks until the scheduler completes or permanently
+    fails the request (re-raising the failure), so producers on other
+    threads can submit-and-wait.  ``retries`` counts requeues after
+    failed dispatches (the scheduler's retry accounting lives here, on
+    the handle, so it survives requeue round-trips).
+    """
+
+    _UNSET = object()
+
+    def __init__(self, request: SolveRequest, seq: int):
+        self.request = request
+        self.seq = seq
+        self.submitted_at = time.perf_counter()
+        self.completed_at: float | None = None
+        self.retries = 0
+        self.signature = None        # lazily stamped by the scheduler
+        self.error: BaseException | None = None
+        self._result = self._UNSET
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> SolveResult:
+        """The request's SolveResult; blocks until available.  Raises the
+        dispatch error if the request permanently failed, TimeoutError if
+        ``timeout`` elapses first."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.seq} not done")
+        if self.error is not None:
+            raise self.error
+        return self._result
+
+    @property
+    def latency_s(self) -> float | None:
+        """Submit-to-completion wall seconds (None while in flight)."""
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    def _complete(self, result: SolveResult) -> None:
+        self._result = result
+        self.completed_at = time.perf_counter()
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self.error = error
+        self.completed_at = time.perf_counter()
+        self._event.set()
+
+    def __repr__(self):
+        state = ("failed" if self.error is not None
+                 else "done" if self.done() else "pending")
+        name = getattr(self.request.problem, "name", self.request.problem)
+        return (f"RequestHandle(seq={self.seq}, problem={name!r}, "
+                f"{state}, retries={self.retries})")
+
+
+class RequestQueue:
+    """Thread-safe priority queue of :class:`RequestHandle`s."""
+
+    def __init__(self):
+        self._heap: list[tuple[int, int, RequestHandle]] = []
+        self._lock = threading.Lock()
+        self._seq = itertools.count()
+
+    def submit(self, request, **kwargs) -> RequestHandle:
+        """Enqueue a request; returns its handle.
+
+        ``request`` is a :class:`SolveRequest` or anything its
+        ``problem`` field accepts (a Problem / Objective / registry name
+        — ``kwargs`` then become the remaining SolveRequest fields).
+        The problem is coerced and validated HERE, at the submission
+        boundary, not deep inside a dispatch.
+        """
+        if not isinstance(request, SolveRequest):
+            request = SolveRequest(problem=request, **kwargs)
+        elif kwargs:
+            raise TypeError("kwargs only apply when submitting a bare "
+                            "problem, not a SolveRequest")
+        handle = RequestHandle(request.resolve(), next(self._seq))
+        with self._lock:
+            heapq.heappush(self._heap,
+                           (-request.priority, handle.seq, handle))
+        return handle
+
+    def requeue(self, handle: RequestHandle) -> None:
+        """Put a handle back after a failed dispatch.  The original
+        sequence number is kept, so a retried request resumes its place
+        within its priority class instead of going to the back."""
+        with self._lock:
+            heapq.heappush(self._heap,
+                           (-handle.request.priority, handle.seq, handle))
+
+    def pop_bucket(self, limit: int,
+                   key: Callable[[SolveRequest], object] | None = None
+                   ) -> list[RequestHandle]:
+        """Pop up to ``limit`` handles sharing the front handle's engine
+        signature (continuous batching).  ``key`` maps a SolveRequest to
+        its signature and is memoized on the handle; ``key=None`` ignores
+        signatures and pops strictly by priority order.  Handles with
+        other signatures are left queued, order preserved.
+        """
+        if limit < 1:
+            raise ValueError(f"limit must be >= 1, got {limit}")
+        picked: list[RequestHandle] = []
+        skipped: list[tuple[int, int, RequestHandle]] = []
+        with self._lock:
+            sig = None
+            while self._heap and len(picked) < limit:
+                entry = heapq.heappop(self._heap)
+                handle = entry[2]
+                if key is not None and handle.signature is None:
+                    handle.signature = key(handle.request)
+                if not picked:
+                    sig = handle.signature
+                    picked.append(handle)
+                elif key is None or handle.signature == sig:
+                    picked.append(handle)
+                else:
+                    skipped.append(entry)
+            for entry in skipped:
+                heapq.heappush(self._heap, entry)
+        return picked
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heap)

@@ -1,0 +1,226 @@
+"""The serving scheduler: signature-bucketed continuous batching over the
+batched DGO engine.
+
+One :meth:`Scheduler.run_wave` is the unit of work: pop up to
+``wave_size`` queued requests sharing one engine-cache signature
+(:func:`repro.core.solver.engine_signature` — problem spec + encoding +
+resolution schedule + mesh geometry), pad the bucket to the wave width
+with inactive slots, and dispatch it through
+:func:`repro.core.solver.solve_many` as ONE compiled on-device while_loop.
+Per-request results are bitwise identical to individual solves (the
+engine's per-slot independence), so batching is purely a throughput
+decision.
+
+Failure handling is part of the loop, not bench-only code: a dispatch
+that raises — a real error or an injected
+``runtime.failure.FailureInjector`` failure — requeues its requests with
+retry accounting on the handle; a request out of retries fails its handle
+with the error.  A ``runtime.straggler.StragglerPolicy`` can feed the
+wave-size choice: recent dispatch times are treated as virtual lanes, and
+when some straggle past the policy's factor the next waves shrink
+(smaller dispatches under contention) until the cooldown expires.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.solver import (
+    SolveRequest, engine_signature, solve_many,
+)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.queue import RequestHandle, RequestQueue
+
+
+def warmup(problems: Iterable, *, wave_size: int = 8, mesh=None,
+           pop_axes: Sequence[str] = ("data",), virtual_block: int = 256,
+           max_bits: int | None = None, bits_step: int = 2,
+           max_iters: int | None = None) -> int:
+    """One throwaway full-width dispatch per distinct engine signature.
+
+    The shared warm-up helper (CLI, scheduler and benches all use it —
+    it replaces the duplicated warm-up ``solve()`` the old serve loop
+    carried): after it returns, steady-state waves of the same problems /
+    ``max_iters`` / ``wave_size`` hit the compile cache instead of paying
+    XLA compilation inside a latency measurement.  Returns the number of
+    engines warmed.
+    """
+    seen: dict[tuple, SolveRequest] = {}
+    for p in problems:
+        req = (p if isinstance(p, SolveRequest)
+               else SolveRequest(problem=p, max_iters=max_iters)).resolve()
+        sig = engine_signature(req.problem, mesh=mesh, pop_axes=pop_axes,
+                               virtual_block=virtual_block,
+                               max_bits=max_bits, bits_step=bits_step)
+        seen.setdefault(sig, req)
+    for req in seen.values():
+        solve_many([req], mesh=mesh, pop_axes=pop_axes,
+                   virtual_block=virtual_block, max_bits=max_bits,
+                   bits_step=bits_step, pad_to=wave_size)
+    return len(seen)
+
+
+class Scheduler:
+    """Pulls signature buckets off a :class:`RequestQueue` and serves
+    them through the batched engine.
+
+    Parameters: ``wave_size`` — the restart width buckets are padded to
+    (the compiled engine's R); ``mesh``/``pop_axes``/``virtual_block`` —
+    the dispatch geometry (default: all local devices on ``("data",)``);
+    ``max_bits``/``bits_step`` — optional folded resolution schedule
+    applied to every request; ``max_retries`` — dispatch retries per
+    request before its handle fails; ``injector`` — optional
+    ``FailureInjector`` polled once per dispatch; ``straggler`` —
+    optional ``StragglerPolicy`` fed with recent dispatch times.
+    """
+
+    def __init__(self, queue: RequestQueue | None = None, *,
+                 wave_size: int = 8, mesh=None,
+                 pop_axes: Sequence[str] = ("data",),
+                 virtual_block: int = 256, max_bits: int | None = None,
+                 bits_step: int = 2, max_retries: int = 2,
+                 injector=None, straggler=None):
+        if wave_size < 1:
+            raise ValueError(f"wave_size must be >= 1, got {wave_size}")
+        self.queue = queue if queue is not None else RequestQueue()
+        self.wave_size = wave_size
+        self.mesh = mesh
+        self.pop_axes = tuple(pop_axes)
+        self.virtual_block = virtual_block
+        self.max_bits = max_bits
+        self.bits_step = bits_step
+        self.max_retries = max_retries
+        self.injector = injector
+        self.straggler = straggler
+        self.metrics_ = ServingMetrics()
+        self._dispatches = 0
+        self._recent = deque(
+            maxlen=straggler.n_shards if straggler is not None else 1)
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, request, **kwargs) -> RequestHandle:
+        """Enqueue a request (see :meth:`RequestQueue.submit`)."""
+        return self.queue.submit(request, **kwargs)
+
+    def signature(self, request: SolveRequest) -> tuple:
+        """The engine-cache bucket key of ``request`` under this
+        scheduler's dispatch configuration."""
+        return engine_signature(
+            request.problem, mesh=self.mesh, pop_axes=self.pop_axes,
+            virtual_block=self.virtual_block, max_bits=self.max_bits,
+            bits_step=self.bits_step)
+
+    # -- wave sizing -------------------------------------------------------
+
+    def effective_wave_size(self) -> int:
+        """The next wave's width: ``wave_size`` scaled by the straggler
+        policy's live-lane fraction (recent dispatch times past
+        ``factor`` x median mask their lanes for ``cooldown`` rounds —
+        under contention the scheduler dispatches smaller waves).
+
+        Widths snap to halvings of ``wave_size`` (W, W/2, W/4, ..., 1):
+        each distinct width is its own compiled engine per signature, so
+        a free-form shrink would answer one slow dispatch with a chain of
+        blocking recompiles as the cooldown decays — halving bounds the
+        compiled widths to log2(W) per signature."""
+        if self.straggler is None:
+            return self.wave_size
+        target = max(1, int(round(
+            self.wave_size * self.straggler.quorum_fraction)))
+        width = self.wave_size
+        while width > target:
+            width = max(1, width // 2)
+        return width
+
+    def _note_dispatch_time(self, elapsed_s: float) -> None:
+        if self.straggler is None:
+            return
+        self._recent.append(elapsed_s)
+        if len(self._recent) == self._recent.maxlen:
+            self.straggler.update(np.asarray(self._recent, np.float64))
+
+    # -- the serving loop --------------------------------------------------
+
+    def warmup(self, problems: Iterable, max_iters: int | None = None) -> int:
+        """Warm the compile cache for ``problems`` at this scheduler's
+        configuration (shared helper, see :func:`warmup`)."""
+        n = warmup(problems, wave_size=self.wave_size, mesh=self.mesh,
+                   pop_axes=self.pop_axes, virtual_block=self.virtual_block,
+                   max_bits=self.max_bits, bits_step=self.bits_step,
+                   max_iters=max_iters)
+        for _ in range(n):
+            self.metrics_.record_warmup()
+        return n
+
+    def run_wave(self) -> int:
+        """Serve one signature bucket; returns the number of requests
+        completed (0 when the queue is empty or the dispatch failed and
+        was requeued)."""
+        width = self.effective_wave_size()
+        bucket = self.queue.pop_bucket(width, key=self.signature)
+        if not bucket:
+            return 0
+        self._dispatches += 1
+        t0 = time.perf_counter()
+        try:
+            if self.injector is not None:
+                self.injector.maybe_fail(self._dispatches)
+            results = solve_many(
+                [h.request for h in bucket], mesh=self.mesh,
+                pop_axes=self.pop_axes, virtual_block=self.virtual_block,
+                max_bits=self.max_bits, bits_step=self.bits_step,
+                pad_to=width)
+        except Exception as err:            # noqa: BLE001 — the serving
+            # loop survives any dispatch failure by requeueing its bucket
+            self.metrics_.record_failed_wave(time.perf_counter() - t0)
+            self._requeue_failed(bucket, err)
+            return 0
+        elapsed = time.perf_counter() - t0
+        for handle, result in zip(bucket, results):
+            handle._complete(result)
+            self.metrics_.record_completion(handle.latency_s)
+        self.metrics_.record_wave(len(bucket), width, elapsed)
+        self._note_dispatch_time(elapsed)
+        return len(bucket)
+
+    def drain(self) -> int:
+        """Serve until the queue is empty (retries included); returns the
+        number of requests completed."""
+        done = 0
+        while len(self.queue):
+            done += self.run_wave()
+        return done
+
+    def _requeue_failed(self, bucket: list[RequestHandle],
+                        err: BaseException) -> None:
+        """Retry accounting: every request of a failed dispatch goes back
+        on the queue until it runs out of retries, then its handle fails
+        with the dispatch error."""
+        for handle in bucket:
+            handle.retries += 1
+            if handle.retries > self.max_retries:
+                handle._fail(err)
+                self.metrics_.record_failure()
+            else:
+                self.queue.requeue(handle)
+                self.metrics_.record_requeue()
+
+    # -- observability -----------------------------------------------------
+
+    def metrics(self) -> dict:
+        """The serving metrics snapshot (latency percentiles, throughput,
+        bucket fill, cache stats) plus scheduler state."""
+        out = self.metrics_.snapshot()
+        out["wave_size"] = self.wave_size
+        out["effective_wave_size"] = self.effective_wave_size()
+        out["pending"] = len(self.queue)
+        if self.straggler is not None:
+            out["straggler_quorum_fraction"] = \
+                self.straggler.quorum_fraction
+        if self.injector is not None:
+            out["injected_failures"] = self.injector.injected
+        return out

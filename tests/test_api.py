@@ -13,9 +13,12 @@ PUBLIC_API = [
     "Fused",
     "Problem",
     "Sequential",
+    "SolveRequest",
     "SolveResult",
     "Strategy",
+    "engine_signature",
     "solve",
+    "solve_many",
     "strategy_names",
     # shared specs / subsystems
     "DGOConfig",
@@ -74,3 +77,45 @@ def test_objective_registry_snapshot():
     assert core.objectives.names() == (
         "ackley", "becker_lago", "griewank", "quadratic", "rastrigin",
         "remote_sensing", "sample2d", "shekel", "xor")
+
+
+# ---------------------------------------------------------------------------
+# SolveResult.extras: the per-strategy key sets are a documented contract
+# (SolveResult docstring) — drift must fail here, not in a dashboard
+# ---------------------------------------------------------------------------
+
+EXTRAS_CONTRACT = {
+    "sequential": {"bits", "evaluations", "raw_trace"},
+    "fused": {"bits", "evaluations"},
+    "clustered": {"bits", "evaluations", "cluster_values", "winner"},
+    "distributed": {"bits", "bits_resolution", "history", "schedule"},
+    "batched": {"bits", "values", "restart_iterations", "trace", "best",
+                "schedule"},
+}
+
+
+def test_solveresult_extras_contract_per_strategy():
+    import jax.numpy as jnp
+    import numpy as np
+
+    prob = core.Problem.get("quadratic", n=2)
+    x0 = jnp.asarray([4.0, -3.0])
+    strategies = {
+        "sequential": (core.Sequential(max_bits=10), np.asarray(x0)),
+        "fused": (core.Fused(max_bits=10), x0),
+        "clustered": (core.Clustered(n_clusters=2, max_bits=10),
+                      jnp.stack([x0, x0 + 0.5])),
+        "distributed": (core.Distributed(), x0),
+        "batched": (core.Batched(), jnp.stack([x0, x0 + 0.5])),
+    }
+    assert set(strategies) == set(EXTRAS_CONTRACT) == set(
+        core.strategy_names())
+    for name, (strat, start) in strategies.items():
+        res = core.solve(prob, strat, x0=start, max_iters=8)
+        assert set(res.extras) == EXTRAS_CONTRACT[name], name
+
+
+def test_solve_many_extras_contract():
+    req = core.SolveRequest("quadratic", seed=0, max_iters=8)
+    (res,) = core.solve_many([req], pad_to=2)
+    assert set(res.extras) == {"bits", "schedule", "wave_slot", "wave_size"}

@@ -161,6 +161,44 @@ def test_solve_string_front_door_and_errors():
         solve("quadratic", strategy=42)
 
 
+def test_random_x0_single_and_batched():
+    """Problem.random_x0: (n_vars,) draws and the batched (B, n_vars)
+    path the serving layer uses, all inside the search box and
+    deterministic per key."""
+    import jax
+
+    prob = Problem.get("rastrigin", n=3)
+    enc = prob.encoding
+    key = jax.random.PRNGKey(7)
+    single = prob.random_x0(key)
+    assert single.shape == (3,)
+    batch = prob.random_x0(key, batch=5)
+    assert batch.shape == (5, 3)
+    for x in (single, batch):
+        assert bool(jnp.all(x >= enc.lo)) and bool(jnp.all(x <= enc.hi))
+    assert np.array_equal(np.asarray(batch),
+                          np.asarray(prob.random_x0(key, batch=5)))
+    # the serving contract: a request's seed-derived start is the
+    # batch=1 draw, not the unbatched one (shape changes the draw)
+    assert batch[0].shape == single.shape
+
+
+def test_as_problem_and_as_strategy_error_messages():
+    """The coercion front doors name what they got AND what they accept —
+    these messages are the API's first line of support."""
+    from repro.core.solver import as_problem
+    with pytest.raises(TypeError, match=r"cannot interpret int as a "
+                                        r"Problem.*registry name"):
+        as_problem(42)
+    with pytest.raises(ValueError, match="unknown objective.*valid names"):
+        as_problem("warp-drive")
+    with pytest.raises(TypeError, match=r"cannot interpret float as a "
+                                        r"Strategy.*string key"):
+        as_strategy(1.5)
+    with pytest.raises(ValueError, match="unknown strategy.*registered"):
+        as_strategy("warp-drive")
+
+
 def test_multi_start_strategies_validate_x0_shape():
     prob = Problem.get("quadratic", n=2)
     single = jnp.asarray([4.0, -3.0])
@@ -271,18 +309,49 @@ def test_compile_cache_counts_hits_misses_and_evicts():
     assert c.get(("a",), build("a")) == "a"
     assert c.get(("a",), build("a2")) == "a"       # hit: no rebuild
     assert c.stats() == {"hits": 1, "misses": 1, "uncached": 0,
-                         "built": 1, "size": 1}
+                         "built": 1, "evictions": 0, "size": 1}
     # unhashable key: uncached build, counted
     assert c.get(["unhashable"], build("u")) == "u"
     assert c.uncached == 1 and c.built == 2
-    # LRU eviction at maxsize=2
+    # LRU eviction at maxsize=2, counted in stats
     c.get(("b",), build("b"))
     c.get(("c",), build("c"))                       # evicts ("a",)
-    c.get(("a",), build("a3"))                      # rebuilt
+    assert c.evictions == 1
+    c.get(("a",), build("a3"))                      # rebuilt, evicts ("b",)
     assert builds == ["a", "u", "b", "c", "a3"]
+    assert c.stats()["evictions"] == 2
     c.clear()
     assert c.stats() == {"hits": 0, "misses": 0, "uncached": 0,
-                         "built": 0, "size": 0}
+                         "built": 0, "evictions": 0, "size": 0}
+
+
+def test_cache_snapshot_for_serving_metrics():
+    """The observability unit the serving metrics endpoint embeds:
+    per-cache identity + counters, plus summed totals."""
+    c = cache.CompileCache("snap-test", maxsize=1)
+    c.get(("a",), lambda: "a")
+    c.get(("b",), lambda: "b")                     # evicts ("a",)
+    snap = c.snapshot()
+    assert snap["name"] == "snap-test" and snap["maxsize"] == 1
+    assert snap["evictions"] == 1 and snap["built"] == 2
+
+    cache.get_cache("dgo.engine")                  # ensure one registered
+    module_snap = cache.snapshot()
+    assert set(module_snap) == {"caches", "totals"}
+    assert "dgo.engine" in module_snap["caches"]
+    assert module_snap["caches"]["dgo.engine"]["name"] == "dgo.engine"
+    assert "evictions" in module_snap["totals"]
+
+
+def test_totals_suffix_filters_memo_tables():
+    """totals(suffix='.engine') counts compiled-engine caches only —
+    Problem memo lookups must not inflate 'engines built' reports."""
+    cache.clear()
+    Problem.get("rastrigin", n=2)
+    Problem.get("rastrigin", n=2)                  # memo hit
+    eng = cache.totals(suffix=".engine")
+    assert eng["built"] == 0                       # no engine compiled
+    assert cache.totals()["hits"] >= 1             # the memo hit exists
 
 
 def test_engine_cache_reused_across_solves():
