@@ -1,0 +1,169 @@
+"""Model-zoo tuning benchmark: a wave of subspace-DGO tuning runs through
+the serving scheduler vs one dispatch per run.
+
+The zoo tuning family's claim is that subspace objectives are ordinary
+``solve()`` workloads: every request of one tuning spec (same arch, d,
+bits, alpha, batch, seq, seed) carries the same semantic signature, so a
+sweep of start points buckets into ONE compiled engine and rides a single
+on-device while_loop — the LM loss evaluations amortize across the wave
+exactly like the toy objectives in ``bench_serving``.  This bench
+measures that on a real (CI-sized) zoo model:
+
+* ``sequential`` — each tuning run dispatched alone
+  (``solve(strategy=Batched(restarts=1))``), the baseline a per-model
+  tuning script would run;
+* ``wave`` — the same runs drained through ``serving.Scheduler``
+  (signature-bucketed, one ``solve_many`` dispatch), results asserted
+  IDENTICAL per run.
+
+``wave_over_sequential`` (>1 = batching wins) is the CI-gated ratio
+(``benchmarks/check_regression.py``).  Emits ``BENCH_subspace.json``:
+
+  PYTHONPATH=src python benchmarks/bench_subspace.py [--fast]
+
+Run standalone it forces an 8-virtual-device CPU mesh (the SNIPPETS
+idiom); under ``benchmarks.run`` it uses whatever devices exist.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__" and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import time
+
+import jax
+import numpy as np
+
+WAVE = 4            # tuning runs per wave (engine restart slots)
+N_RUNS = 4          # start-point sweep size (one full wave)
+MAX_ITERS = 6       # per-resolution cap
+MAX_BITS = 5        # folded schedule 3 -> 5 bits, escalated on device
+SPEC = dict(d=6, bits=3, batch=2, seq=16, layers=1)   # CI-sized model
+
+
+def _workload(prob, n_runs, max_iters):
+    """Tuning requests with PINNED start points (derived once, outside any
+    timed region) so neither path pays per-rep PRNG dispatches."""
+    from repro.core.solver import SolveRequest
+
+    return [SolveRequest(prob,
+                         x0=np.asarray(prob.random_x0(
+                             jax.random.PRNGKey(100 + i))),
+                         max_iters=max_iters)
+            for i in range(n_runs)]
+
+
+def _median_time(fn, reps: int) -> float:
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run(fast: bool = True):
+    from repro.compat import AxisType, make_mesh
+    from repro.core import cache
+    from repro.core.solver import Batched, Problem, solve
+    from repro.serving import Scheduler
+    from repro.serving.scheduler import warmup
+
+    reps = 3 if fast else 9
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
+    prob = Problem.get("subspace-lm:xlstm-125m", **SPEC)
+    requests = _workload(prob, N_RUNS, MAX_ITERS)
+    cache.clear()   # cold start so the emitted cache stats cover this run
+
+    # warm both paths' engines once so the timed reps are steady-state:
+    # the wave-width engine via the shared serving warm-up helper, the
+    # width-1 engine via one untimed baseline pass
+    warmup([prob], wave_size=WAVE, mesh=mesh, max_iters=MAX_ITERS,
+           max_bits=MAX_BITS)
+
+    def sequential():
+        return [solve(r.problem,
+                      Batched(restarts=1, mesh=mesh, max_bits=MAX_BITS),
+                      x0=np.asarray(r.x0)[None], max_iters=r.max_iters)
+                for r in requests]
+
+    ref = sequential()
+    t_sequential = _median_time(sequential, reps)
+
+    def wave():
+        sched = Scheduler(wave_size=WAVE, mesh=mesh, max_bits=MAX_BITS)
+        handles = [sched.submit(r) for r in requests]
+        sched.drain()
+        return sched, handles
+
+    sched, handles = wave()
+    t_wave = _median_time(lambda: wave(), reps)
+
+    # batched tuning is only interesting because answers are IDENTICAL:
+    # assert bitwise per-run parity against the sequential baseline
+    for r, h in zip(ref, handles):
+        out = h.result()
+        assert float(out.best_f) == float(r.best_f)
+        assert np.array_equal(np.asarray(out.best_x), np.asarray(r.best_x))
+        assert out.iterations == r.iterations
+        assert np.array_equal(np.asarray(out.trace), np.asarray(r.trace))
+        assert out.extras["problem_signature"] == prob.signature
+
+    m = sched.metrics()
+    thr_sequential = N_RUNS / t_sequential
+    thr_wave = N_RUNS / t_wave
+    cstats = cache.totals(suffix=".engine")   # engine compilations only
+    spec = ", ".join(f"{k}={v}" for k, v in SPEC.items())
+    rows = [
+        ("bench_subspace.n_runs", N_RUNS,
+         f"start-point sweep over subspace-lm:xlstm-125m ({spec}), wave "
+         f"width {WAVE}, {MAX_ITERS} iters/resolution, folded schedule "
+         f"to {MAX_BITS} bits"),
+        ("bench_subspace.sequential_wall_s", t_sequential,
+         "one dispatch per tuning run (Batched(restarts=1) per solve)"),
+        ("bench_subspace.sequential_runs_per_s", thr_sequential,
+         "throughput of per-run tuning dispatches"),
+        ("bench_subspace.wave_wall_s", t_wave,
+         "scheduler drain: the sweep signature-bucketed into one "
+         "compiled dispatch"),
+        ("bench_subspace.wave_runs_per_s", thr_wave,
+         "throughput of the serving scheduler on the same sweep"),
+        ("bench_subspace.wave_over_sequential",
+         thr_wave / thr_sequential,
+         "GATED ratio: batched-tuning win over per-run dispatch (same "
+         "results, asserted bitwise)"),
+        ("bench_subspace.bucket_fill_fraction", m["fill_fraction"],
+         "active slots / total slots across dispatched waves"),
+        ("bench_subspace.cache_engines_built", cstats["built"],
+         "distinct engine compilations paid for during this bench"),
+        ("bench_subspace.cache_evictions", cstats["evictions"],
+         "LRU evictions (should be 0 — big tuning engines churning)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    try:
+        from benchmarks.bench_speedup import write_json
+    except ImportError:       # invoked as a script, not a module
+        from bench_speedup import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="BENCH_subspace.json",
+                    help="path for the machine-readable artifact "
+                         "('' disables)")
+    args = ap.parse_args()
+    rows = run(fast=args.fast)
+    for name, val, note in rows:
+        print(f"{name},{val},{note}")
+    if args.json:
+        write_json(rows, args.json, bench="subspace")

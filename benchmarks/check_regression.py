@@ -50,6 +50,9 @@ GATED = {
         "bench_distributed.speedup_folded_vs_chained": "higher",
         "bench_distributed.batched_over_single": "lower",
     },
+    "subspace": {
+        "bench_subspace.wave_over_sequential": "higher",
+    },
     "serving": {
         "bench_serving.bucketed_over_per_request": "higher",
     },

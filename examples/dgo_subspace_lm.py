@@ -1,6 +1,7 @@
-"""Subspace DGO training of a small LM — the paper's technique applied at
-modern scale (DESIGN.md §3 scope 2): Gray-code population over a
-d-dimensional reparameterized subspace of the model's weights.
+"""Subspace DGO tuning of a zoo LM through the solve() front door: the
+model, config and data ride in the Problem (``subspace-lm:*`` objective
+registry family), and the paper's resolution schedule (4 -> 6 bits) is
+folded into the batched engine's single compiled dispatch via ``max_bits``.
 
   PYTHONPATH=src python examples/dgo_subspace_lm.py
 """
@@ -8,48 +9,22 @@ d-dimensional reparameterized subspace of the model's weights.
 import jax
 import jax.numpy as jnp
 
-from repro.configs import REGISTRY, reduced
-from repro.core.dgo import dgo_resolution_step
-from repro.core.encoding import Encoding, decode, encode
-from repro.core.subspace import apply_subspace, materialize_winner
-from repro.data import lm_synthetic_batch
-from repro.models import init_model, lm_loss
+from repro.core.solver import Batched, Problem, solve
 
-arch = reduced(REGISTRY["xlstm-125m"])
-params0 = init_model(arch, jax.random.PRNGKey(0))
-tokens, labels = lm_synthetic_batch(jax.random.PRNGKey(1), 4, 32,
-                                    arch.vocab_size)
-batch = {"tokens": tokens, "labels": labels}
-key = jax.random.PRNGKey(42)
+prob = Problem.get("subspace-lm:xlstm-125m", d=12, layers=2)
+res = solve(prob, Batched(restarts=1, max_bits=6), x0=jnp.zeros((1, 12)),
+            max_iters=6)
 
-D_SUB, ALPHA = 24, 3.0
-enc = Encoding(n_vars=D_SUB, bits=4, lo=-1.0, hi=1.0)
+print(f"schedule {res.extras['schedule']} (bits/var), "
+      f"{res.iterations} iterations, spec {res.extras['problem_signature']}")
+print("loss curve:", " -> ".join(f"{v:.4f}" for v in res.trace))
+print(f"final loss {float(res.best_f):.4f} "
+      f"(started {float(res.trace[0]):.4f})")
 
+winner = prob.materialize(res.best_x)     # winning z -> model parameters
+n_params = sum(x.size for x in jax.tree.leaves(winner))
+print(f"materialized winner: {n_params} parameters")
 
-def f(z):
-    return lm_loss(apply_subspace(params0, z, key, ALPHA), arch, batch,
-                   dtype=jnp.float32)
-
-
-f_batch = jax.vmap(f)
-bits = encode(jnp.zeros(D_SUB), enc)
-val = f(decode(bits, enc))
-print(f"initial loss {float(val):.4f} (population {enc.population}/iter)")
-from functools import partial
-for res_bits in (4, 6):
-    enc_r = enc.with_bits(res_bits)
-    if res_bits != enc.bits:
-        from repro.core.encoding import reencode
-        bits = reencode(bits, enc, enc_r)
-        val = f(decode(bits, enc_r))   # re-evaluate on the finer lattice
-    step = jax.jit(partial(dgo_resolution_step, f_batch, enc_r, 12))
-    state, trace = step(bits, val)
-    bits, val = state.parent_bits, state.parent_val
-    print(f"resolution {res_bits} bits: loss -> {float(val):.4f} "
-          f"({int(state.iters)} iterations)")
-
-winner = materialize_winner(params0, bits, enc.with_bits(6), key, ALPHA)
-final = lm_loss(winner, arch, batch, dtype=jnp.float32)
-start = f(decode(encode(jnp.zeros(D_SUB), enc), enc))
-print(f"final loss {float(final):.4f} (started {float(start):.4f})")
-assert float(final) <= float(start) + 1e-4
+assert float(res.best_f) <= float(res.trace[0]), "tuning must not regress"
+assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(winner)
+           if jnp.issubdtype(x.dtype, jnp.floating))

@@ -115,6 +115,25 @@ def _axis_prod(mesh: Mesh, axis_names: Sequence[str]) -> int:
     return n
 
 
+def _parent_vals(f: Callable[[jax.Array], jax.Array],
+                 xs: jax.Array) -> jax.Array:
+    """Evaluate lattice-snapped parents ``xs`` (R, n_vars) row by row
+    through ONE shared jitted ``(n_vars,) -> ()`` executable.
+
+    The batched engines' initial parent evaluation is the one objective
+    call whose batch width would otherwise follow the wave width R, and
+    XLA's fusion choices vary with batch width (batch-1 matvec paths), so
+    an in-engine ``f_batch(parents)`` at R=1 vs R=2 can drift by a ULP
+    for reduction-heavy objectives (the subspace-lm tuning family) —
+    breaking the serving contract that a wave slot is bitwise identical
+    to its per-request solve.  Evaluating every parent through the same
+    cached executable makes ``vals0`` width-invariant by construction;
+    the cost is R tiny dispatches once per wave, noise against the
+    iteration loop."""
+    ev = _PARENT_EVALS.get(("parent_eval", f), lambda: jax.jit(f))
+    return jnp.stack([ev(x) for x in xs]).astype(jnp.float32)
+
+
 class _ShardPlan(NamedTuple):
     """Static population-distribution geometry shared by every driver."""
 
@@ -572,6 +591,11 @@ def make_distributed_engine(f_batch: Callable[[jax.Array], jax.Array],
 # and hit/miss counters surface in BENCH_distributed.json
 _ENGINES = get_cache("distributed.engine")
 
+# the per-row initial-parent evaluators (_parent_vals) memoize separately:
+# they are not engine compilations, and the ".engine" suffix is how serving
+# reports/tests count engines built
+_PARENT_EVALS = get_cache("distributed.parent_eval")
+
 
 def _step_for(f, enc, mesh, pop_axes, virtual_block, inner, interpret,
               tile_p):
@@ -936,8 +960,13 @@ def make_distributed_engine_batched(
     wave, which is what lets the serving scheduler promise per-request
     results identical to individual solves.
 
+    The caller supplies ``vals0`` (R,) f32, the objective at each snapped
+    start point, evaluated OUTSIDE the engine through one shared per-row
+    executable (:func:`_parent_vals`) — in-engine evaluation would make
+    ``trace[0]`` depend on the compiled batch width.
+
     Fixed resolution (``res_bits`` None or a single entry): returns
-    ``engine(x0s (R, n_vars), quorum_mask, active, slot_iters) ->
+    ``engine(x0s (R, n_vars), vals0, quorum_mask, active, slot_iters) ->
     (bits (R,N), vals (R,), iters (R,), trace (R, max_iters+1))``.
     Restarts that stall (or hit their slot cap) stop mutating — their
     bits/val/trace freeze and their iteration counter stops — while the
@@ -948,8 +977,8 @@ def make_distributed_engine_batched(
     batch escalates in lockstep inside the same while_loop — when every
     active restart has stalled or hit its per-resolution slot cap (or the
     static per-resolution cap is hit), all restarts re-encode onto the
-    next lattice and resume.  Returns ``engine(x0s, quorum_mask, active,
-    slot_iters) -> (bits (R, n_max), vals (R,), best_vals (R,),
+    next lattice and resume.  Returns ``engine(x0s, vals0, quorum_mask,
+    active, slot_iters) -> (bits (R, n_max), vals (R,), best_vals (R,),
     best_bits (R, n_max), best_res (R,), iters (R,),
     trace (R, len(res_bits)*max_iters + 1))`` where ``best_*`` track each
     restart's best parent across resolutions and ``trace`` holds the raw
@@ -970,10 +999,10 @@ def make_distributed_engine_batched(
         t_max = n_res * max_iters + 1
         rows = jnp.arange(n_restarts)
 
-        def shard_schedule_engine(x0s, quorum_mask, active, slot_iters):
+        def shard_schedule_engine(x0s, vals0, quorum_mask, active,
+                                  slot_iters):
             r0 = jnp.int32(0)
             bits0 = tables.encode(x0s, r0)                   # (R, n_max)
-            vals0 = f_batch(tables.decode(bits0, r0)).astype(jnp.float32)
             one_step = prepare(quorum_mask)
             stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
 
@@ -1042,7 +1071,7 @@ def make_distributed_engine_batched(
         replicated = P()
         mapped = shard_map(
             shard_schedule_engine, mesh=mesh,
-            in_specs=(replicated,) * 4,
+            in_specs=(replicated,) * 5,
             out_specs=(replicated,) * 7,
             check_vma=False)
         return jax.jit(mapped)
@@ -1053,9 +1082,8 @@ def make_distributed_engine_batched(
 
     n_shards = plan.n_shards
 
-    def shard_engine(x0s, quorum_mask, active, slot_iters):
+    def shard_engine(x0s, vals0, quorum_mask, active, slot_iters):
         bits0 = encode(x0s, enc)                          # (R, N)
-        vals0 = f_batch(decode(bits0, enc)).astype(jnp.float32)
         one_step = prepare(quorum_mask)
         # same stall rule as the single-restart engine, per restart
         stall_limit = jnp.where(jnp.all(quorum_mask), 1, n_shards)
@@ -1093,7 +1121,7 @@ def make_distributed_engine_batched(
     replicated = P()
     mapped = shard_map(
         shard_engine, mesh=mesh,
-        in_specs=(replicated,) * 4,
+        in_specs=(replicated,) * 5,
         out_specs=(replicated,) * 4,
         check_vma=False)
     return jax.jit(mapped)
@@ -1161,23 +1189,28 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
             f"active/slot_iters must be ({n_restarts},), got "
             f"{active.shape}/{slot_iters.shape}")
     schedule = _resolve_res_bits(enc, res_bits)
+    # initial parent values, snapped to the starting lattice, via ONE
+    # shared per-row executable — width-invariant, so a wave slot's
+    # trace[0] is bitwise its per-request solve's (see _parent_vals)
+    enc0 = enc.with_bits(schedule[0])
+    vals0 = _parent_vals(f, decode(encode(x0s, enc0), enc0))
 
     if len(schedule) == 1:
-        engine = _batched_engine_for(f, enc.with_bits(schedule[0]), mesh,
+        engine = _batched_engine_for(f, enc0, mesh,
                                      n_restarts, pop_axes, max_iters,
                                      virtual_block)
-        bits, vals, iters, trace = engine(x0s, quorum_mask, active,
+        bits, vals, iters, trace = engine(x0s, vals0, quorum_mask, active,
                                           slot_iters)
         iters_h, trace_np = jax.device_get((iters, trace))
         return BatchedResult(bits=bits, values=vals, iterations=iters,
                              trace=trace_np[:, : int(iters_h.max()) + 1],
                              best=int(jnp.argmin(vals)))
 
-    engine = _batched_engine_for(f, enc.with_bits(schedule[0]), mesh,
+    engine = _batched_engine_for(f, enc0, mesh,
                                  n_restarts, pop_axes, max_iters,
                                  virtual_block, res_bits=schedule)
     (_, _, best_vals, best_bits, best_res, iters, trace) = engine(
-        x0s, quorum_mask, active, slot_iters)
+        x0s, vals0, quorum_mask, active, slot_iters)
     iters_h, trace_h, bits_h, res_h, vals_h, act_h = jax.device_get(
         (iters, trace, best_bits, best_res, best_vals, active))
 

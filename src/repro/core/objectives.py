@@ -29,8 +29,16 @@ class Objective:
     name: str
     fn: Callable[[jax.Array], jax.Array]     # (n_vars,) -> ()
     encoding: Encoding                       # search box + start resolution
-    f_opt: float                             # known global optimum value
-    tol: float                               # |f - f_opt| counted as success
+    f_opt: float | None                      # known global optimum value
+    tol: float | None                        # |f - f_opt| counted as success
+    # semantic identity: two Objectives with equal non-None signatures are
+    # interchangeable (same decoded objective values), so engine caches and
+    # serving buckets may key on the signature instead of the fn closure —
+    # the subspace-tuning family sets it to its (arch, d, bits, ...) spec
+    signature: tuple | None = None
+    # expensive stateful objectives (subspace tuning) map a search point
+    # back to their underlying state (winner model parameters)
+    materialize: Callable[[jax.Array], object] | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +143,33 @@ _REGISTRY: dict[str, tuple[Callable[..., Objective], bool]] = {
     "xor": (lambda: xor_objective(), _FIXED),
     "remote_sensing": (lambda **kw: remote_sensing_objective(**kw), _FIXED),
 }
+
+
+def _register_subspace_lm() -> None:
+    """Register the model-zoo tuning family: one ``subspace-lm:<arch>``
+    entry per zoo architecture (``configs.REGISTRY``), built over
+    ``configs.reduced`` CI-sized shapes with deterministic
+    ``data.lm_synthetic_batch`` batches.
+
+    ``get("subspace-lm:xlstm-125m", d=24)`` returns a d-dimensional
+    subspace-DGO tuning objective (``core.subspace.lm_tuning_objective``):
+    an EXPENSIVE stateful objective whose state (params0, batch, direction
+    key, alpha) is closed over — engines bake it in as compile-time
+    constants, so one compilation serves the whole tuning run.  The
+    factories are registered eagerly but build nothing until called;
+    imports stay inside so ``repro.core`` does not drag the model zoo in
+    at import time.
+    """
+    from repro.configs import ARCH_NAMES    # configs never imports core
+
+    from repro.core.subspace import lm_tuning_factory
+
+    for arch_name in ARCH_NAMES:
+        _REGISTRY[f"subspace-lm:{arch_name}"] = (
+            lm_tuning_factory(arch_name), _FIXED)
+
+
+_register_subspace_lm()
 
 
 def names() -> tuple[str, ...]:
@@ -256,9 +291,12 @@ def make_remote_sensing_data(key: jax.Array, n_per_class: int = 32
 
 def rs_unpack(w: jax.Array):
     i = 0
-    w1 = w[i:i + RS_IN * RS_HIDDEN].reshape(RS_IN, RS_HIDDEN); i += RS_IN * RS_HIDDEN
-    b1 = w[i:i + RS_HIDDEN]; i += RS_HIDDEN
-    w2 = w[i:i + RS_HIDDEN * RS_CLASSES].reshape(RS_HIDDEN, RS_CLASSES); i += RS_HIDDEN * RS_CLASSES
+    w1 = w[i:i + RS_IN * RS_HIDDEN].reshape(RS_IN, RS_HIDDEN)
+    i += RS_IN * RS_HIDDEN
+    b1 = w[i:i + RS_HIDDEN]
+    i += RS_HIDDEN
+    w2 = w[i:i + RS_HIDDEN * RS_CLASSES].reshape(RS_HIDDEN, RS_CLASSES)
+    i += RS_HIDDEN * RS_CLASSES
     b2 = w[i:i + RS_CLASSES]
     return w1, b1, w2, b2
 

@@ -133,6 +133,18 @@ class Problem:
     ``host_fn()`` what the sequential loop consumes.  ``f_opt``/``tol``
     (known optimum and success tolerance) ride along for tests and
     benchmarks, absorbing :class:`repro.core.objectives.Objective`.
+
+    Expensive stateful objectives (the ``subspace-lm:*`` zoo tuning
+    family) additionally carry
+
+    * ``signature`` — a hashable SEMANTIC identity: two Problems with
+      equal non-None signatures decode to the same objective values, so
+      :func:`engine_signature` keys on it instead of the ``fn`` closure
+      (independently-built Problems of one tuning spec share an engine
+      bucket and one compilation);
+    * ``materialize`` — maps a winning search point back to the
+      objective's underlying state (winner model parameters, via
+      ``core.subspace.materialize_winner``).
     """
 
     fn: Callable[[Any], Any]
@@ -141,6 +153,8 @@ class Problem:
     f_opt: float | None = None
     tol: float | None = None
     kind: str | None = None      # "jax" | "numpy" | None = auto-detect
+    signature: tuple | None = None
+    materialize: Callable[[Any], Any] | None = None
 
     def __post_init__(self):
         if self.kind is None:
@@ -155,7 +169,8 @@ class Problem:
     @classmethod
     def from_objective(cls, obj: Objective) -> "Problem":
         return cls(fn=obj.fn, encoding=obj.encoding, name=obj.name,
-                   f_opt=obj.f_opt, tol=obj.tol, kind="jax")
+                   f_opt=obj.f_opt, tol=obj.tol, kind="jax",
+                   signature=obj.signature, materialize=obj.materialize)
 
     @classmethod
     def get(cls, name: str, n: int | None = None, **kwargs) -> "Problem":
@@ -239,8 +254,18 @@ class SolveResult(NamedTuple):
     ``trace``) exist ONLY on ``batched`` — every other strategy reports
     its single winner; ``cluster_values``/``winner`` are the clustered
     analogue.  ``schedule`` appears wherever a resolution schedule can be
-    configured on the engine (the distributed family).  The tuple itself
-    is a pytree, so it can cross jit/pmap boundaries and be tree-mapped.
+    configured on the engine (the distributed family).
+
+    Subspace-family keys: a Problem carrying a semantic ``signature``
+    (the ``subspace-lm:*`` zoo tuning family) adds ``problem_signature``
+    — the ``("subspace-lm", arch, d, bits, alpha, batch, seq, seed,
+    n_layers)`` spec tuple — to EVERY strategy's extras and to ``solve_many``
+    results, so serving logs and checkpoints can name the tuning run
+    they came from; the winning parameters themselves come from
+    ``problem.materialize(res.best_x)``, not from extras.
+
+    The tuple itself is a pytree, so it can cross jit/pmap boundaries
+    and be tree-mapped.
     """
 
     best_x: jax.Array        # (n_vars,) best point found
@@ -584,7 +609,10 @@ def solve(problem, strategy="fused", *, seed: int | jax.Array = 0,
         key = jnp.asarray(seed)
     else:
         key = jax.random.PRNGKey(int(seed))
-    return strat._solve(prob, key=key, x0=x0, max_iters=max_iters)
+    res = strat._solve(prob, key=key, x0=x0, max_iters=max_iters)
+    if prob.signature is not None:      # subspace-family extras key
+        res.extras["problem_signature"] = prob.signature
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -637,17 +665,24 @@ def engine_signature(problem, *, mesh=None, pop_axes=("data",),
 
     Two requests with equal signatures share one compiled engine (the
     tuple is exactly the static part of ``core.cache``'s
-    ``distributed.engine`` key: objective callable, base encoding, mesh,
+    ``distributed.engine`` key: objective identity, base encoding, mesh,
     population axes, virtual block and resolution schedule — everything
     except the wave width and iteration caps, which the serving scheduler
     chooses).  The serving scheduler buckets queued requests by this
     value; :func:`solve_many` groups by it internally.
+
+    Objective identity is ``Problem.signature`` when set (the semantic
+    model/subspace spec the zoo tuning family carries — independently
+    built Problems of one tuning spec then land in ONE bucket), else the
+    ``jax_fn`` callable (name-built toy Problems are memoized per spec by
+    ``Problem.get``, so their callables are already shared).
     """
     prob = as_problem(problem)
     schedule = _resolution_schedule(prob.encoding, max_bits, bits_step)
     mesh = mesh if mesh is not None else _default_mesh()
     enc0 = prob.encoding.with_bits(schedule[0])
-    return ("batched", prob.jax_fn, enc0, mesh, tuple(pop_axes),
+    fid = prob.signature if prob.signature is not None else prob.jax_fn
+    return ("batched", fid, enc0, mesh, tuple(pop_axes),
             virtual_block, tuple(schedule))
 
 
@@ -764,4 +799,6 @@ def solve_many(requests, *, mesh=None, pop_axes=("data",),
             for slot, i in enumerate(wave):
                 results[i] = _slot_result(res, bits_h, slot, enc0,
                                           schedule, width)
+                if prob.signature is not None:
+                    results[i].extras["problem_signature"] = prob.signature
     return results

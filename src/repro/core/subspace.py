@@ -1,4 +1,4 @@
-"""Subspace DGO: the scaling adaptation that trains zoo models with DGO.
+"""Subspace DGO: the scaling adaptation that tunes zoo models with DGO.
 
 The paper's largest DGO problem is 688 variables; bit-encoding every weight
 of a modern LM is structurally impossible (2N-1 children, N = params x bits).
@@ -12,9 +12,22 @@ Gaussian directions (intrinsic-dimension reparameterization). Directions are
 regenerated from a folded PRNG key inside the evaluation — nothing of size
 (d x params) is ever materialized; peak extra memory is one parameter leaf.
 
-``make_dgo_train_step`` is the LM-scale analogue of a gradient
-``train_step``: population over the ``data`` mesh axis, model compute sharded
-over ``model`` — lowered/compiled by the dry-run like any other step.
+Two entry points:
+
+* :func:`lm_tuning_objective` packages a zoo model/config/data triple as a
+  first-class ``objectives.Objective`` — ``f(z)`` closes over (params0,
+  batch, direction key, alpha) so engines bake the objective state in as
+  compile-time constants and ONE compilation serves the whole tuning run.
+  Registered as ``objectives.get("subspace-lm:<arch>", d=...)``; tuning runs
+  then ride the standard ``solve()`` engines and get the folded on-device
+  resolution schedule (``population.schedule_tables``) like every other
+  strategy.
+* :func:`make_dgo_train_step` is the LM-scale analogue of a gradient
+  ``train_step`` for the production mesh (population over ``pop_axes``,
+  model compute sharded over ``model``) — lowered/compiled by the dry-run
+  like any other step.  Its child generation and decode ride the same
+  stacked :func:`~repro.core.population.schedule_tables` the engines use
+  (one XOR against the pattern table; no per-child Gray round-trip).
 """
 from __future__ import annotations
 
@@ -27,7 +40,7 @@ from jax.sharding import Mesh
 
 from repro.compat import axis_size
 from repro.core.encoding import Encoding, decode
-from repro.core.population import generate_children
+from repro.core.population import schedule_tables
 
 
 def apply_subspace(params0, z: jax.Array, key: jax.Array, alpha: float = 1.0):
@@ -55,9 +68,94 @@ def apply_subspace(params0, z: jax.Array, key: jax.Array, alpha: float = 1.0):
         delta, _ = jax.lax.scan(
             body, jnp.zeros(leaf.shape, jnp.float32),
             (jnp.arange(d), z.astype(jnp.float32)))
-        out.append((leaf.astype(jnp.float32) + scale * delta).astype(leaf.dtype))
+        out.append((leaf.astype(jnp.float32)
+                    + scale * delta).astype(leaf.dtype))
     return jax.tree.unflatten(treedef, out)
 
+
+# ---------------------------------------------------------------------------
+# the model-zoo tuning family: subspace DGO as a first-class Problem
+# ---------------------------------------------------------------------------
+
+def lm_tuning_objective(arch_name: str, *, d: int = 24, bits: int = 4,
+                        alpha: float = 3.0, batch: int = 2, seq: int = 16,
+                        seed: int = 0, layers: int | None = None):
+    """A d-dimensional subspace-DGO tuning objective over one zoo model.
+
+    Builds the (model, config, data) triple once — ``configs.reduced``
+    CI-sized shapes, ``models.init_model`` initial weights, a
+    deterministic ``data.lm_synthetic_batch`` batch — and returns an
+    ``objectives.Objective`` whose ``fn(z)`` is
+    ``lm_loss(apply_subspace(params0, z, key, alpha), ...)``.  All
+    objective state is closed over, so engines hoist it in as constants:
+    one compilation serves every request of the spec.
+
+    The Objective carries a semantic ``signature``
+    (``("subspace-lm", arch, d, bits, alpha, batch, seq, seed,
+    n_layers)``) so
+    ``engine_signature`` buckets tuning requests by SPEC, not by closure
+    identity, and a ``materialize`` callable mapping a winning z back to
+    concrete model parameters (via :func:`materialize_winner`).
+    """
+    import dataclasses
+
+    from repro.configs import REGISTRY, reduced
+    from repro.core.objectives import Objective
+    from repro.data import lm_synthetic_batch
+    from repro.models import init_model, lm_loss
+
+    arch = reduced(REGISTRY[arch_name])
+    if layers is not None:               # clamp below reduced()'s 4 for
+        arch = dataclasses.replace(      # test/bench-sized objectives
+            arch, n_layers=min(arch.n_layers, layers))
+    params0 = init_model(arch, jax.random.PRNGKey(seed))
+    tokens, labels = lm_synthetic_batch(jax.random.PRNGKey(seed + 1),
+                                        batch, seq, arch.vocab_size)
+    data = {"tokens": tokens, "labels": labels}
+    kf = jax.random.PRNGKey(seed + 2)
+    if arch.enc_dec:
+        data["frames"] = 0.02 * jax.random.normal(
+            kf, (batch, arch.n_frames, arch.d_model))
+    if arch.vision_tokens:
+        data["images"] = 0.02 * jax.random.normal(
+            kf, (batch, arch.vision_tokens, arch.d_frontend))
+    key = jax.random.PRNGKey(seed + 3)       # direction key
+
+    def fn(z):
+        return lm_loss(apply_subspace(params0, z, key, alpha), arch, data,
+                       dtype=jnp.float32)
+
+    def materialize(z):
+        return materialize_winner(params0, jnp.asarray(z, jnp.float32),
+                                  None, key, alpha)
+
+    return Objective(
+        name=f"subspace-lm:{arch_name}",
+        fn=fn,
+        encoding=Encoding(n_vars=d, bits=bits, lo=-1.0, hi=1.0),
+        f_opt=None, tol=None,
+        signature=("subspace-lm", arch_name, d, bits, float(alpha),
+                   batch, seq, seed, arch.n_layers),
+        materialize=materialize)
+
+
+def lm_tuning_factory(arch_name: str) -> Callable:
+    """The objective-registry factory for one arch (defaults are part of
+    the canonical spec — ``objectives.canonical_spec`` introspects them)."""
+
+    def factory(d: int = 24, bits: int = 4, alpha: float = 3.0,
+                batch: int = 2, seq: int = 16, seed: int = 0,
+                layers: int | None = None):
+        return lm_tuning_objective(arch_name, d=d, bits=bits, alpha=alpha,
+                                   batch=batch, seq=seq, seed=seed,
+                                   layers=layers)
+
+    return factory
+
+
+# ---------------------------------------------------------------------------
+# the production-mesh train step (dry-run lowering target)
+# ---------------------------------------------------------------------------
 
 def make_dgo_train_step(loss_fn: Callable,
                         enc: Encoding,
@@ -72,6 +170,12 @@ def make_dgo_train_step(loss_fn: Callable,
     evaluates ``ceil(P'/n_shards)`` children sequentially (virtual
     processing); P' = children_per_step or the full 2N-1.
 
+    Children and decode ride the stacked ``schedule_tables`` constants the
+    solve() engines share (child = parent XOR pattern row; exact-in-f32
+    decode matmul) — resolution *schedules* live in those engines, so this
+    step is single-resolution: drive a schedule by running a subspace
+    Problem through ``solve(..., strategy="batched", max_bits=...)``.
+
     step(params0, batch, parent_bits, parent_val, key)
       -> (new_bits, new_val, improved)
     """
@@ -80,6 +184,7 @@ def make_dgo_train_step(loss_fn: Callable,
         n_shards *= mesh.shape[a]
     pop = children_per_step or enc.population
     chunk = math.ceil(pop / n_shards)
+    tables = schedule_tables(enc.n_vars, (enc.bits,), enc.lo, enc.hi)
 
     def shard_fn(params0, batch, parent_bits, parent_val, key):
         shard = jnp.int32(0)
@@ -91,8 +196,8 @@ def make_dgo_train_step(loss_fn: Callable,
             best_val, best_id = carry
             cid = jnp.minimum(base + c, pop - 1)
             valid = (base + c) < pop
-            child = generate_children(parent_bits, cid[None])[0]
-            z = decode(child, enc)
+            child = tables.children(parent_bits, cid[None], 0)[0]
+            z = tables.decode(child, 0)
             params = apply_subspace(params0, z, key, alpha)
             val = jnp.where(valid, loss_fn(params, batch), jnp.inf)
             better = val < best_val
@@ -109,7 +214,7 @@ def make_dgo_train_step(loss_fn: Callable,
         w = jnp.argmin(all_vals)
         win_val, win_id = all_vals[w], all_ids[w]
         improved = win_val < parent_val
-        win_bits = generate_children(parent_bits, win_id[None])[0]
+        win_bits = tables.children(parent_bits, win_id[None], 0)[0]
         new_bits = jnp.where(improved, win_bits, parent_bits).astype(jnp.int8)
         new_val = jnp.where(improved, win_val, parent_val)
         return new_bits, new_val, improved
@@ -117,8 +222,14 @@ def make_dgo_train_step(loss_fn: Callable,
     return shard_fn  # caller wraps in shard_map/jit with model shardings
 
 
-def materialize_winner(params0, parent_bits: jax.Array, enc: Encoding,
+def materialize_winner(params0, parent: jax.Array, enc: Encoding | None,
                        key: jax.Array, alpha: float = 1.0):
-    """Decode the current DGO parent into concrete model parameters."""
-    z = decode(parent_bits, enc)
+    """Decode the current DGO parent into concrete model parameters.
+
+    ``parent`` is a bit string at ``enc``'s resolution, or — when ``enc``
+    is None — an already-decoded z vector (the ``best_x`` a ``solve()``
+    result carries), so serving can persist winner weights without a lossy
+    re-encode round-trip.
+    """
+    z = parent if enc is None else decode(parent, enc)
     return apply_subspace(params0, z, key, alpha)

@@ -31,6 +31,13 @@ buckets queued requests by engine signature, pads each bucket to
 ``--restarts`` slots with inactive lanes, and dispatches it as ONE
 compiled on-device while_loop; per-request results are bitwise what
 individual solves would return.
+
+Model-zoo tuning is served through the same loop: ``subspace-lm:<arch>``
+names (e.g. ``--problems subspace-lm:xlstm-125m,rastrigin:2``) are
+subspace-DGO tuning problems over ``configs.reduced`` zoo models — an
+expensive batched objective whose requests bucket by their semantic
+(arch, d, bits, ...) signature.  ``--ckpt-dir`` persists each tuning
+problem's winner parameters through the atomic checkpoint store.
 """
 from __future__ import annotations
 
@@ -68,11 +75,14 @@ def _parse_problem_specs(args) -> list:
             item = item.strip()
             if not item:
                 continue
-            name, sep, n_str = item.partition(":")
-            if sep and not n_str.lstrip("-").isdigit():
-                raise SystemExit(
-                    f"--problems: bad spec {item!r} (want name or name:n)")
-            specs.append((name, int(n_str) if sep else None))
+            # the trailing :n is optional AND registry names may contain
+            # ":" themselves (subspace-lm:xlstm-125m), so split from the
+            # right and only treat an integer tail as a variable count
+            name, sep, n_str = item.rpartition(":")
+            if sep and n_str.lstrip("-").isdigit():
+                specs.append((name, int(n_str)))
+            else:
+                specs.append((item, None))
     else:
         specs.append((args.problem, args.n_vars))
 
@@ -102,7 +112,39 @@ def _build_scheduler(args, problems):
     return sched
 
 
-def _report(sched, problems, best: float, wall_s: float) -> None:
+def _persist_winners(ckpt_dir: str, handles, submitted: int) -> list[str]:
+    """Persist the best materializable result per problem: the winning z
+    of each ``subspace-lm:*`` tuning problem is mapped back to concrete
+    model parameters (``Problem.materialize`` ->
+    ``core.subspace.materialize_winner``) and written through the atomic
+    keep-k checkpoint store.  Returns the checkpoint paths written."""
+    from pathlib import Path
+
+    from repro.checkpoint.store import save_checkpoint
+
+    winners: dict[str, tuple[float, object, object]] = {}
+    for h in handles:
+        if not (h.done() and h.error is None):
+            continue
+        prob = h.request.problem
+        if getattr(prob, "materialize", None) is None:
+            continue
+        res = h.result()
+        f = float(res.best_f)
+        if prob.name not in winners or f < winners[prob.name][0]:
+            winners[prob.name] = (f, prob, res)
+    paths = []
+    for name, (_, prob, res) in sorted(winners.items()):
+        params = prob.materialize(res.best_x)
+        sub = name.replace(":", "__").replace("/", "__")
+        path = save_checkpoint(Path(ckpt_dir) / sub, step=submitted,
+                               tree=params)
+        paths.append(str(path))
+    return paths
+
+
+def _report(sched, problems, best: float, wall_s: float,
+            checkpoints: list[str] | None = None) -> None:
     from repro.core import cache
 
     m = sched.metrics()
@@ -125,7 +167,9 @@ def _report(sched, problems, best: float, wall_s: float) -> None:
                         if m["fill_fraction"] is not None else None),
         "cache_engines_built": eng["built"],
         "cache_hits": eng["hits"],
+        "cache_evictions": m["cache_evictions"],
         "best_value": None if best == float("inf") else best,
+        "checkpoints": checkpoints or [],
     }))
 
 
@@ -194,7 +238,9 @@ def serve_dgo(args) -> None:
     for h in handles:
         if h.done() and h.error is None:
             best = min(best, float(h.result().best_f))
-    _report(sched, problems, best, wall_s)
+    checkpoints = (_persist_winners(args.ckpt_dir, handles, submitted)
+                   if args.ckpt_dir else None)
+    _report(sched, problems, best, wall_s, checkpoints)
 
 
 def main():
@@ -227,6 +273,10 @@ def main():
     ap.add_argument("--max-bits", type=int, default=None,
                     help="fold a resolution schedule up to this many bits "
                          "into every dispatch (None = fixed resolution)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="persist each tuning problem's winner parameters "
+                         "(subspace-lm:* problems) under this directory "
+                         "via the checkpoint store")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -114,9 +114,11 @@ def build_plan(arch: ArchConfig) -> list[Segment]:
             is_s = arch.slstm_every and (i + 1) % arch.slstm_every == 0
             if is_s:
                 if run:
-                    segs.append(Segment("mlstm", run, name=f"seg{idx}")); idx += 1
+                    segs.append(Segment("mlstm", run, name=f"seg{idx}"))
+                    idx += 1
                     run = 0
-                segs.append(Segment("slstm", 1, name=f"seg{idx}")); idx += 1
+                segs.append(Segment("slstm", 1, name=f"seg{idx}"))
+                idx += 1
             else:
                 run += 1
         if run:

@@ -77,6 +77,7 @@ class ServingMetrics:
         the compile-cache subsystem snapshot (``core.cache.snapshot()``)."""
         from repro.core import cache
 
+        cache_snap = cache.snapshot()
         out = {
             "completed": self.completed,
             "failed": self.failed,
@@ -94,7 +95,11 @@ class ServingMetrics:
             # percentiles over the LATENCY_WINDOW most recent completions
             "latency_p50_ms": None,
             "latency_p95_ms": None,
-            "cache": cache.snapshot(),
+            "cache": cache_snap,
+            # surfaced top-level: tuning engines (the subspace-lm family)
+            # are big compilations, so LRU churn here is the first sign a
+            # workload's signature diversity outgrew the engine cache
+            "cache_evictions": cache_snap["totals"]["evictions"],
         }
         # snapshot the deque first: a monitoring thread may poll while
         # the dispatch thread appends completions

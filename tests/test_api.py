@@ -3,6 +3,8 @@
 Changing this list is an API decision, not a refactor side effect —
 update it deliberately (and the README migration table with it).
 """
+import dataclasses
+
 import repro.core as core
 
 PUBLIC_API = [
@@ -76,7 +78,12 @@ def test_strategy_registry_snapshot():
 def test_objective_registry_snapshot():
     assert core.objectives.names() == (
         "ackley", "becker_lago", "griewank", "quadratic", "rastrigin",
-        "remote_sensing", "sample2d", "shekel", "xor")
+        "remote_sensing", "sample2d", "shekel",
+        "subspace-lm:codeqwen1.5-7b", "subspace-lm:deepseek-v2-236b",
+        "subspace-lm:deepseek-v3-671b", "subspace-lm:gemma3-27b",
+        "subspace-lm:granite-34b", "subspace-lm:phi-3-vision-4.2b",
+        "subspace-lm:qwen2-1.5b", "subspace-lm:whisper-medium",
+        "subspace-lm:xlstm-125m", "subspace-lm:zamba2-1.2b", "xor")
 
 
 # ---------------------------------------------------------------------------
@@ -119,3 +126,21 @@ def test_solve_many_extras_contract():
     req = core.SolveRequest("quadratic", seed=0, max_iters=8)
     (res,) = core.solve_many([req], pad_to=2)
     assert set(res.extras) == {"bits", "schedule", "wave_slot", "wave_size"}
+
+
+def test_signature_problems_add_problem_signature_extra():
+    """Problems carrying a semantic ``signature`` (the subspace-lm tuning
+    family) report it in extras on EVERY solve path; signatureless
+    problems keep the per-strategy key sets above exactly."""
+    import jax.numpy as jnp
+
+    base = core.Problem.get("quadratic", n=2)
+    prob = dataclasses.replace(base, signature=("demo", "quadratic", 2))
+    res = core.solve(prob, core.Fused(max_bits=10),
+                     x0=jnp.asarray([4.0, -3.0]), max_iters=8)
+    assert set(res.extras) == EXTRAS_CONTRACT["fused"] | {
+        "problem_signature"}
+    assert res.extras["problem_signature"] == ("demo", "quadratic", 2)
+    (many,) = core.solve_many(
+        [core.SolveRequest(prob, seed=0, max_iters=8)], pad_to=2)
+    assert many.extras["problem_signature"] == ("demo", "quadratic", 2)

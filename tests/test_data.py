@@ -15,7 +15,8 @@ def test_batch_pure_function_of_step():
         b2 = p2.batch_at(17)
         np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
     finally:
-        p1.close(); p2.close()
+        p1.close()
+        p2.close()
 
 
 def test_labels_are_next_token():

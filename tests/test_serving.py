@@ -305,3 +305,6 @@ def test_metrics_snapshot_shape():
     # the cache snapshot rides along for the serving endpoint
     assert set(snap["cache"]) == {"caches", "totals"}
     assert "evictions" in snap["cache"]["totals"]
+    # engine-cache churn is surfaced top-level: big tuning compilations
+    # (the subspace-lm family) make evictions the first signal to watch
+    assert snap["cache_evictions"] == snap["cache"]["totals"]["evictions"]

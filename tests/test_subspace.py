@@ -1,0 +1,181 @@
+"""Subspace DGO: apply_subspace determinism, materialize_winner parity
+with a dense reconstruction, the zoo tuning objective family, and the
+serving acceptance contract (a tuning request through the Scheduler in a
+mixed wave is bitwise the direct solve())."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives
+from repro.core.encoding import Encoding, decode, encode
+from repro.core.solver import (
+    Batched, Problem, SolveRequest, engine_signature, solve,
+)
+from repro.core.subspace import apply_subspace, materialize_winner
+from repro.serving import Scheduler
+
+MAX_ITERS = 3
+TINY = dict(d=4, bits=3, batch=2, seq=8, layers=1)
+
+
+@pytest.fixture(scope="module")
+def tiny_problem():
+    """One CI-sized tuning problem for the whole module — Problem.get
+    memoizes per spec, so every test (and the scheduler bucket) shares
+    ONE objective closure and its compiled engines."""
+    return Problem.get("subspace-lm:xlstm-125m", **TINY)
+
+
+def _tiny_tree():
+    return {
+        "w": jnp.asarray(np.linspace(-1.0, 1.0, 6), jnp.float32
+                         ).reshape(3, 2),
+        "b": jnp.asarray([0.5, -0.25], jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),     # non-float leaf
+    }
+
+
+# ---------------------------------------------------------------------------
+# apply_subspace
+# ---------------------------------------------------------------------------
+
+def test_apply_subspace_deterministic_under_fold_in():
+    """Directions are regenerated from fold_in(key, (leaf, j)) — the same
+    (params0, z, key) must reproduce bitwise-identical parameters, and a
+    different key must not."""
+    params0 = _tiny_tree()
+    z = jnp.asarray([0.5, -1.0, 0.25, 0.0], jnp.float32)
+    key = jax.random.PRNGKey(3)
+    a = apply_subspace(params0, z, key, alpha=2.0)
+    b = apply_subspace(params0, z, key, alpha=2.0)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    c = apply_subspace(params0, z, jax.random.PRNGKey(4), alpha=2.0)
+    assert not np.array_equal(np.asarray(a["w"]), np.asarray(c["w"]))
+
+
+def test_apply_subspace_non_float_passthrough():
+    params0 = _tiny_tree()
+    z = jnp.asarray([1.0, 1.0, 1.0, 1.0], jnp.float32)
+    out = apply_subspace(params0, z, jax.random.PRNGKey(0), alpha=1.0)
+    assert out["step"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out["step"]),
+                                  np.asarray(params0["step"]))
+    assert out["w"].dtype == params0["w"].dtype
+    assert not np.array_equal(np.asarray(out["w"]), np.asarray(params0["w"]))
+
+
+def test_materialize_winner_dense_parity():
+    """materialize_winner (leaf-streamed scan; nothing of size d x params
+    materialized) against a literal dense reconstruction that builds the
+    (d, *leaf) direction stack explicitly and accumulates in the same
+    order — equal to float32 rounding (the compiled scan may contract the
+    multiply-add into an FMA), and the bit-string vs z-vector entry points
+    bitwise identical."""
+    params0 = _tiny_tree()
+    enc = Encoding(n_vars=4, bits=3, lo=-2.0, hi=2.0)
+    key, alpha = jax.random.PRNGKey(11), 1.5
+    bits = encode(jnp.asarray([0.3, -1.2, 1.7, 0.0]), enc)
+    z = decode(bits, enc)
+
+    d = int(z.shape[-1])
+    scale = alpha / math.sqrt(d)
+    leaves, treedef = jax.tree.flatten(params0)
+    out = []
+    for i, leaf in enumerate(leaves):
+        kleaf = jax.random.fold_in(key, i)
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(leaf)
+            continue
+        eps = jnp.stack([jax.random.normal(jax.random.fold_in(kleaf, j),
+                                           leaf.shape, jnp.float32)
+                         for j in range(d)])          # the dense stack
+        delta = jnp.zeros(leaf.shape, jnp.float32)
+        for j in range(d):
+            delta = delta + z.astype(jnp.float32)[j] * eps[j]
+        out.append((leaf.astype(jnp.float32)
+                    + scale * delta).astype(leaf.dtype))
+    dense = jax.tree.unflatten(treedef, out)
+
+    streamed = materialize_winner(params0, bits, enc, key, alpha)
+    for ls, ld in zip(jax.tree.leaves(streamed), jax.tree.leaves(dense)):
+        np.testing.assert_allclose(np.asarray(ls), np.asarray(ld),
+                                   rtol=1e-6, atol=1e-6)
+    via_z = materialize_winner(params0, z, None, key, alpha)
+    for lz, ls in zip(jax.tree.leaves(via_z), jax.tree.leaves(streamed)):
+        np.testing.assert_array_equal(np.asarray(lz), np.asarray(ls))
+
+
+# ---------------------------------------------------------------------------
+# the zoo tuning family as first-class Problems
+# ---------------------------------------------------------------------------
+
+def test_registry_has_every_zoo_arch():
+    from repro.configs import ARCH_NAMES
+
+    names = objectives.names()
+    for arch in ARCH_NAMES:
+        assert f"subspace-lm:{arch}" in names
+
+
+def test_tuning_problems_bucket_by_semantic_signature(tiny_problem):
+    """The tentpole signature contract: independently built objectives of
+    one tuning spec are DIFFERENT closures but share one engine-cache /
+    serving bucket (engine_signature keys on Problem.signature)."""
+    a = objectives.get("subspace-lm:xlstm-125m", **TINY)
+    b = objectives.get("subspace-lm:xlstm-125m", **TINY)
+    assert a.fn is not b.fn
+    assert a.signature == b.signature == tiny_problem.signature
+    assert (engine_signature(Problem.from_objective(a))
+            == engine_signature(Problem.from_objective(b))
+            == engine_signature(tiny_problem))
+    other = Problem.get("subspace-lm:xlstm-125m", d=4, bits=3, batch=2,
+                        seq=8, layers=1, seed=1)
+    assert engine_signature(other) != engine_signature(tiny_problem)
+    # name-built Problems are memoized per canonical spec (defaults filled)
+    assert tiny_problem is Problem.get("subspace-lm:xlstm-125m", seed=0,
+                                       **TINY)
+
+
+def test_solve_carries_subspace_extras(tiny_problem):
+    res = solve(tiny_problem, Batched(restarts=1),
+                x0=jnp.zeros((1, TINY["d"])), max_iters=MAX_ITERS)
+    assert res.extras["problem_signature"] == tiny_problem.signature
+    assert res.extras["problem_signature"][:2] == ("subspace-lm",
+                                                   "xlstm-125m")
+    assert np.isfinite(float(res.best_f))
+    assert (np.diff(res.trace) <= 1e-6).all()
+    winner = tiny_problem.materialize(res.best_x)
+    assert {x.shape for x in jax.tree.leaves(winner)} \
+        == {x.shape for x in jax.tree.leaves(winner)}
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(winner)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def test_scheduler_serves_tuning_request_in_mixed_wave(tiny_problem):
+    """ACCEPTANCE: a subspace tuning request served through the Scheduler
+    in a mixed workload produces a bitwise-identical trajectory to the
+    same problem run via direct solve()."""
+    direct = solve(tiny_problem, Batched(restarts=1), seed=5,
+                   max_iters=MAX_ITERS)
+    sched = Scheduler(wave_size=2)
+    toy = Problem.get("rastrigin", n=2)
+    h_tune = sched.submit(SolveRequest(tiny_problem, seed=5,
+                                       max_iters=MAX_ITERS))
+    h_toys = [sched.submit(SolveRequest(toy, seed=s, max_iters=8))
+              for s in (1, 2)]
+    assert sched.drain() == 3
+    out = h_tune.result()
+    assert float(out.best_f) == float(direct.best_f)
+    assert np.array_equal(np.asarray(out.best_x),
+                          np.asarray(direct.best_x))
+    assert out.iterations == direct.iterations
+    assert np.array_equal(np.asarray(out.trace), np.asarray(direct.trace))
+    assert out.extras["problem_signature"] == tiny_problem.signature
+    for h in h_toys:
+        assert h.done() and h.error is None
+        assert "problem_signature" not in h.result().extras
