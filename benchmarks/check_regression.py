@@ -16,6 +16,10 @@ Policy (recorded in ROADMAP.md):
 * a gated metric missing from the fresh run fails (silently dropping a
   measurement is itself a regression); one missing from the baseline is
   skipped with a note (it is new — bless it by committing the fresh file);
+* REQUIRED metrics (``REQUIRED`` below, e.g. the serving p99 latency)
+  must be PRESENT in the fresh run but are never value-gated — they are
+  absolute seconds that do not transfer across machines, yet the
+  artifact dropping them would regress every consumer silently;
 * to bless a new baseline, re-run the bench and commit the JSON it emits
   (CI regenerates into ``bench-out/`` and never touches the baseline).
 
@@ -55,7 +59,17 @@ GATED = {
     },
     "serving": {
         "bench_serving.bucketed_over_per_request": "higher",
+        "bench_serving.degraded_over_bucketed": "higher",
     },
+}
+
+# REQUIRED metrics per bench family: presence-asserted in the fresh run
+# but NOT value-gated — they are absolute measurements (seconds) that do
+# not transfer across machines, yet silently dropping them from the
+# artifact is itself a regression (dashboards and the ROADMAP tail-latency
+# criterion consume them)
+REQUIRED = {
+    "serving": ["bench_serving.p99_latency_s"],
 }
 
 
@@ -74,12 +88,21 @@ def check(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     if baseline["bench"] != family:
         return [f"bench family mismatch: baseline={baseline['bench']!r} "
                 f"fresh={family!r}"]
+    failures = []
+    for name in REQUIRED.get(family, ()):
+        row = fresh["metrics"].get(name)
+        if row is None or row.get("value") is None:
+            failures.append(f"{name}: REQUIRED metric absent from fresh "
+                            f"run (presence-asserted, not value-gated)")
+        else:
+            print(f"  ok   {name} [required, ungated]: "
+                  f"{float(row['value']):.6f}")
     gated = GATED.get(family)
     if gated is None:
+        if failures:
+            return failures
         print(f"  (no gated metrics for bench family {family!r}; pass)")
         return []
-
-    failures = []
     for name, direction in sorted(gated.items()):
         base_row = baseline["metrics"].get(name)
         fresh_row = fresh["metrics"].get(name)

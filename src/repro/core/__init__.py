@@ -24,12 +24,14 @@ from repro.core.solver import (
     Clustered,
     Distributed,
     Fused,
+    NonFiniteResult,
     Problem,
     Sequential,
     SolveRequest,
     SolveResult,
     Strategy,
     engine_signature,
+    result_is_finite,
     solve,
     solve_many,
     strategy_names,
@@ -42,12 +44,14 @@ __all__ = [
     "Clustered",
     "Distributed",
     "Fused",
+    "NonFiniteResult",
     "Problem",
     "Sequential",
     "SolveRequest",
     "SolveResult",
     "Strategy",
     "engine_signature",
+    "result_is_finite",
     "solve",
     "solve_many",
     "strategy_names",

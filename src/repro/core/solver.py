@@ -53,9 +53,10 @@ from repro.core.encoding import Encoding, decode, decode_np
 from repro.core.objectives import Objective
 
 __all__ = [
-    "Batched", "Clustered", "Distributed", "Fused", "Problem", "Sequential",
-    "SolveRequest", "SolveResult", "Strategy", "engine_signature", "solve",
-    "solve_many", "strategy_names",
+    "Batched", "Clustered", "Distributed", "Fused", "NonFiniteResult",
+    "Problem", "Sequential", "SolveRequest", "SolveResult", "Strategy",
+    "engine_signature", "result_is_finite", "solve", "solve_many",
+    "strategy_names",
 ]
 
 
@@ -256,6 +257,12 @@ class SolveResult(NamedTuple):
     analogue.  ``schedule`` appears wherever a resolution schedule can be
     configured on the engine (the distributed family).
 
+    Result hygiene: EVERY path (all strategies and ``solve_many``)
+    additionally stamps ``finite`` — False when ``best_f`` or any trace
+    value is non-finite (see :func:`result_is_finite`); pass
+    ``on_nonfinite="raise"`` to :func:`solve`/:func:`solve_many` to turn
+    that into a :class:`NonFiniteResult` instead of a flag.
+
     Subspace-family keys: a Problem carrying a semantic ``signature``
     (the ``subspace-lm:*`` zoo tuning family) adds ``problem_signature``
     — the ``("subspace-lm", arch, d, bits, alpha, batch, seq, seed,
@@ -273,6 +280,44 @@ class SolveResult(NamedTuple):
     iterations: int          # total accepted/attempted population steps
     trace: np.ndarray        # (T,) monotone best-value-so-far history
     extras: dict             # per-strategy detail (see strategy docstrings)
+
+
+class NonFiniteResult(RuntimeError):
+    """A solve produced a non-finite ``best_f`` or trace value (a NaN/inf
+    objective — a real risk for the ``subspace-lm:*`` loss family) and the
+    caller asked for ``on_nonfinite="raise"``.  The offending
+    :class:`SolveResult` rides along as ``.result`` so callers can still
+    inspect the trajectory."""
+
+    def __init__(self, message: str, result: SolveResult):
+        super().__init__(message)
+        self.result = result
+
+
+def result_is_finite(res: SolveResult) -> bool:
+    """Whether ``best_f`` and every trace value of ``res`` are finite —
+    the check behind ``extras["finite"]``.  (Engine trace buffers pad
+    past ``iterations`` with the final value, so the whole buffer is
+    checked without false alarms.)"""
+    return bool(np.isfinite(np.float32(res.best_f))
+                and np.isfinite(np.asarray(res.trace, np.float32)).all())
+
+
+def _apply_result_hygiene(res: SolveResult, on_nonfinite: str,
+                          context: str) -> SolveResult:
+    """Stamp ``extras["finite"]`` and enforce the ``on_nonfinite`` policy
+    (``"flag"`` — record and return; ``"raise"`` — NonFiniteResult), so a
+    NaN objective can never masquerade as an optimum."""
+    if on_nonfinite not in ("flag", "raise"):
+        raise ValueError(f"on_nonfinite must be 'flag' or 'raise', "
+                         f"got {on_nonfinite!r}")
+    finite = result_is_finite(res)
+    res.extras["finite"] = finite
+    if not finite and on_nonfinite == "raise":
+        raise NonFiniteResult(
+            f"{context} produced a non-finite result "
+            f"(best_f={float(np.float32(res.best_f))!r})", res)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -586,7 +631,8 @@ def as_strategy(strategy) -> Strategy:
 
 
 def solve(problem, strategy="fused", *, seed: int | jax.Array = 0,
-          x0=None, max_iters: int | None = None) -> SolveResult:
+          x0=None, max_iters: int | None = None,
+          on_nonfinite: str = "flag") -> SolveResult:
     """Run DGO on ``problem`` under ``strategy``; the one front door.
 
     ``problem``: a :class:`Problem`, an ``objectives.Objective``, or a
@@ -598,6 +644,12 @@ def solve(problem, strategy="fused", *, seed: int | jax.Array = 0,
     ``(n_vars,)``, or ``(R, n_vars)`` for clustered/batched.
     ``max_iters`` caps iterations per resolution (strategy default when
     None: 512 for the schedule engines, 256 for the distributed ones).
+
+    ``on_nonfinite`` is the result-hygiene policy: every result is
+    checked for non-finite ``best_f``/trace values and stamped with
+    ``extras["finite"]``; ``"flag"`` (default) returns the flagged
+    result, ``"raise"`` raises :class:`NonFiniteResult` — a NaN
+    objective can never masquerade as an optimum either way.
 
     Every strategy returns the same :class:`SolveResult` pytree.
     """
@@ -612,7 +664,8 @@ def solve(problem, strategy="fused", *, seed: int | jax.Array = 0,
     res = strat._solve(prob, key=key, x0=x0, max_iters=max_iters)
     if prob.signature is not None:      # subspace-family extras key
         res.extras["problem_signature"] = prob.signature
-    return res
+    return _apply_result_hygiene(res, on_nonfinite,
+                                 f"solve({prob.name!r}, {strat.name!r})")
 
 
 # ---------------------------------------------------------------------------
@@ -635,7 +688,11 @@ class SolveRequest:
     ``max_iters`` caps iterations (per resolution when the dispatch
     configures a schedule); ``priority`` orders the serving queue (higher
     first — ignored by a direct ``solve_many`` call, which preserves
-    input order).
+    input order).  ``deadline_s`` is a TTL in seconds, stamped onto the
+    serving handle at submit: an expired request fails fast with
+    ``serving.DeadlineExceeded`` instead of occupying a wave slot
+    (ignored by a direct ``solve_many`` call, which has no queue to
+    expire from).
     """
 
     problem: Any
@@ -643,6 +700,7 @@ class SolveRequest:
     x0: Any = None
     max_iters: int | None = None
     priority: int = 0
+    deadline_s: float | None = None
 
     def resolve(self) -> "SolveRequest":
         """Coerce ``problem`` to a :class:`Problem` and validate ``x0``
@@ -734,7 +792,8 @@ def _slot_result(res, bits_h, slot: int, enc0: Encoding, schedule: tuple,
 def solve_many(requests, *, mesh=None, pop_axes=("data",),
                virtual_block: int = 256, max_bits: int | None = None,
                bits_step: int = 2, pad_to: int | None = None,
-               quorum_mask=None) -> list[SolveResult]:
+               quorum_mask=None,
+               on_nonfinite: str = "flag") -> list[SolveResult]:
     """Solve N heterogeneous requests through the batched engine, one
     dispatch per signature bucket — results in input order.
 
@@ -752,7 +811,13 @@ def solve_many(requests, *, mesh=None, pop_axes=("data",),
     ``solve(problem, Batched(restarts=1, ...), ...)`` — slots advance
     independently inside the wave (``tests/test_serving.py`` pins this,
     including a partially-filled final wave).  Per-request extras:
-    ``bits``, ``schedule``, ``wave_slot``, ``wave_size``.
+    ``bits``, ``schedule``, ``wave_slot``, ``wave_size``, ``finite``.
+
+    ``on_nonfinite`` applies the result-hygiene policy per request
+    (``extras["finite"]`` + ``"flag"``/``"raise"`` — ``"raise"`` throws
+    :class:`NonFiniteResult` for the FIRST non-finite request; the
+    serving scheduler keeps the default ``"flag"`` and applies its own
+    per-handle policy so one NaN cannot fail its wave-mates).
     """
     from repro.core import distributed
 
@@ -801,4 +866,7 @@ def solve_many(requests, *, mesh=None, pop_axes=("data",),
                                           schedule, width)
                 if prob.signature is not None:
                     results[i].extras["problem_signature"] = prob.signature
+                results[i] = _apply_result_hygiene(
+                    results[i], on_nonfinite,
+                    f"solve_many request {i} ({prob.name!r})")
     return results

@@ -102,12 +102,30 @@ def _parse_problem_specs(args) -> list:
     return problems
 
 
-def _build_scheduler(args, problems):
-    from repro.serving import Scheduler
+def _make_fault_plan(args):
+    """The CLI's chaos knobs -> a seeded ``runtime.failure.FaultPlan``
+    (None when no injection was asked for) — degraded-mode serving runs
+    the same fault model as the chaos tests and the bench."""
+    if not (args.fault_rate or args.fault_latency_rate):
+        return None
+    from repro.runtime.failure import FaultPlan
 
+    return FaultPlan(seed=args.fault_seed,
+                     dispatch_error_rate=args.fault_rate,
+                     latency_rate=args.fault_latency_rate)
+
+
+def _build_scheduler(args, problems):
+    from repro.serving import RequestQueue, Scheduler
+
+    queue = RequestQueue(capacity=args.capacity, admission=args.admission)
     # mesh=None -> the library's shared default (all local devices on
     # ("data",)) — one source of truth for the serving geometry
-    sched = Scheduler(wave_size=args.restarts, max_bits=args.max_bits)
+    sched = Scheduler(queue, wave_size=args.restarts,
+                      max_bits=args.max_bits,
+                      max_retries=args.max_retries,
+                      retry_backoff_s=args.retry_backoff_s,
+                      faults=_make_fault_plan(args))
     sched.warmup(problems, max_iters=args.max_iters)
     return sched
 
@@ -144,24 +162,32 @@ def _persist_winners(ckpt_dir: str, handles, submitted: int) -> list[str]:
 
 
 def _report(sched, problems, best: float, wall_s: float,
-            checkpoints: list[str] | None = None) -> None:
+            checkpoints: list[str] | None = None) -> dict:
     from repro.core import cache
 
     m = sched.metrics()
+
+    def _ms(key):
+        return round(m[key], 1) if m[key] is not None else None
+
     # engine caches only: memo tables (solver.problem) would otherwise
     # inflate "engines built"/"hits" by one per request spec/submission
     eng = cache.totals(suffix=".engine")
-    print(json.dumps({
+    out = {
         "problems": [p.name for p in problems],
         "completed": m["completed"],
         "failed": m["failed"],
         "requeued": m["requeued"],
+        # lifecycle counters: deadline expiries + admission-control drops
+        # (rejected raises at submit, shed evicts queued victims)
+        "expired": m["expired"],
+        "rejected": m["rejected"],
+        "shed": m["shed"],
         "runs_per_s": (round(m["completed"] / wall_s, 1)
                        if wall_s > 0 else None),
-        "latency_p50_ms": (round(m["latency_p50_ms"], 1)
-                           if m["latency_p50_ms"] is not None else None),
-        "latency_p95_ms": (round(m["latency_p95_ms"], 1)
-                           if m["latency_p95_ms"] is not None else None),
+        "latency_p50_ms": _ms("latency_p50_ms"),
+        "latency_p95_ms": _ms("latency_p95_ms"),
+        "latency_p99_ms": _ms("latency_p99_ms"),
         "waves": m["waves"],
         "bucket_fill": (round(m["fill_fraction"], 3)
                         if m["fill_fraction"] is not None else None),
@@ -170,58 +196,60 @@ def _report(sched, problems, best: float, wall_s: float,
         "cache_evictions": m["cache_evictions"],
         "best_value": None if best == float("inf") else best,
         "checkpoints": checkpoints or [],
-    }))
+    }
+    if "fault_injections" in m:
+        out["fault_injections"] = m["fault_injections"]
+    print(json.dumps(out))
+    return out
 
 
-def serve_dgo(args) -> None:
-    """Serve DGO requests through the serving subsystem.
-
-    Open loop (``--rps``/``--duration``): requests arrive on a Poisson
-    clock independent of service progress (arrival times never wait on
-    dispatches — the open-loop discipline the distributed-GA serving
-    literature measures under); the scheduler serves signature buckets
-    whenever work is queued.  Closed loop (``--waves``): submit
-    ``restarts * waves`` requests up front and drain.
-    """
+def _run_serving_loop(args, problems, rps: float | None):
+    """One serving run: open loop at ``rps`` (Poisson arrivals for
+    ``--duration`` seconds) or, with ``rps=None``, closed loop
+    (``restarts * waves`` requests up front).  Returns
+    ``(sched, handles, wall_s, submitted)``."""
     import numpy as np
 
     from repro.core.solver import SolveRequest
+    from repro.serving import QueueFull
 
-    if args.rps is not None and args.rps <= 0:
-        raise SystemExit(f"--rps must be > 0, got {args.rps}")
-    if args.rps is not None and args.duration <= 0:
-        raise SystemExit(f"--duration must be > 0, got {args.duration}")
-    problems = _parse_problem_specs(args)
     sched = _build_scheduler(args, problems)
-
     rng = np.random.default_rng(args.seed)
-    best = float("inf")
     submitted = 0
     handles = []
 
     def submit_next(arrived_at: float | None = None):
         nonlocal submitted
         prob = problems[submitted % len(problems)]
-        h = sched.submit(SolveRequest(
-            prob, seed=args.seed + submitted, max_iters=args.max_iters))
+        req = SolveRequest(prob, seed=args.seed + submitted,
+                           max_iters=args.max_iters,
+                           deadline_s=args.deadline_s)
+        submitted += 1
+        try:
+            h = sched.submit(req)
+        except QueueFull:
+            # admission control refused the arrival — the queue counted
+            # it (rejected/shed); an open-loop client just moves on
+            return
         if arrived_at is not None:
             # open-loop discipline: latency counts from the simulated
             # ARRIVAL, not from when the loop got around to submitting —
             # arrivals during a blocking dispatch must still pay their
             # queueing delay (no coordinated omission)
             h.submitted_at = arrived_at
+            if h.deadline_at is not None:
+                h.deadline_at = arrived_at + args.deadline_s
         handles.append(h)
-        submitted += 1
 
     t_start = time.perf_counter()
-    if args.rps is not None:
+    if rps is not None:
         t_end = t_start + args.duration
         next_arrival = t_start
         while True:
             now = time.perf_counter()
             while next_arrival <= now and next_arrival < t_end:
                 submit_next(arrived_at=next_arrival)
-                next_arrival += rng.exponential(1.0 / args.rps)
+                next_arrival += rng.exponential(1.0 / rps)
             if len(sched.queue):
                 sched.run_wave()
             elif now >= t_end:
@@ -234,10 +262,56 @@ def serve_dgo(args) -> None:
             submit_next()
         sched.drain()
     wall_s = time.perf_counter() - t_start
+    return sched, handles, wall_s, submitted
 
-    for h in handles:
-        if h.done() and h.error is None:
-            best = min(best, float(h.result().best_f))
+
+def serve_dgo(args) -> None:
+    """Serve DGO requests through the serving subsystem.
+
+    Open loop (``--rps``/``--duration``): requests arrive on a Poisson
+    clock independent of service progress (arrival times never wait on
+    dispatches — the open-loop discipline the distributed-GA serving
+    literature measures under); the scheduler serves signature buckets
+    whenever work is queued.  Closed loop (``--waves``): submit
+    ``restarts * waves`` requests up front and drain.  ``--sweep-rps``
+    runs the open loop once per arrival rate (saturation sweep): as the
+    offered load crosses the service capacity, queueing delay — and
+    with ``--deadline-s``/``--capacity``, expiries and admission drops —
+    shows up in the per-point p99 before throughput degrades.
+    """
+    if args.rps is not None and args.rps <= 0:
+        raise SystemExit(f"--rps must be > 0, got {args.rps}")
+    if (args.rps is not None or args.sweep_rps) and args.duration <= 0:
+        raise SystemExit(f"--duration must be > 0, got {args.duration}")
+    problems = _parse_problem_specs(args)
+
+    if args.sweep_rps:
+        try:
+            points = [float(s) for s in args.sweep_rps.split(",") if s]
+        except ValueError:
+            raise SystemExit(f"--sweep-rps: want comma-separated rates, "
+                             f"got {args.sweep_rps!r}")
+        if not points or any(p <= 0 for p in points):
+            raise SystemExit(f"--sweep-rps: rates must be > 0, "
+                             f"got {args.sweep_rps!r}")
+        sweep = []
+        for rps in points:
+            sched, handles, wall_s, submitted = _run_serving_loop(
+                args, problems, rps)
+            best = min((float(h.result().best_f) for h in handles
+                        if h.done() and h.error is None),
+                       default=float("inf"))
+            row = _report(sched, problems, best, wall_s)
+            row["rps"] = rps
+            row["submitted"] = submitted
+            sweep.append(row)
+        print(json.dumps({"sweep_rps": points, "sweep": sweep}))
+        return
+
+    sched, handles, wall_s, submitted = _run_serving_loop(
+        args, problems, args.rps)
+    best = min((float(h.result().best_f) for h in handles
+                if h.done() and h.error is None), default=float("inf"))
     checkpoints = (_persist_winners(args.ckpt_dir, handles, submitted)
                    if args.ckpt_dir else None)
     _report(sched, problems, best, wall_s, checkpoints)
@@ -266,6 +340,36 @@ def main():
                          "(requests/s); requires --duration")
     ap.add_argument("--duration", type=float, default=5.0,
                     help="open-loop mode: seconds of simulated arrivals")
+    ap.add_argument("--sweep-rps", default=None,
+                    help="saturation sweep: comma-separated arrival rates "
+                         "(e.g. 10,20,40,80), one open-loop run of "
+                         "--duration seconds each; emits per-point "
+                         "p50/p95/p99 + lifecycle counters and a final "
+                         "summary JSON line")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="bound the request queue (admission control "
+                         "kicks in at this backlog; None = unbounded)")
+    ap.add_argument("--admission", default="reject",
+                    choices=["reject", "shed-lowest-priority", "block"],
+                    help="what a full queue does to an arrival")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL: expired requests fail fast "
+                         "(DeadlineExceeded) and never occupy a wave slot")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="charged dispatch retries per request before its "
+                         "handle fails (DispatchFailed)")
+    ap.add_argument("--retry-backoff-s", type=float, default=0.05,
+                    help="base exponential backoff per failing signature "
+                         "bucket (0 disables)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos: Bernoulli dispatch-failure rate via a "
+                         "seeded runtime.failure.FaultPlan (degraded-mode "
+                         "serving)")
+    ap.add_argument("--fault-latency-rate", type=float, default=0.0,
+                    help="chaos: Bernoulli dispatch latency-spike rate")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault plan (decisions are pure "
+                         "functions of (seed, kind, index))")
     ap.add_argument("--restarts", type=int, default=8,
                     help="scheduler wave width (requests per dispatch; "
                          "buckets are padded to it with inactive slots)")

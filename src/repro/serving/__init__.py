@@ -23,19 +23,39 @@ Quickstart::
     best = [h.result().best_f for h in handles]
     print(sched.metrics())          # p50/p95 latency, runs/s, cache stats
 
-Failed dispatches (real errors or an injected
-``runtime.failure.FailureInjector`` failure) requeue their requests with
-retry accounting; ``runtime.straggler.StragglerPolicy`` can feed the
-scheduler's wave-size choice.  ``launch/serve.py --dgo`` is a thin CLI
-over this package (open-loop arrival simulation), and
-``benchmarks/bench_serving.py`` measures bucketed-vs-per-request
-throughput.
+The stack is fault-tolerant by construction (see the scheduler module
+docstring for the full contract): the queue takes a ``capacity`` bound
+with an admission policy (``reject`` / ``shed-lowest-priority`` /
+``block``, :class:`QueueFull`) and per-request deadlines
+(``SolveRequest.deadline_s`` -> :class:`DeadlineExceeded`, expired
+requests never reach a wave); failed dispatches — real errors, an
+injected ``runtime.failure.FailureInjector`` failure, or a scripted
+``runtime.failure.FaultPlan`` fault — requeue with retry accounting,
+exponential backoff with jitter per failing bucket, and quarantine
+bisection that isolates a poison request in ≤ log2(W) probes; exhausted
+handles fail with their own :class:`DispatchFailed`; non-finite results
+are flagged (``extras["finite"]``) or failed per the scheduler's
+``on_nonfinite`` policy.  ``runtime.straggler.StragglerPolicy`` can feed
+the scheduler's wave-size choice.  ``launch/serve.py --dgo`` is a thin
+CLI over this package (open-loop arrival simulation + saturation sweep),
+``benchmarks/bench_serving.py`` measures bucketed-vs-per-request and
+degraded-mode throughput, and ``tests/test_chaos.py`` drives the whole
+loop through scripted fault plans.
 """
 from repro.serving.metrics import ServingMetrics, percentile
-from repro.serving.queue import RequestHandle, RequestQueue
+from repro.serving.queue import (
+    DeadlineExceeded,
+    DispatchFailed,
+    QueueFull,
+    RequestHandle,
+    RequestQueue,
+)
 from repro.serving.scheduler import Scheduler, warmup
 
 __all__ = [
+    "DeadlineExceeded",
+    "DispatchFailed",
+    "QueueFull",
     "RequestHandle",
     "RequestQueue",
     "Scheduler",

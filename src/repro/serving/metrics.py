@@ -41,9 +41,12 @@ class ServingMetrics:
     waves: int = 0
     warmup_waves: int = 0
     failed_waves: int = 0
+    bisected_waves: int = 0   # quarantine probes of a split failed bucket
+    nonfinite: int = 0        # results flagged non-finite (extras["finite"])
     slots: int = 0          # total wave slots dispatched (active + padded)
     padded_slots: int = 0   # inactive padding slots
     busy_s: float = 0.0     # wall seconds inside dispatches
+    backoff_s: float = 0.0  # wall seconds slept waiting out retry backoff
 
     def __post_init__(self):
         self._latencies: deque[float] = deque(maxlen=LATENCY_WINDOW)
@@ -71,6 +74,15 @@ class ServingMetrics:
     def record_warmup(self):
         self.warmup_waves += 1
 
+    def record_bisect(self):
+        self.bisected_waves += 1
+
+    def record_nonfinite(self):
+        self.nonfinite += 1
+
+    def record_backoff(self, slept_s: float):
+        self.backoff_s += slept_s
+
     def snapshot(self) -> dict:
         """Everything a serving endpoint reports: request/wave counters,
         bucket fill, latency percentiles, throughput over busy time, and
@@ -84,17 +96,23 @@ class ServingMetrics:
             "requeued": self.requeued,
             "waves": self.waves,
             "failed_waves": self.failed_waves,
+            "bisected_waves": self.bisected_waves,
+            "nonfinite_results": self.nonfinite,
             "warmup_waves": self.warmup_waves,
             "slots": self.slots,
             "padded_slots": self.padded_slots,
             "fill_fraction": ((self.slots - self.padded_slots) / self.slots
                               if self.slots else None),
             "busy_s": self.busy_s,
+            "backoff_s": self.backoff_s,
             "runs_per_s": (self.completed / self.busy_s
                            if self.busy_s > 0 else None),
             # percentiles over the LATENCY_WINDOW most recent completions
+            # (p99 is the ROADMAP-requested tail metric — BENCH_serving
+            # reports it as p99_latency_s, presence-asserted in CI)
             "latency_p50_ms": None,
             "latency_p95_ms": None,
+            "latency_p99_ms": None,
             "cache": cache_snap,
             # surfaced top-level: tuning engines (the subspace-lm family)
             # are big compilations, so LRU churn here is the first sign a
@@ -107,4 +125,5 @@ class ServingMetrics:
         if latencies:
             out["latency_p50_ms"] = 1e3 * percentile(latencies, 50)
             out["latency_p95_ms"] = 1e3 * percentile(latencies, 95)
+            out["latency_p99_ms"] = 1e3 * percentile(latencies, 99)
         return out

@@ -7,18 +7,39 @@ One :meth:`Scheduler.run_wave` is the unit of work: pop up to
 resolution schedule + mesh geometry), pad the bucket to the wave width
 with inactive slots, and dispatch it through
 :func:`repro.core.solver.solve_many` as ONE compiled on-device while_loop.
-Per-request results are bitwise identical to individual solves (the
-engine's per-slot independence), so batching is purely a throughput
+Per-request results are bitwise identical to fault-free individual solves
+(the engine's per-slot independence), so batching is purely a throughput
 decision.
 
-Failure handling is part of the loop, not bench-only code: a dispatch
-that raises — a real error or an injected
-``runtime.failure.FailureInjector`` failure — requeues its requests with
-retry accounting on the handle; a request out of retries fails its handle
-with the error.  A ``runtime.straggler.StragglerPolicy`` can feed the
-wave-size choice: recent dispatch times are treated as virtual lanes, and
-when some straggle past the policy's factor the next waves shrink
-(smaller dispatches under contention) until the cooldown expires.
+Fault tolerance is part of the loop, not bench-only code:
+
+* **retry + backoff** — a dispatch that raises (a real error, an
+  injected ``runtime.failure.FailureInjector`` step failure, or a
+  ``runtime.failure.FaultPlan`` fault) requeues its requests; the failed
+  signature bucket enters exponential backoff with jitter
+  (``retry_backoff_s`` doubling per consecutive failure up to
+  ``backoff_cap_s``), and :meth:`drain` SLEEPS until the earliest release
+  instead of spinning hot on a persistent failure;
+* **poison quarantine** — a failed multi-request wave is bisected on
+  retry (half the bucket per probe, down to single-request waves), so
+  one poison request fails ALONE in ≤ log2(W) probes; bucket members are
+  only charged a retry when their wave could not be split further, so a
+  poison does not burn its wave-mates' retry budgets;
+* **per-handle failure** — a request out of retries fails its handle
+  with its OWN ``DispatchFailed`` (chained from the dispatch error via
+  ``__cause__``), never a shared exception instance;
+* **deadlines** — expired requests are failed at pop time by the queue
+  (``DeadlineExceeded``), so no wave is ever dispatched containing one,
+  and bucket selection is deadline-aware (earliest-deadline bucket ahead
+  of front-of-queue greedy);
+* **result hygiene** — non-finite results (``extras["finite"]`` from
+  ``solve_many``) are counted, and under ``on_nonfinite="raise"`` fail
+  their OWN handle with ``NonFiniteResult`` without touching wave-mates.
+
+A ``runtime.straggler.StragglerPolicy`` can feed the wave-size choice:
+recent dispatch times are treated as virtual lanes, and when some
+straggle past the policy's factor the next waves shrink (smaller
+dispatches under contention) until the cooldown expires.
 """
 from __future__ import annotations
 
@@ -29,10 +50,10 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from repro.core.solver import (
-    SolveRequest, engine_signature, solve_many,
+    NonFiniteResult, SolveRequest, engine_signature, solve_many,
 )
 from repro.serving.metrics import ServingMetrics
-from repro.serving.queue import RequestHandle, RequestQueue
+from repro.serving.queue import DispatchFailed, RequestHandle, RequestQueue
 
 
 def warmup(problems: Iterable, *, wave_size: int = 8, mesh=None,
@@ -71,10 +92,19 @@ class Scheduler:
     (the compiled engine's R); ``mesh``/``pop_axes``/``virtual_block`` —
     the dispatch geometry (default: all local devices on ``("data",)``);
     ``max_bits``/``bits_step`` — optional folded resolution schedule
-    applied to every request; ``max_retries`` — dispatch retries per
-    request before its handle fails; ``injector`` — optional
-    ``FailureInjector`` polled once per dispatch; ``straggler`` —
-    optional ``StragglerPolicy`` fed with recent dispatch times.
+    applied to every request; ``max_retries`` — CHARGED dispatch retries
+    per request before its handle fails (quarantine probes of splittable
+    buckets are uncharged); ``injector`` — optional ``FailureInjector``
+    polled once per dispatch; ``faults`` — optional
+    ``runtime.failure.FaultPlan`` polled around every dispatch (chaos
+    harness); ``straggler`` — optional ``StragglerPolicy`` fed with
+    recent dispatch times; ``retry_backoff_s``/``backoff_cap_s``/
+    ``backoff_jitter`` — exponential-backoff shape for failing buckets
+    (base doubling per consecutive failure, multiplicative jitter drawn
+    from a ``seed``-ed rng; ``retry_backoff_s=0`` disables);
+    ``quarantine`` — bisect failed multi-request waves on retry;
+    ``on_nonfinite`` — ``"flag"`` (default) completes non-finite results
+    flagged, ``"raise"`` fails their handles with ``NonFiniteResult``.
     """
 
     def __init__(self, queue: RequestQueue | None = None, *,
@@ -82,9 +112,21 @@ class Scheduler:
                  pop_axes: Sequence[str] = ("data",),
                  virtual_block: int = 256, max_bits: int | None = None,
                  bits_step: int = 2, max_retries: int = 2,
-                 injector=None, straggler=None):
+                 injector=None, faults=None, straggler=None,
+                 retry_backoff_s: float = 0.05,
+                 backoff_cap_s: float = 2.0,
+                 backoff_jitter: float = 0.25,
+                 quarantine: bool = True,
+                 on_nonfinite: str = "flag",
+                 seed: int = 0):
         if wave_size < 1:
             raise ValueError(f"wave_size must be >= 1, got {wave_size}")
+        if retry_backoff_s < 0:
+            raise ValueError(f"retry_backoff_s must be >= 0, "
+                             f"got {retry_backoff_s}")
+        if on_nonfinite not in ("flag", "raise"):
+            raise ValueError(f"on_nonfinite must be 'flag' or 'raise', "
+                             f"got {on_nonfinite!r}")
         self.queue = queue if queue is not None else RequestQueue()
         self.wave_size = wave_size
         self.mesh = mesh
@@ -94,9 +136,22 @@ class Scheduler:
         self.bits_step = bits_step
         self.max_retries = max_retries
         self.injector = injector
+        self.faults = faults
         self.straggler = straggler
+        self.retry_backoff_s = retry_backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self.backoff_jitter = backoff_jitter
+        self.quarantine = quarantine
+        self.on_nonfinite = on_nonfinite
         self.metrics_ = ServingMetrics()
         self._dispatches = 0
+        self._jitter_rng = np.random.default_rng(seed)
+        # per-signature retry state: consecutive dispatch failures and
+        # the not-before release time (exponential backoff), plus the
+        # quarantine bisection width for the next probe of the bucket
+        self._backoff: dict[tuple, tuple[int, float]] = {}
+        self._bisect: dict[tuple, int] = {}
+        self._last_popped = False
         self._recent = deque(
             maxlen=straggler.n_shards if straggler is not None else 1)
 
@@ -136,6 +191,15 @@ class Scheduler:
             width = max(1, width // 2)
         return width
 
+    def _snap_width(self, n: int) -> int:
+        """Smallest halving of ``wave_size`` that fits ``n`` requests —
+        bisected probe waves reuse the same bounded set of compiled
+        widths as straggler shrinks."""
+        width = self.wave_size
+        while width // 2 >= n and width > 1:
+            width //= 2
+        return width
+
     def _note_dispatch_time(self, elapsed_s: float) -> None:
         if self.straggler is None:
             return
@@ -158,15 +222,33 @@ class Scheduler:
 
     def run_wave(self) -> int:
         """Serve one signature bucket; returns the number of requests
-        completed (0 when the queue is empty or the dispatch failed and
-        was requeued)."""
+        completed (0 when nothing was poppable — queue empty or every
+        bucket in backoff — or the dispatch failed and was requeued)."""
+        now = time.perf_counter()
+        blocked = {sig for sig, (_, release) in self._backoff.items()
+                   if release > now}
         width = self.effective_wave_size()
-        bucket = self.queue.pop_bucket(width, key=self.signature)
+        bucket = self.queue.pop_bucket(width, key=self.signature,
+                                       token=self, exclude=blocked)
+        self._last_popped = bool(bucket)
         if not bucket:
             return 0
+        sig = bucket[0].signature
+        limit = self._bisect.get(sig)
+        if limit is not None and len(bucket) > limit:
+            # quarantine probe: retry only half of the failed bucket, so
+            # a poison request is isolated in at most log2(W) probes
+            for handle in bucket[limit:]:
+                self.queue.requeue(handle)
+            bucket = bucket[:limit]
+            width = self._snap_width(limit)
+            self.metrics_.record_bisect()
         self._dispatches += 1
+        seqs = frozenset(h.seq for h in bucket)
         t0 = time.perf_counter()
         try:
+            if self.faults is not None:
+                self.faults.before_dispatch(self._dispatches, seqs)
             if self.injector is not None:
                 self.injector.maybe_fail(self._dispatches)
             results = solve_many(
@@ -177,33 +259,87 @@ class Scheduler:
         except Exception as err:            # noqa: BLE001 — the serving
             # loop survives any dispatch failure by requeueing its bucket
             self.metrics_.record_failed_wave(time.perf_counter() - t0)
-            self._requeue_failed(bucket, err)
+            self._register_failure(sig, bucket, err)
             return 0
         elapsed = time.perf_counter() - t0
+        self._backoff.pop(sig, None)        # the bucket recovered
+        self._bisect.pop(sig, None)
+        if self.faults is not None:
+            results = self.faults.corrupt_results(
+                [h.seq for h in bucket], results)
+        completed = 0
         for handle, result in zip(bucket, results):
+            if not result.extras.get("finite", True):
+                self.metrics_.record_nonfinite()
+                if self.on_nonfinite == "raise":
+                    handle._fail(NonFiniteResult(
+                        f"request {handle.seq} produced a non-finite "
+                        f"result", result))
+                    self.metrics_.record_failure()
+                    continue
             handle._complete(result)
             self.metrics_.record_completion(handle.latency_s)
+            completed += 1
         self.metrics_.record_wave(len(bucket), width, elapsed)
         self._note_dispatch_time(elapsed)
-        return len(bucket)
+        return completed
+
+    def backoff_wait_s(self) -> float:
+        """Seconds until the earliest backed-off bucket releases (0.0
+        when none is pending)."""
+        now = time.perf_counter()
+        waits = [release - now for _, release in self._backoff.values()
+                 if release > now]
+        return min(waits) if waits else 0.0
 
     def drain(self) -> int:
         """Serve until the queue is empty (retries included); returns the
-        number of requests completed."""
+        number of requests completed.  When every queued bucket is in
+        retry backoff, SLEEPS until the earliest release instead of
+        spinning hot on a persistent failure."""
         done = 0
         while len(self.queue):
             done += self.run_wave()
+            if not self._last_popped and len(self.queue):
+                wait = self.backoff_wait_s()
+                if wait > 0:
+                    self.metrics_.record_backoff(wait)
+                    time.sleep(wait)
         return done
 
+    def _register_failure(self, sig: tuple, bucket: list[RequestHandle],
+                          err: BaseException) -> None:
+        """One failed dispatch of ``sig``'s bucket: extend the bucket's
+        exponential backoff, arm quarantine bisection for the retry, and
+        requeue/fail the members (see :meth:`_requeue_failed`)."""
+        fails = self._backoff.get(sig, (0, 0.0))[0] + 1
+        delay = 0.0
+        if self.retry_backoff_s > 0:
+            delay = min(self.backoff_cap_s,
+                        self.retry_backoff_s * (2.0 ** (fails - 1)))
+            delay *= 1.0 + self.backoff_jitter * float(
+                self._jitter_rng.random())
+        self._backoff[sig] = (fails, time.perf_counter() + delay)
+        splittable = self.quarantine and len(bucket) > 1
+        if splittable:
+            self._bisect[sig] = (len(bucket) + 1) // 2
+        self._requeue_failed(bucket, err, charge=not splittable)
+
     def _requeue_failed(self, bucket: list[RequestHandle],
-                        err: BaseException) -> None:
+                        err: BaseException, charge: bool = True) -> None:
         """Retry accounting: every request of a failed dispatch goes back
-        on the queue until it runs out of retries, then its handle fails
-        with the dispatch error."""
+        on the queue until it runs out of charged retries, then its
+        handle fails with its OWN :class:`DispatchFailed` chained from
+        the dispatch error.  ``charge=False`` (a quarantine probe of a
+        bucket that can still be split) requeues without touching retry
+        budgets — the bisection, not the members, absorbs the failure."""
         for handle in bucket:
-            handle.retries += 1
+            if charge:
+                handle.retries += 1
             if handle.retries > self.max_retries:
-                handle._fail(err)
+                wrapped = DispatchFailed(handle.seq, handle.retries, err)
+                wrapped.__cause__ = err
+                handle._fail(wrapped)
                 self.metrics_.record_failure()
             else:
                 self.queue.requeue(handle)
@@ -213,14 +349,23 @@ class Scheduler:
 
     def metrics(self) -> dict:
         """The serving metrics snapshot (latency percentiles, throughput,
-        bucket fill, cache stats) plus scheduler state."""
+        bucket fill, cache stats) plus scheduler + queue lifecycle state
+        (admission/deadline/backoff/quarantine counters)."""
         out = self.metrics_.snapshot()
         out["wave_size"] = self.wave_size
         out["effective_wave_size"] = self.effective_wave_size()
         out["pending"] = len(self.queue)
+        out["expired"] = self.queue.expired
+        out["rejected"] = self.queue.rejected
+        out["shed"] = self.queue.shed
+        out["buckets_in_backoff"] = sum(
+            1 for _, release in self._backoff.values()
+            if release > time.perf_counter())
         if self.straggler is not None:
             out["straggler_quorum_fraction"] = \
                 self.straggler.quorum_fraction
         if self.injector is not None:
             out["injected_failures"] = self.injector.injected
+        if self.faults is not None:
+            out["fault_injections"] = self.faults.injected
         return out

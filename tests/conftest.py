@@ -41,6 +41,16 @@ except ModuleNotFoundError:
         return deco
 
 
+def pytest_configure(config):
+    # the chaos suite marks per-test timeouts; register the marker so the
+    # suite is warning-clean when pytest-timeout (requirements-dev.txt,
+    # used by CI) is not installed locally — without the plugin the
+    # marker is inert, with it each chaos test gets a hang watchdog
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test watchdog (pytest-timeout plugin)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

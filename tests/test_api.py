@@ -15,10 +15,12 @@ PUBLIC_API = [
     "Fused",
     "Problem",
     "Sequential",
+    "NonFiniteResult",
     "SolveRequest",
     "SolveResult",
     "Strategy",
     "engine_signature",
+    "result_is_finite",
     "solve",
     "solve_many",
     "strategy_names",
@@ -91,13 +93,17 @@ def test_objective_registry_snapshot():
 # (SolveResult docstring) — drift must fail here, not in a dashboard
 # ---------------------------------------------------------------------------
 
+# every strategy additionally stamps the result-hygiene flag "finite"
+# (solve()'s on_nonfinite policy; see SolveResult docstring)
 EXTRAS_CONTRACT = {
-    "sequential": {"bits", "evaluations", "raw_trace"},
-    "fused": {"bits", "evaluations"},
-    "clustered": {"bits", "evaluations", "cluster_values", "winner"},
-    "distributed": {"bits", "bits_resolution", "history", "schedule"},
+    "sequential": {"bits", "evaluations", "raw_trace", "finite"},
+    "fused": {"bits", "evaluations", "finite"},
+    "clustered": {"bits", "evaluations", "cluster_values", "winner",
+                  "finite"},
+    "distributed": {"bits", "bits_resolution", "history", "schedule",
+                    "finite"},
     "batched": {"bits", "values", "restart_iterations", "trace", "best",
-                "schedule"},
+                "schedule", "finite"},
 }
 
 
@@ -125,7 +131,8 @@ def test_solveresult_extras_contract_per_strategy():
 def test_solve_many_extras_contract():
     req = core.SolveRequest("quadratic", seed=0, max_iters=8)
     (res,) = core.solve_many([req], pad_to=2)
-    assert set(res.extras) == {"bits", "schedule", "wave_slot", "wave_size"}
+    assert set(res.extras) == {"bits", "schedule", "wave_slot", "wave_size",
+                               "finite"}
 
 
 def test_signature_problems_add_problem_signature_extra():

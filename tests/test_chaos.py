@@ -1,0 +1,401 @@
+"""The chaos harness: scripted FaultPlans drive the full serving loop.
+
+The contract under fault injection (ISSUE 7 acceptance):
+
+* every submitted handle TERMINATES — completed or failed with a typed
+  error, never stuck pending;
+* every completed (and un-corrupted) result is BITWISE identical to the
+  fault-free path — retries, backoff, bisected probe waves and padded
+  widths must not perturb a single bit of the math;
+* no wave is ever dispatched containing an expired request — deadlines
+  fail fast at the queue, not inside a compiled while_loop.
+
+Every plan here is deterministic (decisions are pure functions of
+``(seed, kind, index)``), so these tests replay identically — no flaky
+"chaos".  ``pytest.mark.timeout`` is the hang watchdog under the CI
+pytest-timeout plugin (the marker is inert without it, see conftest).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.solver import (
+    NonFiniteResult, Problem, SolveRequest, solve, solve_many,
+)
+from repro.runtime.failure import FaultPlan, PoisonError, SimulatedFailure
+from repro.serving import (
+    DeadlineExceeded, DispatchFailed, QueueFull, RequestQueue, Scheduler,
+)
+
+pytestmark = pytest.mark.timeout(300)
+
+MAX_ITERS = 8
+
+
+@pytest.fixture(scope="module")
+def problems():
+    return {
+        "rastrigin": Problem.get("rastrigin", n=2),
+        "quadratic": Problem.get("quadratic", n=3),
+    }
+
+
+def _reference(req):
+    """The fault-free result of ``req`` (the parity baseline)."""
+    (res,) = solve_many([req])
+    return res
+
+
+def _assert_bitwise(handle, ref):
+    res = handle.result()
+    assert float(res.best_f) == float(ref.best_f), handle
+    assert np.array_equal(np.asarray(res.best_x),
+                          np.asarray(ref.best_x)), handle
+    assert res.iterations == ref.iterations, handle
+    assert np.array_equal(np.asarray(res.trace),
+                          np.asarray(ref.trace)), handle
+
+
+# ---------------------------------------------------------------------------
+# the acceptance run: mixed faults at >= 20% injection rates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(240)
+def test_chaos_mixed_faults_all_handles_terminate_bitwise(problems):
+    """ACCEPTANCE: 25% dispatch errors + 25% latency spikes + a poison
+    request + a persistently-corrupting request, all at once.  Every
+    handle terminates; completions match the fault-free run bitwise."""
+    plan = FaultPlan(seed=7, dispatch_error_rate=0.25, latency_rate=0.25,
+                     latency_s=0.002, error_dispatches={1},
+                     latency_dispatches={3}, max_failures=8)
+    sched = Scheduler(wave_size=4, faults=plan, max_retries=2,
+                      retry_backoff_s=0.001, backoff_cap_s=0.01)
+    reqs = [SolveRequest(problems["rastrigin" if i % 3 else "quadratic"],
+                         seed=100 + i, max_iters=MAX_ITERS)
+            for i in range(12)]
+    handles = [sched.submit(r) for r in reqs]
+    # scripted per-request faults on real sequence numbers: one poison
+    # (fails every wave containing it) + one persistent result corruptor
+    plan.poison_seqs = frozenset({handles[5].seq})
+    plan.nonfinite_seqs = frozenset({handles[8].seq})
+    sched.drain()
+
+    assert all(h.done() for h in handles), "every handle terminates"
+    assert plan.injected_errors >= 1 and plan.injected_poison >= 1
+    poisoned = handles[5]
+    assert isinstance(poisoned.error, DispatchFailed)
+    assert isinstance(poisoned.error.__cause__, PoisonError)
+    corrupted = handles[8]
+    assert corrupted.error is None
+    assert corrupted.result().extras["finite"] is False
+    assert np.isnan(float(corrupted.result().best_f))
+    for i, (h, req) in enumerate(zip(handles, reqs)):
+        if i in (5, 8):
+            continue
+        # survivors may have ridden failed/bisected/padded waves — the
+        # math must not know: bitwise parity with the fault-free path
+        assert h.error is None, h
+        _assert_bitwise(h, _reference(req))
+    m = sched.metrics()
+    assert m["fault_injections"] == plan.injected > 0
+    assert m["completed"] == 11 and m["failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines: expired requests never reach a wave
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_expired_requests_never_occupy_wave_slots(problems):
+    sched = Scheduler(wave_size=4)
+    doomed = [sched.submit(SolveRequest(problems["rastrigin"], seed=s,
+                                        max_iters=MAX_ITERS,
+                                        deadline_s=0.001))
+              for s in (1, 2)]
+    live = [sched.submit(SolveRequest(problems["rastrigin"], seed=s,
+                                      max_iters=MAX_ITERS))
+            for s in (3, 4)]
+    time.sleep(0.01)                        # both deadlines lapse queued
+    sched.drain()
+    for h in doomed:
+        assert h.done() and isinstance(h.error, DeadlineExceeded)
+        with pytest.raises(DeadlineExceeded):
+            h.result()
+    for h in live:
+        assert h.done() and h.error is None
+    m = sched.metrics()
+    assert m["expired"] == 2
+    # the proof: one wave, exactly the two live requests in its active
+    # slots — the expired pair held no slot (padding is inactive slots)
+    assert m["waves"] == 1
+    assert m["slots"] - m["padded_slots"] == 2
+
+
+@pytest.mark.timeout(120)
+def test_deadline_aware_bucket_selection(problems):
+    """A deadline-carrying request's bucket is served ahead of the
+    front-of-queue bucket, even when the front has higher priority."""
+    q = RequestQueue()
+    sched = Scheduler(q, wave_size=2)
+    q.submit(SolveRequest(problems["rastrigin"], seed=1, priority=5))
+    urgent = q.submit(SolveRequest(problems["quadratic"], seed=2,
+                                   deadline_s=60.0))
+    bucket = q.pop_bucket(2, key=sched.signature, token=sched)
+    assert bucket == [urgent]
+
+
+def test_result_wait_respects_deadline(problems):
+    """result() on an in-flight handle fails at the deadline instead of
+    blocking past it (nobody is serving this queue)."""
+    q = RequestQueue()
+    h = q.submit(SolveRequest(problems["rastrigin"], deadline_s=0.02))
+    t0 = time.perf_counter()
+    with pytest.raises(DeadlineExceeded):
+        h.result()
+    assert time.perf_counter() - t0 < 5.0
+    assert h.done()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_reject(problems):
+    q = RequestQueue(capacity=2)
+    q.submit(SolveRequest(problems["rastrigin"], seed=1))
+    q.submit(SolveRequest(problems["rastrigin"], seed=2))
+    with pytest.raises(QueueFull):
+        q.submit(SolveRequest(problems["rastrigin"], seed=3))
+    assert len(q) == 2 and q.rejected == 1
+
+
+def test_admission_shed_lowest_priority(problems):
+    q = RequestQueue(capacity=2, admission="shed-lowest-priority")
+    keep = q.submit(SolveRequest(problems["rastrigin"], seed=1, priority=3))
+    victim = q.submit(SolveRequest(problems["rastrigin"], seed=2,
+                                   priority=0))
+    hi = q.submit(SolveRequest(problems["rastrigin"], seed=3, priority=5))
+    # the lowest-priority queued request was evicted, ITS handle failed
+    assert victim.done() and isinstance(victim.error, QueueFull)
+    assert q.shed == 1 and len(q) == 2
+    assert q.pop_bucket(2) == [hi, keep]
+    # an arrival that does not beat the lowest queued priority is itself
+    # the victim: rejected, nothing evicted
+    q2 = RequestQueue(capacity=1, admission="shed-lowest-priority")
+    q2.submit(SolveRequest(problems["rastrigin"], seed=4, priority=1))
+    with pytest.raises(QueueFull):
+        q2.submit(SolveRequest(problems["rastrigin"], seed=5, priority=1))
+    assert q2.rejected == 1 and q2.shed == 0 and len(q2) == 1
+
+
+def test_admission_block_backpressure(problems):
+    q = RequestQueue(capacity=1, admission="block", block_timeout_s=0.05)
+    q.submit(SolveRequest(problems["rastrigin"], seed=1))
+    # no consumer: the blocked submit times out into QueueFull
+    with pytest.raises(QueueFull):
+        q.submit(SolveRequest(problems["rastrigin"], seed=2))
+    assert q.rejected == 1
+    # with a consumer freeing a slot, the blocked submitter gets through
+    q2 = RequestQueue(capacity=1, admission="block", block_timeout_s=5.0)
+    q2.submit(SolveRequest(problems["rastrigin"], seed=3))
+    popper = threading.Timer(0.02, lambda: q2.pop_bucket(1))
+    popper.start()
+    try:
+        h = q2.submit(SolveRequest(problems["rastrigin"], seed=4))
+    finally:
+        popper.join()
+    assert not h.done() and len(q2) == 1
+
+
+def test_expired_requests_do_not_hold_capacity(problems):
+    """Admission purges expired entries before refusing an arrival."""
+    q = RequestQueue(capacity=1)
+    dead = q.submit(SolveRequest(problems["rastrigin"], seed=1,
+                                 deadline_s=0.001))
+    time.sleep(0.01)
+    fresh = q.submit(SolveRequest(problems["rastrigin"], seed=2))
+    assert isinstance(dead.error, DeadlineExceeded)
+    assert q.expired == 1 and q.rejected == 0
+    assert q.pop_bucket(1) == [fresh]
+
+
+# ---------------------------------------------------------------------------
+# backoff: a persistently failing bucket must not spin hot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_backoff_sleeps_instead_of_spinning(problems):
+    from repro.runtime.failure import FailureInjector
+    sched = Scheduler(wave_size=2, injector=FailureInjector(rate=1.0),
+                      max_retries=2, retry_backoff_s=0.01,
+                      backoff_cap_s=0.05, seed=3)
+    h = sched.submit(SolveRequest(problems["rastrigin"], seed=9,
+                                  max_iters=MAX_ITERS))
+    t0 = time.perf_counter()
+    sched.drain()
+    elapsed = time.perf_counter() - t0
+    assert h.done() and isinstance(h.error, DispatchFailed)
+    assert isinstance(h.error.__cause__, SimulatedFailure)
+    # exactly initial + max_retries dispatches — backoff gated the loop
+    # to 3 attempts, no hot-spin burning dispatches between releases
+    assert sched._dispatches == 3
+    m = sched.metrics()
+    assert m["failed_waves"] == 3 and m["backoff_s"] > 0
+    assert elapsed >= m["backoff_s"] * 0.5
+
+
+@pytest.mark.timeout(120)
+def test_faultplan_max_failures_allows_recovery(problems):
+    """rate=1.0 capped at 2 injections: the request rides out both
+    failures on its retry budget and then completes normally."""
+    plan = FaultPlan(seed=1, dispatch_error_rate=1.0, max_failures=2)
+    sched = Scheduler(wave_size=2, faults=plan, max_retries=2,
+                      retry_backoff_s=0.0)
+    req = SolveRequest(problems["rastrigin"], seed=17, max_iters=MAX_ITERS)
+    h = sched.submit(req)
+    assert sched.drain() == 1
+    assert h.error is None and h.retries == 2
+    assert plan.injected_errors == 2
+    _assert_bitwise(h, _reference(req))
+
+
+# ---------------------------------------------------------------------------
+# quarantine: bisection isolates poison without charging wave-mates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(240)
+def test_quarantine_bisection_isolates_poison(problems):
+    plan = FaultPlan(seed=0)
+    sched = Scheduler(wave_size=4, faults=plan, max_retries=2,
+                      retry_backoff_s=0.0)
+    reqs = [SolveRequest(problems["rastrigin"], seed=40 + i,
+                         max_iters=MAX_ITERS) for i in range(4)]
+    handles = [sched.submit(r) for r in reqs]
+    plan.poison_seqs = frozenset({handles[2].seq})
+    sched.drain()
+    poisoned = handles[2]
+    assert isinstance(poisoned.error, DispatchFailed)
+    assert isinstance(poisoned.error.__cause__, PoisonError)
+    assert poisoned.error.__cause__.seq == poisoned.seq
+    # the poison burned ONLY its own budget: charged retries happen at
+    # unsplittable width-1 probes, so the mates rode the failed waves
+    # for free and completed with untouched budgets
+    for i, h in enumerate(handles):
+        if i == 2:
+            continue
+        assert h.error is None and h.retries == 0, h
+        _assert_bitwise(h, _reference(reqs[i]))
+    m = sched.metrics()
+    assert m["bisected_waves"] >= 1
+    assert m["completed"] == 3 and m["failed"] == 1
+
+
+@pytest.mark.timeout(120)
+def test_quarantine_off_charges_whole_bucket(problems):
+    """quarantine=False is the control: the whole bucket burns retries
+    together and every member fails once the budget is gone."""
+    plan = FaultPlan(seed=0)
+    sched = Scheduler(wave_size=2, faults=plan, max_retries=1,
+                      retry_backoff_s=0.0, quarantine=False)
+    handles = [sched.submit(SolveRequest(problems["rastrigin"], seed=50 + i,
+                                         max_iters=MAX_ITERS))
+               for i in range(2)]
+    plan.poison_seqs = frozenset({handles[0].seq})
+    sched.drain()
+    for h in handles:
+        assert isinstance(h.error, DispatchFailed)
+        assert h.retries == 2
+
+
+# ---------------------------------------------------------------------------
+# result hygiene: non-finite detection on every path
+# ---------------------------------------------------------------------------
+
+def _nan_problem(problems):
+    import jax.numpy as jnp
+    base = problems["quadratic"]
+    return base.replace(fn=lambda x: jnp.sum(x) * jnp.float32(jnp.nan),
+                        name="nanprob")
+
+
+@pytest.mark.timeout(120)
+def test_solve_flags_nonfinite_results(problems):
+    import jax.numpy as jnp
+    from repro.core.solver import Fused, result_is_finite
+    prob = _nan_problem(problems)
+    x0 = jnp.asarray([1.0, 2.0, 3.0])
+    res = solve(prob, Fused(max_bits=8), x0=x0, max_iters=4)
+    assert res.extras["finite"] is False
+    assert not result_is_finite(res)
+    with pytest.raises(NonFiniteResult) as ei:
+        solve(prob, Fused(max_bits=8), x0=x0, max_iters=4,
+              on_nonfinite="raise")
+    assert not result_is_finite(ei.value.result)
+    # the finite case flags True on the same path
+    ok = solve(problems["quadratic"], Fused(max_bits=8), x0=x0, max_iters=4)
+    assert ok.extras["finite"] is True
+
+
+@pytest.mark.timeout(120)
+def test_scheduler_on_nonfinite_raise_fails_only_that_handle(problems):
+    plan = FaultPlan(seed=0)
+    sched = Scheduler(wave_size=2, faults=plan, on_nonfinite="raise",
+                      retry_backoff_s=0.0)
+    reqs = [SolveRequest(problems["rastrigin"], seed=60 + i,
+                         max_iters=MAX_ITERS) for i in range(2)]
+    handles = [sched.submit(r) for r in reqs]
+    plan.nonfinite_seqs = frozenset({handles[0].seq})
+    sched.drain()
+    assert isinstance(handles[0].error, NonFiniteResult)
+    assert np.isnan(float(handles[0].error.result.best_f))
+    assert handles[1].error is None
+    _assert_bitwise(handles[1], _reference(reqs[1]))
+    m = sched.metrics()
+    assert m["nonfinite_results"] == 1 and m["failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# plan determinism
+# ---------------------------------------------------------------------------
+
+def test_faultplan_is_deterministic_and_seeded():
+    a = FaultPlan(seed=11, dispatch_error_rate=0.5, nonfinite_rate=0.5)
+    b = FaultPlan(seed=11, dispatch_error_rate=0.5, nonfinite_rate=0.5)
+    c = FaultPlan(seed=12, dispatch_error_rate=0.5, nonfinite_rate=0.5)
+    rolls_a = [a.corrupts_result(s) for s in range(200)]
+    rolls_b = [b.corrupts_result(s) for s in range(200)]
+    rolls_c = [c.corrupts_result(s) for s in range(200)]
+    assert rolls_a == rolls_b                   # same seed -> same plan
+    assert rolls_a != rolls_c                   # seeded, not degenerate
+    assert 60 <= sum(rolls_a) <= 140            # ~Bernoulli(0.5)
+    # dispatch decisions are index-keyed, not call-order-keyed: polling
+    # out of order (retries interleave) changes nothing
+    fires = []
+    for plan in (FaultPlan(seed=3, dispatch_error_rate=0.5),
+                 FaultPlan(seed=3, dispatch_error_rate=0.5)):
+        seen = []
+        order = list(range(50))
+        if fires:                               # second pass: shuffled
+            order = order[::-1]
+        for i in order:
+            try:
+                plan.before_dispatch(i, frozenset())
+                seen.append((i, False))
+            except SimulatedFailure:
+                seen.append((i, True))
+        fires.append(dict(seen))
+    assert fires[0] == fires[1]
+
+
+def test_faultplan_latency_spike_is_visible():
+    plan = FaultPlan(seed=0, latency_dispatches={1}, latency_s=0.03)
+    t0 = time.perf_counter()
+    plan.before_dispatch(1, frozenset())
+    spiked = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plan.before_dispatch(2, frozenset())
+    clean = time.perf_counter() - t0
+    assert spiked >= 0.03 > clean
+    assert plan.injected_latency == 1

@@ -44,6 +44,40 @@ def test_straggler_policy_masks_and_recovers():
     assert mask.tolist() == [True, True, True, True]    # recovered
 
 
+def test_straggler_cooldown_expiry_restores_full_quorum():
+    """quorum_fraction returns exactly to 1.0 once every masked shard's
+    cooldown expires — the serving scheduler keys its wave width off it,
+    so a fraction stuck below 1.0 would shrink waves forever."""
+    pol = StragglerPolicy(n_shards=4, factor=2.0, cooldown=3)
+    pol.update(np.asarray([1.0, 1.0, 1.0, 10.0]))
+    assert pol.quorum_fraction == 0.75
+    for _ in range(pol.cooldown - 1):
+        pol.update(np.ones(4))
+        assert pol.quorum_fraction < 1.0        # still cooling down
+    pol.update(np.ones(4))
+    assert pol.quorum_fraction == 1.0           # exact, not approx
+
+
+def test_drop_shard_on_minimal_quorum():
+    """Dropping the last alive shard must refuse, not return an empty
+    quorum (an all-False mask would make the device reduce meaningless)."""
+    import pytest
+
+    from repro.runtime.elastic import drop_shard
+
+    mask = drop_shard(np.asarray([True, True, False, False]))
+    assert np.asarray(mask).tolist() == [False, True, False, False]
+    minimal = np.asarray([False, True, False, False])
+    with pytest.raises(RuntimeError, match="empties the quorum"):
+        drop_shard(minimal)
+    with pytest.raises(RuntimeError, match="empties the quorum"):
+        drop_shard(minimal, victim=1)
+    with pytest.raises(RuntimeError, match="quorum already empty"):
+        drop_shard(np.zeros(4, bool))
+    # the refused drops left the caller's mask untouched (copy semantics)
+    assert minimal.tolist() == [False, True, False, False]
+
+
 def test_elastic_plan_matches_paper_formula():
     plan = elastic_population_plan(n_bits=63, n_shards=64)
     assert plan["population"] == 125

@@ -10,7 +10,7 @@ from repro.core.solver import (
 )
 from repro.runtime.failure import FailureInjector, SimulatedFailure
 from repro.runtime.straggler import StragglerPolicy
-from repro.serving import RequestQueue, Scheduler, percentile
+from repro.serving import DispatchFailed, RequestQueue, Scheduler, percentile
 from repro.serving.metrics import ServingMetrics
 
 MAX_ITERS = 24
@@ -249,13 +249,18 @@ def test_scheduler_requeues_and_recovers_after_injected_failure(problems):
 
 def test_scheduler_fails_request_after_retry_budget(problems):
     sched = Scheduler(wave_size=2, injector=FailureInjector(rate=1.0),
-                      max_retries=1)
+                      max_retries=1, retry_backoff_s=0.0)
     h = sched.submit(SolveRequest(problems["rastrigin"], seed=22,
                                   max_iters=MAX_ITERS))
     sched.drain()
     assert h.done() and h.retries == 2      # initial try + 1 retry
-    assert isinstance(h.error, SimulatedFailure)
-    with pytest.raises(SimulatedFailure):
+    # each exhausted handle gets its OWN DispatchFailed chained from the
+    # shared dispatch error — never the same exception object across a
+    # whole bucket
+    assert isinstance(h.error, DispatchFailed)
+    assert h.error.seq == h.seq
+    assert isinstance(h.error.__cause__, SimulatedFailure)
+    with pytest.raises(DispatchFailed):
         h.result()
     assert sched.metrics()["failed"] == 1
 
@@ -274,6 +279,23 @@ def test_straggler_policy_feeds_wave_size():
     for t in [0.01] * 6:    # straggler leaves the window + cooldown decays
         sched._note_dispatch_time(t)
     assert sched.effective_wave_size() == 8
+
+
+def test_effective_wave_size_halving_sequence():
+    """Widths snap DOWN the halving ladder of wave_size as the quorum
+    fraction decays — at W=8 exactly 8 -> 4 -> 2 -> 1, never 7 or 3
+    (each distinct width is its own compiled engine per signature, so
+    free-form shrinks would answer one straggler with recompiles)."""
+
+    class _Quorum:                      # the policy surface the scheduler
+        n_shards = 8                    # reads: n_shards + quorum_fraction
+        quorum_fraction = 1.0
+
+    sched = Scheduler(wave_size=8, straggler=_Quorum())
+    expected = {1.0: 8, 0.9: 4, 0.6: 4, 0.5: 4, 0.3: 2, 0.2: 2, 0.05: 1}
+    for frac, width in expected.items():
+        sched.straggler.quorum_fraction = frac
+        assert sched.effective_wave_size() == width, frac
 
 
 # ---------------------------------------------------------------------------
