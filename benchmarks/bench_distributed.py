@@ -72,13 +72,15 @@ def run(fast: bool = True):
     reps = 5 if fast else 20
     n_dev = jax.device_count()
     mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
+    cache.clear()   # cold start so the emitted cache stats cover this run
+    #               (before Problem.get: the objective-defaults and
+    #                population-table memo rows should see the build too)
     problem = Problem.get("quadratic", n=N_VARS)
     enc = problem.encoding.with_bits(BITS)
     problem = problem.replace(encoding=enc)
     obj_fn = problem.fn
     x0 = jnp.full((N_VARS,), 5.0)
     quorum = jnp.ones((n_dev,), bool)
-    cache.clear()   # cold start so the emitted cache stats cover this run
 
     # --- absolute baseline: numpy one-child-at-a-time -----------------------
     t0 = time.perf_counter()
@@ -249,6 +251,20 @@ def run(fast: bool = True):
         ("bench_distributed.cache_uncached", cstats["uncached"],
          "unhashable-key builds (should be 0 for registry objectives)"),
     ]
+    # memo-table health: the host-side table/introspection memos that used
+    # to hide behind lru_cache (migrated in the dgolint PR) — misses flat
+    # across PRs for this fixed workload, hits >> misses once warm
+    all_stats = cache.stats()
+    for short, cname in (("population_tables", "population.tables"),
+                         ("objective_defaults",
+                          "objectives.factory_defaults")):
+        st = all_stats.get(cname, {})
+        rows.append((f"bench_distributed.cache_{short}_misses",
+                     st.get("misses", 0),
+                     f"distinct {cname} memo entries built this run"))
+        rows.append((f"bench_distributed.cache_{short}_hits",
+                     st.get("hits", 0),
+                     f"{cname} memo reuses this run"))
     return rows
 
 

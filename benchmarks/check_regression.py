@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 # gated metrics per bench family: name -> "higher" | "lower" (better)
@@ -91,7 +92,10 @@ def check(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     failures = []
     for name in REQUIRED.get(family, ()):
         row = fresh["metrics"].get(name)
-        if row is None or row.get("value") is None:
+        # a present-but-NaN/inf value is as useless to every consumer as
+        # a missing one: treat non-finite as absent
+        if (row is None or row.get("value") is None
+                or not math.isfinite(float(row["value"]))):
             failures.append(f"{name}: REQUIRED metric absent from fresh "
                             f"run (presence-asserted, not value-gated)")
         else:

@@ -14,14 +14,18 @@ same objects drive tests, benchmarks and examples.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import get_cache
 from repro.core.encoding import Encoding
+
+# introspected factory defaults, keyed by registry name (bounded +
+# instrumented: the canonical_spec hot path hits this once per lookup)
+_DEFAULTS = get_cache("objectives.factory_defaults", maxsize=128)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,10 +189,14 @@ def accepts_n(name: str) -> bool:
     return _REGISTRY[name][1]
 
 
-@functools.lru_cache(maxsize=None)
 def _factory_defaults(name: str) -> tuple:
     """(param, default) pairs of a registry factory — signatures are
-    static, so introspect once per name, not per lookup."""
+    static, so introspect once per name, not per lookup (memoized in the
+    instrumented registry so the introspection cache is observable)."""
+    return _DEFAULTS.get(name, lambda: _introspect_defaults(name))
+
+
+def _introspect_defaults(name: str) -> tuple:
     import inspect
 
     return tuple(

@@ -24,19 +24,29 @@ paper's "virtual processing"; also what the Pallas kernel tiles over).
 """
 from __future__ import annotations
 
-from functools import lru_cache
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import get_cache
 from repro.core.encoding import binary_to_gray, gray_to_binary
 
+# host-side table memo: small keys, but the schedule_tables entries hold
+# device arrays, so the registry (bounded + instrumented) replaces the
+# old unbounded lru_cache and its invisible hit/miss behaviour
+_TABLES = get_cache("population.tables", maxsize=128)
 
-@lru_cache(maxsize=None)
+
 def segment_table(n_bits: int) -> np.ndarray:
     """(2N-1, 2) int32 array of [start, end) Gray segments, preorder."""
+    n_bits = int(n_bits)
+    return _TABLES.get(("segment_table", n_bits),
+                       lambda: _build_segment_table(n_bits))
+
+
+def _build_segment_table(n_bits: int) -> np.ndarray:
     segs: list[tuple[int, int]] = []
 
     def build(lo: int, hi: int) -> None:
@@ -52,7 +62,6 @@ def segment_table(n_bits: int) -> np.ndarray:
     return table
 
 
-@lru_cache(maxsize=None)
 def segment_patterns(n_bits: int) -> np.ndarray:
     """(2N-1, N) int8: child c as a *binary-space* XOR pattern.
 
@@ -71,7 +80,16 @@ def segment_patterns(n_bits: int) -> np.ndarray:
     (``core/distributed.py`` inner="fused"); ``generate_children`` remains
     the literal three-step reference it is verified against.
     """
-    table = segment_table(n_bits)
+    n_bits = int(n_bits)
+    return _TABLES.get(("segment_patterns", n_bits),
+                       lambda: _build_segment_patterns(n_bits))
+
+
+def _build_segment_patterns(n_bits: int) -> np.ndarray:
+    # the raw builder, NOT the memoized wrapper: _TABLES.get holds the
+    # registry lock across build, so a nested get on the same cache
+    # would self-deadlock
+    table = _build_segment_table(n_bits)
     j = np.arange(n_bits)
     s, e = table[:, :1], table[:, 1:]
     inside = (j >= s) & (j < e)
@@ -184,12 +202,19 @@ class ScheduleTables(NamedTuple):
         return jnp.bitwise_xor(bits[None, :], self.patterns[res_idx, ids])
 
 
-@lru_cache(maxsize=None)
 def schedule_tables(n_vars: int, res_bits: tuple, lo: float,
                     hi: float) -> ScheduleTables:
     """Build (and memoize, one device copy per schedule signature) the
     stacked tables for a resolution schedule ``res_bits``."""
+    n_vars, lo, hi = int(n_vars), float(lo), float(hi)
     res_bits = tuple(int(b) for b in res_bits)
+    return _TABLES.get(("schedule_tables", n_vars, res_bits, lo, hi),
+                       lambda: _build_schedule_tables(n_vars, res_bits,
+                                                      lo, hi))
+
+
+def _build_schedule_tables(n_vars: int, res_bits: tuple, lo: float,
+                           hi: float) -> ScheduleTables:
     if not res_bits:
         raise ValueError("res_bits must name at least one resolution")
     n_max = n_vars * max(res_bits)
@@ -208,7 +233,9 @@ def schedule_tables(n_vars: int, res_bits: tuple, lo: float,
     i = np.arange(n_max)
     for r, b in enumerate(res_bits):
         n_bits = n_vars * b
-        pat = segment_patterns(n_bits)                   # (2*n_bits-1, n_bits)
+        # raw builder (not the memoized wrapper): nested gets on the
+        # _TABLES registry would self-deadlock — see _build_segment_patterns
+        pat = _build_segment_patterns(n_bits)            # (2*n_bits-1, n_bits)
         patterns[r, : pat.shape[0], :n_bits] = pat
         weights = 2.0 ** np.arange(b - 1, -1, -1)
         for v in range(n_vars):

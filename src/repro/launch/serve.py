@@ -43,7 +43,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -265,6 +268,38 @@ def _run_serving_loop(args, problems, rps: float | None):
     return sched, handles, wall_s, submitted
 
 
+def _warn_unwritable_tile_cache() -> None:
+    """Surface (once, at startup) a ``REPRO_POPSTEP_TILE_CACHE`` pointing
+    at an unwritable location.  The popstep autotuner tolerates the
+    failed write silently — correct for the hot path — but an operator
+    who set the env var expects persistence, and without this warning
+    the only symptom is a re-tune on every process start."""
+    target = os.environ.get("REPRO_POPSTEP_TILE_CACHE")
+    if not target:
+        return
+    probe = Path(target)
+    # writability of the file == writability of the nearest existing
+    # ancestor (the autotuner creates missing parent dirs); an ancestor
+    # that exists but is a regular file blocks creation outright
+    anc = probe if probe.exists() else probe.parent
+    while not anc.exists() and anc != anc.parent:
+        anc = anc.parent
+    if anc == probe:
+        writable = os.access(probe, os.W_OK)
+    elif anc.is_dir():
+        writable = os.access(anc, os.W_OK | os.X_OK)
+    else:
+        writable = False
+    if not writable:
+        print(f"warning: REPRO_POPSTEP_TILE_CACHE={target!r} is not "
+              f"writable ({anc} denies write access); tile autotune "
+              f"results will stay in-process only and every restart "
+              f"re-tunes. Fix the path/permissions, or unset the "
+              f"variable to accept the in-process cache (suppression "
+              f"policy: README 'Static analysis' / tools/dgolint).",
+              file=sys.stderr)
+
+
 def serve_dgo(args) -> None:
     """Serve DGO requests through the serving subsystem.
 
@@ -283,6 +318,7 @@ def serve_dgo(args) -> None:
         raise SystemExit(f"--rps must be > 0, got {args.rps}")
     if (args.rps is not None or args.sweep_rps) and args.duration <= 0:
         raise SystemExit(f"--duration must be > 0, got {args.duration}")
+    _warn_unwritable_tile_cache()
     problems = _parse_problem_specs(args)
 
     if args.sweep_rps:

@@ -138,16 +138,21 @@ class RequestHandle:
                     f"({self.request.deadline_s}s after submit)"))
             else:
                 raise TimeoutError(f"request {self.seq} not done")
-        if self.error is not None:
-            raise self.error
-        return self._result
+        # the event is set, but take the terminal lock anyway: a _fail
+        # racing a _complete publishes error/result/completed_at as one
+        # atomic terminal state, and readers must observe it that way
+        with self._terminal_lock:
+            if self.error is not None:
+                raise self.error
+            return self._result
 
     @property
     def latency_s(self) -> float | None:
         """Submit-to-completion wall seconds (None while in flight)."""
-        if self.completed_at is None:
-            return None
-        return self.completed_at - self.submitted_at
+        with self._terminal_lock:
+            if self.completed_at is None:
+                return None
+            return self.completed_at - self.submitted_at
 
     def _complete(self, result: SolveResult) -> None:
         # first terminal state wins: a completion racing a deadline/shed
@@ -168,6 +173,9 @@ class RequestHandle:
             self._event.set()
 
     def __repr__(self):
+        # intentionally racy snapshot: repr must never block on (or
+        # deadlock with) a terminal transition in flight
+        # dgolint: disable=DGL005
         state = ("failed" if self.error is not None
                  else "done" if self.done() else "pending")
         name = getattr(self.request.problem, "name", self.request.problem)
@@ -282,12 +290,12 @@ class RequestQueue:
             return 0
         for entry in dead:
             self._heap.remove(entry)
-            self._fail_expired(entry[2])
+            self._fail_expired_locked(entry[2])
         heapq.heapify(self._heap)
         self._space.notify_all()
         return len(dead)
 
-    def _fail_expired(self, handle: RequestHandle) -> None:
+    def _fail_expired_locked(self, handle: RequestHandle) -> None:
         self.expired += 1
         handle._fail(DeadlineExceeded(
             f"request {handle.seq} missed its deadline "

@@ -1,0 +1,154 @@
+"""Edge-case pins for benchmarks/check_regression.py: REQUIRED metric
+present-but-NaN, GATED ratios exactly at the tolerance boundary, and
+--tolerance override parsing.  Loads the script via importlib (the
+benchmarks/ directory is not a package) — no JAX needed."""
+from __future__ import annotations
+
+import importlib.util
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "check_regression", REPO_ROOT / "benchmarks" / "check_regression.py")
+cr = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(cr)
+
+
+def artifact(bench: str, metrics: dict) -> dict:
+    return {"bench": bench,
+            "metrics": {k: {"value": v} for k, v in metrics.items()}}
+
+
+def dump(tmp_path: Path, name: str, payload: dict) -> str:
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+GATE_METRIC = "bench_subspace.wave_over_sequential"   # the one gated
+REQ_METRIC = "bench_serving.p99_latency_s"            # the one required
+
+
+# ---------------------------------------------------------------------------
+# REQUIRED presence: present-but-NaN must fail like absent
+# ---------------------------------------------------------------------------
+
+def test_required_metric_nan_fails():
+    base = artifact("serving", {"bench_serving.bucketed_over_per_request": 2.0,
+                                "bench_serving.degraded_over_bucketed": 2.0})
+    fresh = artifact("serving", {
+        "bench_serving.bucketed_over_per_request": 2.0,
+        "bench_serving.degraded_over_bucketed": 2.0,
+        REQ_METRIC: math.nan,
+    })
+    failures = cr.check(base, fresh, 1.5)
+    assert any(REQ_METRIC in f and "absent" in f for f in failures)
+
+
+def test_required_metric_inf_fails():
+    base = artifact("serving", {"bench_serving.bucketed_over_per_request": 2.0,
+                                "bench_serving.degraded_over_bucketed": 2.0})
+    fresh = artifact("serving", {
+        "bench_serving.bucketed_over_per_request": 2.0,
+        "bench_serving.degraded_over_bucketed": 2.0,
+        REQ_METRIC: math.inf,
+    })
+    failures = cr.check(base, fresh, 1.5)
+    assert any(REQ_METRIC in f for f in failures)
+
+
+def test_required_metric_finite_passes():
+    base = artifact("serving", {"bench_serving.bucketed_over_per_request": 2.0,
+                                "bench_serving.degraded_over_bucketed": 2.0})
+    fresh = artifact("serving", {
+        "bench_serving.bucketed_over_per_request": 2.0,
+        "bench_serving.degraded_over_bucketed": 2.0,
+        REQ_METRIC: 0.125,
+    })
+    assert cr.check(base, fresh, 1.5) == []
+
+
+def test_required_metric_missing_fails():
+    base = artifact("serving", {"bench_serving.bucketed_over_per_request": 2.0,
+                                "bench_serving.degraded_over_bucketed": 2.0})
+    fresh = artifact("serving", {
+        "bench_serving.bucketed_over_per_request": 2.0,
+        "bench_serving.degraded_over_bucketed": 2.0,
+    })
+    failures = cr.check(base, fresh, 1.5)
+    assert any(REQ_METRIC in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# GATED boundary: fresh == baseline / tolerance passes exactly
+# ---------------------------------------------------------------------------
+
+def test_gated_higher_better_exact_boundary_passes():
+    base = artifact("subspace", {GATE_METRIC: 3.0})
+    fresh = artifact("subspace", {GATE_METRIC: 3.0 / 1.5})
+    assert cr.check(base, fresh, 1.5) == []
+
+
+def test_gated_higher_better_just_below_boundary_fails():
+    base = artifact("subspace", {GATE_METRIC: 3.0})
+    fresh = artifact("subspace", {GATE_METRIC: 3.0 / 1.5 - 1e-9})
+    failures = cr.check(base, fresh, 1.5)
+    assert len(failures) == 1 and GATE_METRIC in failures[0]
+
+
+def test_gated_lower_better_exact_boundary_passes():
+    metrics = {name: 2.0 for name in cr.GATED["distributed"]}
+    base = artifact("distributed", metrics)
+    fresh_metrics = dict(metrics)
+    fresh_metrics["bench_distributed.batched_over_single"] = 2.0 * 1.5
+    fresh = artifact("distributed", fresh_metrics)
+    assert cr.check(base, fresh, 1.5) == []
+    fresh_metrics["bench_distributed.batched_over_single"] = 2.0 * 1.5 + 1e-9
+    failures = cr.check(base, artifact("distributed", fresh_metrics), 1.5)
+    assert len(failures) == 1
+    assert "batched_over_single" in failures[0]
+
+
+def test_gated_nan_fresh_value_fails():
+    base = artifact("subspace", {GATE_METRIC: 3.0})
+    fresh = artifact("subspace", {GATE_METRIC: math.nan})
+    failures = cr.check(base, fresh, 1.5)
+    assert len(failures) == 1 and GATE_METRIC in failures[0]
+
+
+# ---------------------------------------------------------------------------
+# --tolerance override parsing (through main)
+# ---------------------------------------------------------------------------
+
+def test_tolerance_override_loosens_gate(tmp_path):
+    base = dump(tmp_path, "base.json", artifact("subspace", {GATE_METRIC: 4.0}))
+    fresh = dump(tmp_path, "fresh.json",
+                 artifact("subspace", {GATE_METRIC: 2.2}))
+    # 4.0 -> 2.2 is a 1.82x slowdown: fails at the default 1.5x ...
+    assert cr.main(["--baseline", base, "--fresh", fresh]) == 1
+    # ... and passes with an explicit --tolerance 2.0
+    assert cr.main(["--baseline", base, "--fresh", fresh,
+                    "--tolerance", "2.0"]) == 0
+
+
+@pytest.mark.parametrize("tol", ["1.0", "0.5", "-2"])
+def test_tolerance_must_exceed_one(tmp_path, tol):
+    base = dump(tmp_path, "base.json", artifact("subspace", {GATE_METRIC: 4.0}))
+    fresh = dump(tmp_path, "fresh.json", artifact("subspace", {GATE_METRIC: 4.0}))
+    with pytest.raises(SystemExit) as exc:
+        cr.main(["--baseline", base, "--fresh", fresh, "--tolerance", tol])
+    assert exc.value.code == 2  # argparse usage error
+
+
+def test_tolerance_non_numeric_is_usage_error(tmp_path):
+    base = dump(tmp_path, "base.json", artifact("subspace", {GATE_METRIC: 4.0}))
+    fresh = dump(tmp_path, "fresh.json", artifact("subspace", {GATE_METRIC: 4.0}))
+    with pytest.raises(SystemExit) as exc:
+        cr.main(["--baseline", base, "--fresh", fresh,
+                 "--tolerance", "fast"])
+    assert exc.value.code == 2

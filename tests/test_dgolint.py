@@ -1,0 +1,507 @@
+"""Self-tests for tools/dgolint: every rule fires on a known-bad
+fixture and stays silent on a known-good one, plus the suppression,
+baseline, and CLI mechanics.  Pure stdlib — no JAX import."""
+from __future__ import annotations
+
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.dgolint import (  # noqa: E402
+    Finding,
+    lint_paths,
+    match_baseline,
+)
+from tools.dgolint.cli import main as cli_main  # noqa: E402
+
+
+def write(root: Path, rel: str, body: str) -> Path:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(body))
+    return p
+
+
+def codes(findings) -> list[str]:
+    return [f.code for f in findings]
+
+
+def run(root: Path, *paths: str, select: str | None = None):
+    sel = {c for c in select.split(",")} if select else None
+    return lint_paths(list(paths) or ["."], root=root, select=sel)
+
+
+# ---------------------------------------------------------------------------
+# DGL001 compat-bypass
+# ---------------------------------------------------------------------------
+
+def test_dgl001_flags_direct_imports(tmp_path):
+    write(tmp_path, "pkg/bad.py", """\
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import AxisType, Mesh
+        import jax.experimental.shard_map
+    """)
+    findings, _ = run(tmp_path, "pkg", select="DGL001")
+    assert codes(findings) == ["DGL001"] * 3
+    assert "shard_map" in findings[0].message
+
+
+def test_dgl001_flags_attribute_use(tmp_path):
+    write(tmp_path, "pkg/bad.py", """\
+        import jax
+
+        def mk():
+            return jax.sharding.AbstractMesh((), ())
+
+        size = jax.lax.axis_size
+    """)
+    findings, _ = run(tmp_path, "pkg", select="DGL001")
+    assert codes(findings) == ["DGL001", "DGL001"]
+
+
+def test_dgl001_clean_via_compat_and_exempts_compat_itself(tmp_path):
+    write(tmp_path, "pkg/good.py", """\
+        from repro.compat import shard_map, abstract_mesh
+
+        def run(f, mesh):
+            return shard_map(f, mesh=mesh)
+    """)
+    # the shim itself is the one sanctioned site
+    write(tmp_path, "src/repro/compat.py", """\
+        from jax.sharding import AxisType
+    """)
+    findings, _ = run(tmp_path, "pkg", "src", select="DGL001")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# DGL002 rogue memoization
+# ---------------------------------------------------------------------------
+
+def test_dgl002_flags_lru_cache_and_dict_memo(tmp_path):
+    write(tmp_path, "pkg/bad.py", """\
+        import functools
+        from functools import lru_cache
+
+        @lru_cache(maxsize=None)
+        def table(n):
+            return n
+
+        @functools.cache
+        def other(n):
+            return n
+
+        _ENGINES = {}
+
+        def engine(spec):
+            if spec not in _ENGINES:
+                _ENGINES[spec] = jax.jit(make_engine(spec))
+            return _ENGINES[spec]
+    """)
+    findings, _ = run(tmp_path, "pkg", select="DGL002")
+    # lru_cache import + functools.cache attribute + dict memo store
+    assert codes(findings) == ["DGL002"] * 3
+    assert any("_ENGINES" in f.message for f in findings)
+
+
+def test_dgl002_good_patterns_are_clean(tmp_path):
+    write(tmp_path, "pkg/good.py", """\
+        from repro.core.cache import get_cache
+
+        _CACHE = get_cache("pkg.engines", maxsize=32)
+
+        # plain data tables are not memoized compiled callables
+        _TILE_CACHE = {}
+
+        def remember(key, tile):
+            _TILE_CACHE[key] = int(tile)
+
+        def engine(spec):
+            return _CACHE.get(spec, lambda: build(spec))
+    """)
+    # core/cache.py itself may use whatever it wants
+    write(tmp_path, "core/cache.py", """\
+        from functools import lru_cache
+    """)
+    findings, _ = run(tmp_path, "pkg", "core", select="DGL002")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# DGL003 trace leak
+# ---------------------------------------------------------------------------
+
+def test_dgl003_flags_host_sync_in_loop_body(tmp_path):
+    write(tmp_path, "pkg/bad.py", """\
+        import jax
+        import numpy as np
+
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            x = state[0]
+            stall = float(x)          # host sync on a traced value
+            arr = np.asarray(x)       # and another
+            return (x, stall < 1.0)
+
+        def run(s0):
+            return jax.lax.while_loop(cond, body, s0)
+    """)
+    findings, _ = run(tmp_path, "pkg", select="DGL003")
+    assert codes(findings) == ["DGL003", "DGL003"]
+    assert "float()" in findings[0].message
+
+
+def test_dgl003_follows_call_edges(tmp_path):
+    write(tmp_path, "pkg/bad.py", """\
+        import jax
+
+        def helper(y):
+            return y.item()           # reachable from the jitted root
+
+        @jax.jit
+        def step(x):
+            return helper(x + 1)
+    """)
+    findings, _ = run(tmp_path, "pkg", select="DGL003")
+    assert codes(findings) == ["DGL003"]
+    assert ".item()" in findings[0].message
+
+
+def test_dgl003_static_argnames_and_host_code_are_clean(tmp_path):
+    write(tmp_path, "pkg/good.py", """\
+        from functools import partial
+
+        import jax
+
+        @partial(jax.jit, static_argnames=("bits",))
+        def quantize(x, bits):
+            scale = float(2**bits - 1)   # static param: host-safe
+            return x * scale
+
+        def body(state):
+            return state
+
+        def run(s0):
+            return jax.lax.while_loop(lambda s: True, body, s0)
+
+        def postprocess(result):
+            # NOT reachable from any compiled body: float() is fine here
+            return float(result[0])
+    """)
+    findings, _ = run(tmp_path, "pkg", select="DGL003")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# DGL004 nondeterminism
+# ---------------------------------------------------------------------------
+
+def test_dgl004_flags_wall_clock_and_unseeded_rng(tmp_path):
+    write(tmp_path, "serving/bad.py", """\
+        import random
+        import time
+
+        import numpy as np
+
+        def jitter():
+            now = time.time()
+            rng = np.random.default_rng()
+            return now + random.random() + np.random.normal()
+    """)
+    findings, _ = run(tmp_path, "serving", select="DGL004")
+    assert codes(findings) == ["DGL004"] * 4
+
+
+def test_dgl004_seeded_and_monotonic_are_clean(tmp_path):
+    write(tmp_path, "runtime/good.py", """\
+        import time
+
+        import numpy as np
+
+        def plan(seed, kind, index):
+            rng = np.random.default_rng((seed, hash(kind), index))
+            t0 = time.monotonic()
+            return rng.normal(), time.perf_counter() - t0
+    """)
+    findings, _ = run(tmp_path, "runtime", select="DGL004")
+    assert findings == []
+
+
+def test_dgl004_out_of_scope_dirs_ignored(tmp_path):
+    write(tmp_path, "benchtools/clock.py", """\
+        import time
+
+        def stamp():
+            return time.time()
+    """)
+    findings, _ = run(tmp_path, "benchtools", select="DGL004")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# DGL005 lock discipline
+# ---------------------------------------------------------------------------
+
+_Q_BAD = """\
+    import threading
+
+    class Queue:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0
+
+        def add(self):
+            with self._lock:
+                self.count += 1
+
+        def peek(self):
+            return self.count
+
+        def _drain_locked(self):
+            return self.count
+"""
+
+
+def test_dgl005_flags_unlocked_read(tmp_path):
+    write(tmp_path, "serving/q.py", _Q_BAD)
+    findings, _ = run(tmp_path, "serving", select="DGL005")
+    assert codes(findings) == ["DGL005"]
+    assert "peek" in findings[0].message
+    assert "self.count" in findings[0].message
+
+
+def test_dgl005_locked_read_and_locked_suffix_are_clean(tmp_path):
+    write(tmp_path, "serving/q.py", """\
+        import threading
+
+        class Queue:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def add(self):
+                with self._lock:
+                    self.count += 1
+
+            def peek(self):
+                with self._lock:
+                    return self.count
+
+            def _drain_locked(self):
+                return self.count
+    """)
+    findings, _ = run(tmp_path, "serving", select="DGL005")
+    assert findings == []
+
+
+def test_dgl005_out_of_scope_dirs_ignored(tmp_path):
+    write(tmp_path, "core/q.py", _Q_BAD)
+    findings, _ = run(tmp_path, "core", select="DGL005")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# DGL006 kernel triple
+# ---------------------------------------------------------------------------
+
+def test_dgl006_flags_missing_triple_and_hardcoded_interpret(tmp_path):
+    write(tmp_path, "kernels/foo/kernel.py", """\
+        from jax.experimental import pallas as pl
+
+        def run(x):
+            return pl.pallas_call(_kernel, interpret=True)(x)
+
+        def run2(x):
+            return pl.pallas_call(_kernel)(x)
+    """)
+    findings, _ = run(tmp_path, "kernels", select="DGL006")
+    got = codes(findings)
+    assert got == ["DGL006"] * 3
+    msgs = " | ".join(f.message for f in findings)
+    assert "missing ref.py, ops.py" in msgs
+    assert "interpret=True" in msgs
+    assert "without 'interpret='" in msgs
+
+
+def test_dgl006_full_triple_with_resolved_interpret_is_clean(tmp_path):
+    write(tmp_path, "kernels/foo/kernel.py", """\
+        from jax.experimental import pallas as pl
+
+        def run(x, interpret):
+            return pl.pallas_call(_kernel, interpret=interpret)(x)
+    """)
+    write(tmp_path, "kernels/foo/ref.py", "def run_ref(x):\n    return x\n")
+    write(tmp_path, "kernels/foo/ops.py", "def op(x):\n    return x\n")
+    findings, _ = run(tmp_path, "kernels", select="DGL006")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline mechanics
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_same_line(tmp_path):
+    write(tmp_path, "serving/q.py", """\
+        import threading
+
+        class Queue:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def add(self):
+                with self._lock:
+                    self.count += 1
+
+            def peek(self):
+                return self.count  # dgolint: disable=DGL005
+    """)
+    findings, suppressed = run(tmp_path, "serving", select="DGL005")
+    assert findings == []
+    assert codes(suppressed) == ["DGL005"]
+
+
+def test_inline_suppression_preceding_comment_line(tmp_path):
+    write(tmp_path, "serving/q.py", """\
+        import threading
+
+        class Queue:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def add(self):
+                with self._lock:
+                    self.count += 1
+
+            def peek(self):
+                # intentionally racy monitoring snapshot
+                # dgolint: disable=DGL005
+                return self.count
+    """)
+    findings, suppressed = run(tmp_path, "serving", select="DGL005")
+    assert findings == []
+    assert codes(suppressed) == ["DGL005"]
+
+
+def test_suppression_of_other_code_does_not_silence(tmp_path):
+    patched = _Q_BAD.replace(
+        "return self.count",
+        "return self.count  # dgolint: disable=DGL001", 1)
+    assert patched != _Q_BAD
+    write(tmp_path, "serving/q.py", patched)
+    findings, _ = run(tmp_path, "serving", select="DGL005")
+    assert codes(findings) == ["DGL005"]
+
+
+def test_baseline_grandfathers_and_detects_staleness():
+    f1 = Finding("DGL005", "serving/q.py", 12, 0, "msg one")
+    f2 = Finding("DGL005", "serving/q.py", 40, 4, "msg two")
+    baseline = [
+        {"code": "DGL005", "path": "serving/q.py", "message": "msg one"},
+        {"code": "DGL001", "path": "gone.py", "message": "fixed long ago"},
+    ]
+    new, stale = match_baseline([f1, f2], baseline)
+    assert new == [f2]
+    assert stale == [baseline[1]]
+
+
+def test_baseline_key_survives_line_drift():
+    f = Finding("DGL004", "runtime/failure.py", 99, 0, "msg")
+    baseline = [{"code": "DGL004", "path": "runtime/failure.py",
+                 "message": "msg"}]
+    new, stale = match_baseline([f], baseline)
+    assert new == [] and stale == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes_and_baseline_flow(tmp_path, capsys):
+    write(tmp_path, "serving/q.py", _Q_BAD)
+    bl = tmp_path / "baseline.json"
+
+    rc = cli_main(["--root", str(tmp_path), "--baseline", str(bl),
+                   "serving"])
+    assert rc == 1
+    assert "DGL005" in capsys.readouterr().out
+
+    rc = cli_main(["--root", str(tmp_path), "--baseline", str(bl),
+                   "--update-baseline", "serving"])
+    assert rc == 0
+    payload = json.loads(bl.read_text())
+    assert len(payload["findings"]) == 1
+
+    # grandfathered now
+    rc = cli_main(["--root", str(tmp_path), "--baseline", str(bl),
+                   "serving"])
+    assert rc == 0
+    assert "grandfathered" in capsys.readouterr().out
+
+    # fix the code -> stale baseline entry -> strict mode fails
+    fixed = _Q_BAD.replace(
+        "    def peek(self):\n            return self.count",
+        "    def peek(self):\n            with self._lock:\n"
+        "                return self.count")
+    assert fixed != _Q_BAD
+    write(tmp_path, "serving/q.py", fixed)
+    rc = cli_main(["--root", str(tmp_path), "--baseline", str(bl),
+                   "serving"])
+    assert rc == 0
+    rc = cli_main(["--root", str(tmp_path), "--baseline", str(bl),
+                   "--strict-baseline", "serving"])
+    assert rc == 1
+    assert "stale baseline entry" in capsys.readouterr().out
+
+
+def test_cli_missing_path_is_usage_error(tmp_path, capsys):
+    rc = cli_main(["--root", str(tmp_path), "no/such/dir"])
+    assert rc == 2
+
+
+def test_cli_unknown_rule_code_is_usage_error(tmp_path):
+    assert cli_main(["--root", str(tmp_path), "--select", "DGL999"]) == 2
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ("DGL001", "DGL002", "DGL003", "DGL004", "DGL005",
+                 "DGL006"):
+        assert code in out
+
+
+def test_cli_src_repro_fallback_resolution(tmp_path):
+    # 'launch' doesn't exist at the root, but src/repro/launch does —
+    # mirrors the documented invocation on the real tree
+    write(tmp_path, "src/repro/launch/serve.py", "X = 1\n")
+    rc = cli_main(["--root", str(tmp_path), "--no-baseline", "launch"])
+    assert rc == 0
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean
+# ---------------------------------------------------------------------------
+
+def test_real_tree_is_clean():
+    findings, _ = lint_paths(["src/repro", "benchmarks", "launch"],
+                             root=REPO_ROOT)
+    from tools.dgolint import load_baseline
+    new, _stale = match_baseline(findings, load_baseline())
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+def test_real_tree_baseline_has_no_dgl001_dgl002():
+    from tools.dgolint import load_baseline
+    assert [e for e in load_baseline()
+            if e["code"] in ("DGL001", "DGL002")] == []

@@ -330,3 +330,34 @@ def test_metrics_snapshot_shape():
     # engine-cache churn is surfaced top-level: big tuning compilations
     # (the subspace-lm family) make evictions the first signal to watch
     assert snap["cache_evictions"] == snap["cache"]["totals"]["evictions"]
+
+
+def test_unwritable_tile_cache_env_warns(monkeypatch, capsys, tmp_path):
+    """An operator-set REPRO_POPSTEP_TILE_CACHE that cannot be written
+    must be surfaced at serve startup, not silently degraded to the
+    in-process cache (launch/serve audit rode along with the dgolint
+    determinism sweep)."""
+    from repro.launch.serve import _warn_unwritable_tile_cache
+
+    # unset: silent
+    monkeypatch.delenv("REPRO_POPSTEP_TILE_CACHE", raising=False)
+    _warn_unwritable_tile_cache()
+    assert capsys.readouterr().err == ""
+
+    # writable target: silent
+    monkeypatch.setenv("REPRO_POPSTEP_TILE_CACHE",
+                       str(tmp_path / "tiles.json"))
+    _warn_unwritable_tile_cache()
+    assert capsys.readouterr().err == ""
+
+    # unwritable: an ancestor that is a regular file blocks creation
+    # of the cache path no matter the uid (chmod-based denial is
+    # invisible to root, so this is the portable unwritable case)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    monkeypatch.setenv("REPRO_POPSTEP_TILE_CACHE",
+                       str(blocker / "sub" / "tiles.json"))
+    _warn_unwritable_tile_cache()
+    err = capsys.readouterr().err
+    assert "REPRO_POPSTEP_TILE_CACHE" in err
+    assert "re-tunes" in err and "dgolint" in err

@@ -1,0 +1,283 @@
+"""dgolint: a repo-aware static-analysis suite for the DGO codebase.
+
+The paper's result is a *correctness-preserving* parallelization — the
+parallel runs produce the sequential trajectory, bit for bit.  This
+repo's analogue is a set of invariants that generic linters cannot
+express (they are about THIS codebase's contracts, not Python style):
+
+* DGL001 — the ROADMAP compat policy: version-moved JAX APIs
+  (``shard_map``/``AxisType``/``AbstractMesh``/``axis_size``) are only
+  touched through ``src/repro/compat.py``;
+* DGL002 — all memoization goes through the instrumented
+  ``core/cache.py`` registries (rogue ``lru_cache``/dict memos hide
+  hits, evictions and recompiles from the bench/serving stats);
+* DGL003 — no host synchronization (``float()``/``.item()``/
+  ``np.asarray``) on traced values inside compiled loop bodies — the
+  leak that silently turns a one-dispatch engine into a
+  dispatch-per-iteration engine;
+* DGL004 — the seeded-determinism contract of the chaos/serving
+  substrate (no wall-clock or unseeded RNG decisions);
+* DGL005 — lock discipline on the serving thread boundary;
+* DGL006 — the kernels package triple (``kernel.py``/``ref.py``/
+  ``ops.py``) and guarded ``pallas_call`` backend selection.
+
+Everything is stdlib ``ast`` — no JAX import, no third-party deps — so
+the gate runs anywhere, including environments where ruff/jax are not
+installable.
+
+Usage::
+
+    python -m tools.dgolint src/repro benchmarks launch
+
+Suppressions: append ``# dgolint: disable=DGL005`` to the offending
+line (or put the comment alone on the line directly above it).  A
+committed ``baseline.json`` grandfathers pre-existing findings so the
+gate can be blocking from day one; ``--strict-baseline`` additionally
+fails when the baseline lists findings that no longer exist (staleness).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Iterable, Sequence
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "SourceFile",
+    "collect_files",
+    "lint_paths",
+    "load_baseline",
+    "match_baseline",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    code: str          # "DGL001" ... "DGL006"
+    path: str          # repo-relative, forward slashes
+    line: int          # 1-based
+    col: int           # 0-based
+    message: str
+    severity: str = "error"
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        """Baseline identity: line numbers drift, (code, path, message)
+        survives unrelated edits above the finding."""
+        return (self.code, self.path, self.message)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.code} [{self.severity}] {self.message}")
+
+
+_SUPPRESS_RE = re.compile(r"#\s*dgolint:\s*disable=([A-Z0-9,\s]+)")
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """A parsed file plus the per-line suppression table."""
+
+    path: str                  # repo-relative display path
+    abspath: Path
+    source: str
+    tree: ast.AST
+    suppressions: dict[int, set[str]]
+
+    @classmethod
+    def parse(cls, abspath: Path, relpath: str) -> "SourceFile":
+        source = abspath.read_text()
+        tree = ast.parse(source, filename=relpath)
+        return cls(path=relpath, abspath=abspath, source=source,
+                   tree=tree, suppressions=_suppression_table(source))
+
+    def suppressed(self, finding: Finding) -> bool:
+        return finding.code in self.suppressions.get(finding.line, ())
+
+
+def _suppression_table(source: str) -> dict[int, set[str]]:
+    """Map line number -> suppressed codes.
+
+    A trailing ``# dgolint: disable=DGL0xx[,DGL0yy]`` suppresses its own
+    line; a comment-only line suppresses the next non-blank,
+    non-comment line (so long justifications fit above the code).
+    """
+    table: dict[int, set[str]] = {}
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+        if text.lstrip().startswith("#"):
+            # standalone comment: applies to the next code line
+            target = i + 1
+            while target <= len(lines) and (
+                    not lines[target - 1].strip()
+                    or lines[target - 1].lstrip().startswith("#")):
+                target += 1
+            table.setdefault(target, set()).update(codes)
+        else:
+            table.setdefault(i, set()).update(codes)
+    return table
+
+
+class Rule:
+    """Base rule: subclasses set ``code``/``name``/``rationale`` and
+    implement ``check_file`` (per parsed file) and/or ``check_project``
+    (whole scanned file set — structural rules)."""
+
+    code = "DGL000"
+    name = "base"
+    rationale = ""
+
+    def check_file(self, src: SourceFile) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, files: Sequence[SourceFile],
+                      roots: Sequence[Path]) -> Iterable[Finding]:
+        return ()
+
+
+# ---------------------------------------------------------------------------
+# file collection + driver
+# ---------------------------------------------------------------------------
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "bench-out"}
+
+
+def _resolve_path(p: str | Path, root: Path) -> Path | None:
+    """Resolve a CLI path; repo-aware fallback: a name that does not
+    exist at the root is retried under ``src/repro/`` (so the documented
+    ``python -m tools.dgolint src/repro benchmarks launch`` works even
+    though ``launch`` lives at ``src/repro/launch``)."""
+    cand = root / p
+    if cand.exists():
+        return cand
+    alt = root / "src" / "repro" / p
+    if alt.exists():
+        return alt
+    return None
+
+
+def collect_files(paths: Sequence[str | Path],
+                  root: Path | None = None) -> list[SourceFile]:
+    root = Path(root) if root is not None else Path.cwd()
+    seen: set[Path] = set()
+    out: list[SourceFile] = []
+    for p in paths:
+        resolved = _resolve_path(p, root)
+        if resolved is None:
+            raise FileNotFoundError(
+                f"{p}: not found (also tried src/repro/{p})")
+        if resolved.is_file():
+            candidates = [resolved]
+        else:
+            candidates = sorted(
+                f for f in resolved.rglob("*.py")
+                if not (_SKIP_DIRS & set(f.parts)))
+        for f in candidates:
+            f = f.resolve()
+            if f in seen:
+                continue
+            seen.add(f)
+            try:
+                rel = f.relative_to(root.resolve()).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            out.append(SourceFile.parse(f, rel))
+    return out
+
+
+def default_rules() -> list[Rule]:
+    from tools.dgolint import rules as _rules
+
+    return _rules.ALL_RULES()
+
+
+def lint_paths(paths: Sequence[str | Path], *,
+               root: Path | None = None,
+               rules: Sequence[Rule] | None = None,
+               select: set[str] | None = None,
+               ) -> tuple[list[Finding], list[Finding]]:
+    """Lint ``paths``; returns ``(findings, suppressed)`` — suppressed
+    findings (inline ``# dgolint: disable``) are reported separately so
+    ``--show-suppressed`` and the tests can see them."""
+    root = Path(root) if root is not None else Path.cwd()
+    files = collect_files(paths, root=root)
+    rule_list = list(rules) if rules is not None else default_rules()
+    if select:
+        rule_list = [r for r in rule_list if r.code in select]
+    by_path = {f.path: f for f in files}
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+    resolved_roots = [_resolve_path(p, root) for p in paths]
+    for rule in rule_list:
+        produced: list[Finding] = []
+        for src in files:
+            produced.extend(rule.check_file(src))
+        produced.extend(rule.check_project(
+            files, [r for r in resolved_roots if r is not None]))
+        for f in produced:
+            src = by_path.get(f.path)
+            if src is not None and src.suppressed(f):
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings, suppressed
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def baseline_path() -> Path:
+    return Path(__file__).with_name("baseline.json")
+
+
+def load_baseline(path: Path | None = None) -> list[dict]:
+    path = path if path is not None else baseline_path()
+    if not path.exists():
+        return []
+    payload = json.loads(path.read_text())
+    return list(payload.get("findings", []))
+
+
+def save_baseline(findings: Sequence[Finding],
+                  path: Path | None = None) -> None:
+    path = path if path is not None else baseline_path()
+    payload = {
+        "comment": "grandfathered dgolint findings; see tools/dgolint. "
+                   "Entries here are suppressed by the gate; stale "
+                   "entries fail --strict-baseline. Policy: DGL001/"
+                   "DGL002 findings are fixed, never baselined.",
+        "findings": [
+            {"code": f.code, "path": f.path, "message": f.message}
+            for f in findings],
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def match_baseline(findings: Sequence[Finding],
+                   baseline: Sequence[dict],
+                   ) -> tuple[list[Finding], list[dict]]:
+    """Split findings against the baseline.
+
+    Returns ``(new_findings, stale_entries)``: findings not covered by
+    the baseline, and baseline entries matching nothing current (the
+    staleness the CI check fails on — a fixed finding must leave the
+    baseline so it cannot silently regress)."""
+    keys = {(e["code"], e["path"], e["message"]) for e in baseline}
+    new = [f for f in findings if f.key not in keys]
+    live = {f.key for f in findings}
+    stale = [e for e in baseline
+             if (e["code"], e["path"], e["message"]) not in live]
+    return new, stale

@@ -1,0 +1,3 @@
+from tools.dgolint.cli import main
+
+raise SystemExit(main())

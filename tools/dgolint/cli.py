@@ -1,0 +1,127 @@
+"""dgolint command line: ``python -m tools.dgolint [paths...]``.
+
+Exit codes: 0 clean, 1 findings (or stale baseline with
+``--strict-baseline``), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.dgolint import (
+    baseline_path,
+    default_rules,
+    lint_paths,
+    load_baseline,
+    match_baseline,
+    save_baseline,
+)
+
+DEFAULT_PATHS = ["src/repro", "benchmarks", "launch"]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.dgolint",
+        description="Repo-aware static analysis for the DGO codebase "
+                    "(stdlib ast only; see tools/dgolint/__init__.py "
+                    "for the rule catalogue).")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: "
+                         f"{' '.join(DEFAULT_PATHS)}); names missing at "
+                         f"the root are retried under src/repro/")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: cwd)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline file (default: tools/dgolint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline entirely")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings "
+                         "and exit 0 (review the diff before committing)")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="also fail if the baseline lists findings that "
+                         "no longer exist (staleness check)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes to run "
+                         "(e.g. DGL001,DGL005)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by inline "
+                         "'# dgolint: disable=' comments")
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in default_rules():
+            print(f"{rule.code}  {rule.name:20s} {rule.rationale}")
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    root = args.root if args.root is not None else Path.cwd()
+    select = None
+    if args.select:
+        select = {c.strip().upper() for c in args.select.split(",")
+                  if c.strip()}
+        known = {r.code for r in default_rules()}
+        bad = select - known
+        if bad:
+            print(f"dgolint: unknown rule code(s): "
+                  f"{', '.join(sorted(bad))}", file=sys.stderr)
+            return 2
+
+    try:
+        findings, suppressed = lint_paths(paths, root=root, select=select)
+    except FileNotFoundError as e:
+        print(f"dgolint: {e}", file=sys.stderr)
+        return 2
+    except SyntaxError as e:
+        print(f"dgolint: cannot parse {e.filename}:{e.lineno}: {e.msg}",
+              file=sys.stderr)
+        return 2
+
+    bl_path = args.baseline if args.baseline is not None else baseline_path()
+    if args.update_baseline:
+        save_baseline(findings, bl_path)
+        print(f"dgolint: baseline updated with {len(findings)} finding(s) "
+              f"at {bl_path}")
+        return 0
+
+    baseline = [] if args.no_baseline else load_baseline(bl_path)
+    new, stale = match_baseline(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if args.show_suppressed:
+        for f in suppressed:
+            print(f"{f.render()}  (suppressed inline)")
+    grandfathered = len(findings) - len(new)
+
+    failed = bool(new)
+    if args.strict_baseline and stale:
+        failed = True
+        for e in stale:
+            print(f"stale baseline entry (finding no longer exists — "
+                  f"remove it): {e['code']} {e['path']}: {e['message']}")
+
+    bits = [f"{len(new)} finding(s)"]
+    if grandfathered:
+        bits.append(f"{grandfathered} grandfathered")
+    if suppressed:
+        bits.append(f"{len(suppressed)} suppressed inline")
+    if stale:
+        bits.append(f"{len(stale)} stale baseline entr"
+                    f"{'y' if len(stale) == 1 else 'ies'}")
+    print(f"dgolint: {', '.join(bits)}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
