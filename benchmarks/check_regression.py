@@ -61,6 +61,11 @@ GATED = {
     "serving": {
         "bench_serving.bucketed_over_per_request": "higher",
         "bench_serving.degraded_over_bucketed": "higher",
+        # pipelined vs synchronous drain: ~1.0 on single-core runners
+        # (host assembly and device compute share the core), >1 with
+        # real parallel hardware — gated so the pipeline can't silently
+        # regress below its committed baseline either way
+        "bench_serving.pipelined_over_synchronous": "higher",
     },
 }
 

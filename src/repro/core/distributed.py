@@ -1139,6 +1139,43 @@ class BatchedResult(NamedTuple):
     #                       each restart's best point at its own resolution
 
 
+def _prefetch(*arrs) -> None:
+    """Enqueue device->host copies for ``arrs`` right behind the compute
+    that produces them.  Called at SUBMIT time so the copies sit on each
+    device stream before any later wave's dispatch can slot in —
+    ``finish()``'s ``device_get`` then completes from already-copied
+    buffers instead of waiting out whatever executed next on the device
+    (without this, fetching wave N's results queues behind wave N+1's
+    compute and the pipeline serializes)."""
+    for a in arrs:
+        try:
+            a.copy_to_host_async()
+        except AttributeError:      # non-jax leaf / backend without
+            pass                    # async transfers: finish() fetches
+
+
+class PendingBatched:
+    """One in-flight batched dispatch from :func:`_submit_batched`: the
+    engine call has returned, but its device arrays may still be
+    computing.  :meth:`finish` blocks on the host fetch and runs the
+    post-processing that turns raw engine outputs into a
+    :class:`BatchedResult`.  The submit/finish split is the serving
+    pipeline's lever (``core.solver.submit_wave`` wraps it per wave):
+    the caller assembles and dispatches the NEXT wave while the device
+    still executes this one.
+    """
+
+    __slots__ = ("_finish",)
+
+    def __init__(self, finish):
+        self._finish = finish
+
+    def finish(self) -> BatchedResult:
+        """Block on the device results and assemble the result.  A
+        device-side error surfaces here, at the fetch, not at submit."""
+        return self._finish()
+
+
 def _run_batched(f: Callable[[jax.Array], jax.Array],
                  enc: Encoding,
                  mesh: Mesh,
@@ -1150,6 +1187,25 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
                  res_bits: Sequence[int] | None = None,
                  active=None,
                  slot_iters=None) -> BatchedResult:
+    """The blocking shape of :func:`_submit_batched`: dispatch one wave
+    and immediately block on its results (submit + ``finish()``)."""
+    return _submit_batched(
+        f, enc, mesh, x0s, pop_axes=pop_axes, max_iters=max_iters,
+        virtual_block=virtual_block, quorum_mask=quorum_mask,
+        res_bits=res_bits, active=active, slot_iters=slot_iters).finish()
+
+
+def _submit_batched(f: Callable[[jax.Array], jax.Array],
+                    enc: Encoding,
+                    mesh: Mesh,
+                    x0s: jax.Array,
+                    pop_axes: Sequence[str] = ("data",),
+                    max_iters: int = 256,
+                    virtual_block: int = 256,
+                    quorum_mask=None,
+                    res_bits: Sequence[int] | None = None,
+                    active=None,
+                    slot_iters=None) -> PendingBatched:
     """Batched multi-start distributed DGO: R restarts from ``x0s``
     (R, n_vars) share one compiled on-device while_loop — including, when
     ``res_bits`` names a schedule, every resolution escalation (the whole
@@ -1165,6 +1221,11 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
     This is the batched-request serving path (launch/serve.py --dgo): R
     concurrent requests amortize the per-iteration reduce and the dispatch
     to near single-run wall-clock (see benchmarks/bench_distributed.py).
+
+    Returns WITHOUT blocking: JAX dispatch is asynchronous, so the
+    engine call hands back in-flight device arrays and every host fetch
+    (plus the schedule path's history post-processing) is deferred to
+    ``PendingBatched.finish()``.
     """
     from repro.core.encoding import decode_np, encode
 
@@ -1201,39 +1262,49 @@ def _run_batched(f: Callable[[jax.Array], jax.Array],
                                      virtual_block)
         bits, vals, iters, trace = engine(x0s, vals0, quorum_mask, active,
                                           slot_iters)
-        iters_h, trace_np = jax.device_get((iters, trace))
-        return BatchedResult(bits=bits, values=vals, iterations=iters,
-                             trace=trace_np[:, : int(iters_h.max()) + 1],
-                             best=int(jnp.argmin(vals)))
+        _prefetch(iters, trace)
+
+        def finish() -> BatchedResult:
+            iters_h, trace_np = jax.device_get((iters, trace))
+            return BatchedResult(
+                bits=bits, values=vals, iterations=iters,
+                trace=trace_np[:, : int(iters_h.max()) + 1],
+                best=int(jnp.argmin(vals)))
+        return PendingBatched(finish)
 
     engine = _batched_engine_for(f, enc0, mesh,
                                  n_restarts, pop_axes, max_iters,
                                  virtual_block, res_bits=schedule)
     (_, _, best_vals, best_bits, best_res, iters, trace) = engine(
         x0s, vals0, quorum_mask, active, slot_iters)
-    iters_h, trace_h, bits_h, res_h, vals_h, act_h = jax.device_get(
-        (iters, trace, best_bits, best_res, best_vals, active))
+    _prefetch(iters, trace, best_bits, best_res, best_vals)
 
-    # per-restart monotone histories, truncated to the longest run and
-    # padded past each restart's own end with its final best.  Inactive
-    # padding slots skip the host-side accumulate/decode entirely — at
-    # low bucket fill most of a wave's post-processing would otherwise be
-    # spent on clones whose results are discarded
-    t_len = int(iters_h.max()) + 1
-    mono = np.repeat(trace_h[:, :1], t_len, axis=1)
-    best_xs = np.zeros((n_restarts, enc.n_vars), np.float32)
-    for r in np.flatnonzero(act_h):
-        h = np.minimum.accumulate(trace_h[r, : int(iters_h[r]) + 1])
-        mono[r, : len(h)] = h
-        mono[r, len(h):] = h[-1]
-        # each restart's best point decoded at its OWN resolution; the
-        # bits field reports them quantized at the FINAL resolution
-        # (matching the fused engine's DGOResult.bits convention)
-        b = schedule[int(res_h[r])]
-        best_xs[r] = decode_np(bits_h[r][: enc.n_vars * b],
-                               enc.with_bits(b))
-    enc_final = enc.with_bits(schedule[-1])
-    bits = encode(jnp.asarray(best_xs, jnp.float32), enc_final)
-    return BatchedResult(bits=bits, values=jnp.asarray(vals_h, jnp.float32),
-                         iterations=iters, trace=mono,
-                         best=int(np.argmin(vals_h)), best_xs=best_xs)
+    def finish() -> BatchedResult:
+        iters_h, trace_h, bits_h, res_h, vals_h, act_h = jax.device_get(
+            (iters, trace, best_bits, best_res, best_vals, active))
+
+        # per-restart monotone histories, truncated to the longest run
+        # and padded past each restart's own end with its final best.
+        # Inactive padding slots skip the host-side accumulate/decode
+        # entirely — at low bucket fill most of a wave's post-processing
+        # would otherwise be spent on clones whose results are discarded
+        t_len = int(iters_h.max()) + 1
+        mono = np.repeat(trace_h[:, :1], t_len, axis=1)
+        best_xs = np.zeros((n_restarts, enc.n_vars), np.float32)
+        for r in np.flatnonzero(act_h):
+            h = np.minimum.accumulate(trace_h[r, : int(iters_h[r]) + 1])
+            mono[r, : len(h)] = h
+            mono[r, len(h):] = h[-1]
+            # each restart's best point decoded at its OWN resolution;
+            # the bits field reports them quantized at the FINAL
+            # resolution (matching DGOResult.bits on the fused engine)
+            b = schedule[int(res_h[r])]
+            best_xs[r] = decode_np(bits_h[r][: enc.n_vars * b],
+                                   enc.with_bits(b))
+        enc_final = enc.with_bits(schedule[-1])
+        bits = encode(jnp.asarray(best_xs, jnp.float32), enc_final)
+        return BatchedResult(
+            bits=bits, values=jnp.asarray(vals_h, jnp.float32),
+            iterations=iters, trace=mono,
+            best=int(np.argmin(vals_h)), best_xs=best_xs)
+    return PendingBatched(finish)

@@ -768,18 +768,19 @@ def _request_x0(prob: Problem, req: SolveRequest) -> jax.Array:
     return prob.random_x0(key, batch=1)[0]
 
 
-def _slot_result(res, bits_h, slot: int, enc0: Encoding, schedule: tuple,
-                 wave_size: int) -> SolveResult:
+def _slot_result(res, bits_h, iters_h, slot: int, enc0: Encoding,
+                 schedule: tuple, wave_size: int) -> SolveResult:
     """Per-slot SolveResult assembly — the same post-processing
     ``Batched._solve`` applies to its winner, applied to one slot, so a
     bucketed request's result is bitwise the per-request one.  ``bits_h``
     is the wave's bits fetched ONCE (None on the schedule path, which
-    carries decoded best points already)."""
+    carries decoded best points already); ``iters_h`` the wave's
+    iteration counters, also fetched once."""
     if res.best_xs is not None:           # schedule path: best points
         best_x = jnp.asarray(res.best_xs[slot])
     else:                                 # fixed resolution: decode
         best_x = jnp.asarray(decode_np(bits_h[slot], enc0))
-    iters = int(np.asarray(res.iterations)[slot])
+    iters = int(iters_h[slot])
     return SolveResult(
         best_x=best_x,
         best_f=res.values[slot],
@@ -787,6 +788,115 @@ def _slot_result(res, bits_h, slot: int, enc0: Encoding, schedule: tuple,
         trace=res.trace[slot][: iters + 1],
         extras={"bits": res.bits[slot], "schedule": schedule,
                 "wave_slot": slot, "wave_size": wave_size})
+
+
+class PendingWave:
+    """One dispatched-but-unfetched wave from :func:`submit_wave`.
+
+    JAX dispatch is asynchronous: the engine call behind
+    :func:`submit_wave` returns device arrays whose values are still
+    being computed.  :meth:`finalize` does the blocking part — the host
+    fetch plus the per-slot result assembly and hygiene
+    :func:`solve_many` would apply — and returns the per-request
+    :class:`SolveResult` list (input order).  Splitting submission from
+    result blocking is the serving pipeline's lever: a scheduler thread
+    can assemble and submit the NEXT wave while the device still
+    executes this one (``repro.serving.pipeline``).  Results are bitwise
+    identical to a blocking :func:`solve_many` call — :meth:`finalize`
+    IS the tail of ``solve_many``'s wave loop.
+    """
+
+    def __init__(self, reqs, pending, enc0: Encoding, schedule: tuple,
+                 width: int, on_nonfinite: str, contexts):
+        self._reqs = reqs
+        self._pending = pending
+        self._enc0 = enc0
+        self._schedule = schedule
+        self._width = width
+        self._on_nonfinite = on_nonfinite
+        self._contexts = contexts
+
+    def finalize(self) -> list[SolveResult]:
+        """Block on the device results and assemble one
+        :class:`SolveResult` per (active) request.  Raises whatever the
+        dispatch raised — a device-side error surfaces HERE, at the
+        fetch, not at submit."""
+        res = self._pending.finish()
+        # one host fetch per wave-level array, not one per slot
+        bits_h = (None if res.best_xs is not None
+                  else jax.device_get(res.bits))
+        iters_h = np.asarray(res.iterations)
+        out: list[SolveResult] = []
+        for slot, req in enumerate(self._reqs):
+            result = _slot_result(res, bits_h, iters_h, slot, self._enc0,
+                                  self._schedule, self._width)
+            if req.problem.signature is not None:
+                result.extras["problem_signature"] = req.problem.signature
+            out.append(_apply_result_hygiene(
+                result, self._on_nonfinite, self._contexts[slot]))
+        return out
+
+
+def submit_wave(requests, *, mesh=None, pop_axes=("data",),
+                virtual_block: int = 256, max_bits: int | None = None,
+                bits_step: int = 2, pad_to: int | None = None,
+                quorum_mask=None, on_nonfinite: str = "flag",
+                contexts=None) -> PendingWave:
+    """Dispatch ONE wave of same-signature requests without blocking on
+    its results; returns a :class:`PendingWave` whose ``finalize()``
+    yields exactly what :func:`solve_many` would (``solve_many`` is this
+    plus an immediate ``finalize()`` per wave).
+
+    All requests must share one :func:`engine_signature` under the given
+    dispatch configuration (``ValueError`` otherwise — mixed signatures
+    need ``solve_many``'s grouping), and they must fit one wave:
+    ``pad_to`` (the wave width, padded with inactive slots) must be
+    ``>= len(requests)``.  ``contexts`` optionally labels each request
+    for hygiene errors (``on_nonfinite="raise"``).
+    """
+    from repro.core import distributed
+
+    reqs = [_as_request(r) for r in requests]
+    if not reqs:
+        raise ValueError("submit_wave needs at least one request")
+    mesh = mesh if mesh is not None else _default_mesh()
+    sigs = {engine_signature(req.problem, mesh=mesh, pop_axes=pop_axes,
+                             virtual_block=virtual_block,
+                             max_bits=max_bits, bits_step=bits_step)
+            for req in reqs}
+    if len(sigs) > 1:
+        raise ValueError(
+            f"submit_wave requests span {len(sigs)} engine signatures; "
+            f"one wave serves one signature (use solve_many to group)")
+    width = pad_to if pad_to is not None else len(reqs)
+    if width < len(reqs):
+        raise ValueError(f"pad_to={pad_to} smaller than the "
+                         f"{len(reqs)}-request wave")
+    prob: Problem = reqs[0].problem
+    schedule = tuple(_resolution_schedule(prob.encoding, max_bits,
+                                          bits_step))
+    enc0 = prob.encoding.with_bits(schedule[0])
+    x0s = [_request_x0(req.problem, req) for req in reqs]
+    caps = [req.max_iters if req.max_iters is not None
+            else _DEFAULT_REQUEST_ITERS for req in reqs]
+    n_pad = width - len(reqs)
+    if n_pad:                     # padding: clones of slot 0,
+        x0s += [x0s[0]] * n_pad   # masked inactive, zero budget
+        caps += [0] * n_pad
+    active = np.arange(width) < len(reqs)
+    # static cap sizes the trace buffer only (slots gate on their
+    # own cap); rounded up so cap mixes don't churn the compile key
+    cap = max(64, -(-max(caps) // 64) * 64)
+    pending = distributed._submit_batched(
+        prob.jax_fn, enc0, mesh, jnp.stack(x0s),
+        pop_axes=tuple(pop_axes), max_iters=cap,
+        virtual_block=virtual_block, quorum_mask=quorum_mask,
+        res_bits=schedule, active=active, slot_iters=caps)
+    if contexts is None:
+        contexts = [f"submit_wave request {i} ({prob.name!r})"
+                    for i in range(len(reqs))]
+    return PendingWave(reqs, pending, enc0, schedule, width,
+                       on_nonfinite, list(contexts))
 
 
 def solve_many(requests, *, mesh=None, pop_axes=("data",),
@@ -819,8 +929,6 @@ def solve_many(requests, *, mesh=None, pop_axes=("data",),
     serving scheduler keeps the default ``"flag"`` and applies its own
     per-handle policy so one NaN cannot fail its wave-mates).
     """
-    from repro.core import distributed
-
     reqs = [_as_request(r) for r in requests]
     mesh = mesh if mesh is not None else _default_mesh()
     if pad_to is not None and pad_to < 1:
@@ -836,37 +944,19 @@ def solve_many(requests, *, mesh=None, pop_axes=("data",),
     results: list[SolveResult | None] = [None] * len(reqs)
     for idxs in groups.values():
         prob: Problem = reqs[idxs[0]].problem
-        schedule = tuple(_resolution_schedule(prob.encoding, max_bits,
-                                              bits_step))
-        enc0 = prob.encoding.with_bits(schedule[0])
         width = pad_to if pad_to is not None else len(idxs)
         for start in range(0, len(idxs), width):
             wave = idxs[start: start + width]
-            x0s = [_request_x0(reqs[i].problem, reqs[i]) for i in wave]
-            caps = [reqs[i].max_iters if reqs[i].max_iters is not None
-                    else _DEFAULT_REQUEST_ITERS for i in wave]
-            n_pad = width - len(wave)
-            if n_pad:                     # padding: clones of slot 0,
-                x0s += [x0s[0]] * n_pad   # masked inactive, zero budget
-                caps += [0] * n_pad
-            active = np.arange(width) < len(wave)
-            # static cap sizes the trace buffer only (slots gate on their
-            # own cap); rounded up so cap mixes don't churn the compile key
-            cap = max(64, -(-max(caps) // 64) * 64)
-            res = distributed._run_batched(
-                prob.jax_fn, enc0, mesh, jnp.stack(x0s),
-                pop_axes=tuple(pop_axes), max_iters=cap,
-                virtual_block=virtual_block, quorum_mask=quorum_mask,
-                res_bits=schedule, active=active, slot_iters=caps)
-            # one host fetch of the wave's bit strings, not one per slot
-            bits_h = (None if res.best_xs is not None
-                      else jax.device_get(res.bits))
-            for slot, i in enumerate(wave):
-                results[i] = _slot_result(res, bits_h, slot, enc0,
-                                          schedule, width)
-                if prob.signature is not None:
-                    results[i].extras["problem_signature"] = prob.signature
-                results[i] = _apply_result_hygiene(
-                    results[i], on_nonfinite,
-                    f"solve_many request {i} ({prob.name!r})")
+            # submit + immediately finalize: solve_many IS the blocking
+            # shape of submit_wave (the pipelined scheduler interleaves
+            # the two phases across waves instead)
+            pending = submit_wave(
+                [reqs[i] for i in wave], mesh=mesh, pop_axes=pop_axes,
+                virtual_block=virtual_block, max_bits=max_bits,
+                bits_step=bits_step, pad_to=width,
+                quorum_mask=quorum_mask, on_nonfinite=on_nonfinite,
+                contexts=[f"solve_many request {i} ({prob.name!r})"
+                          for i in wave])
+            for i, result in zip(wave, pending.finalize()):
+                results[i] = result
     return results

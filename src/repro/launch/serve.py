@@ -32,6 +32,15 @@ buckets queued requests by engine signature, pads each bucket to
 compiled on-device while_loop; per-request results are bitwise what
 individual solves would return.
 
+Serving is PIPELINED by default (``serving.PipelinedScheduler``): a
+dispatch worker finalizes the in-flight wave while the serving thread
+assembles and submits the next one, and open-loop arrivals run on their
+own thread so submission timing is never perturbed by dispatch.
+``--no-pipeline`` restores the synchronous scheduler;
+``--max-in-flight`` sets the pipeline depth (2 = double-buffering).
+See docs/architecture.md for the thread model and
+docs/serving-ops.md for the operator runbook.
+
 Model-zoo tuning is served through the same loop: ``subspace-lm:<arch>``
 names (e.g. ``--problems subspace-lm:xlstm-125m,rastrigin:2``) are
 subspace-DGO tuning problems over ``configs.reduced`` zoo models — an
@@ -45,6 +54,7 @@ import argparse
 import json
 import os
 import sys
+import threading
 import time
 from pathlib import Path
 
@@ -119,16 +129,21 @@ def _make_fault_plan(args):
 
 
 def _build_scheduler(args, problems):
-    from repro.serving import RequestQueue, Scheduler
+    from repro.serving import PipelinedScheduler, RequestQueue, Scheduler
 
     queue = RequestQueue(capacity=args.capacity, admission=args.admission)
     # mesh=None -> the library's shared default (all local devices on
     # ("data",)) — one source of truth for the serving geometry
-    sched = Scheduler(queue, wave_size=args.restarts,
-                      max_bits=args.max_bits,
-                      max_retries=args.max_retries,
-                      retry_backoff_s=args.retry_backoff_s,
-                      faults=_make_fault_plan(args))
+    kwargs = dict(wave_size=args.restarts,
+                  max_bits=args.max_bits,
+                  max_retries=args.max_retries,
+                  retry_backoff_s=args.retry_backoff_s,
+                  faults=_make_fault_plan(args))
+    if args.no_pipeline:
+        sched = Scheduler(queue, **kwargs)
+    else:
+        sched = PipelinedScheduler(queue, max_in_flight=args.max_in_flight,
+                                   **kwargs)
     sched.warmup(problems, max_iters=args.max_iters)
     return sched
 
@@ -245,26 +260,45 @@ def _run_serving_loop(args, problems, rps: float | None):
         handles.append(h)
 
     t_start = time.perf_counter()
-    if rps is not None:
-        t_end = t_start + args.duration
-        next_arrival = t_start
-        while True:
-            now = time.perf_counter()
-            while next_arrival <= now and next_arrival < t_end:
-                submit_next(arrived_at=next_arrival)
-                next_arrival += rng.exponential(1.0 / rps)
-            if len(sched.queue):
-                sched.run_wave()
-            elif now >= t_end:
-                break
-            else:
-                time.sleep(min(0.002, max(next_arrival - now, 0.0)))
-        sched.drain()
-    else:
-        for _ in range(args.restarts * args.waves):
-            submit_next()
-        sched.drain()
-    wall_s = time.perf_counter() - t_start
+    try:
+        if rps is not None:
+            t_end = t_start + args.duration
+            stop = threading.Event()
+
+            def arrivals():
+                # the arrival clock lives on its OWN thread so submission
+                # timing is never perturbed by dispatch: a wave blocking
+                # the serving thread cannot delay (or batch up) arrivals
+                next_arrival = t_start
+                while next_arrival < t_end and not stop.is_set():
+                    now = time.perf_counter()
+                    if next_arrival > now:
+                        time.sleep(min(next_arrival - now, 0.01))
+                        continue
+                    submit_next(arrived_at=next_arrival)
+                    next_arrival += rng.exponential(1.0 / rps)
+
+            arr = threading.Thread(target=arrivals, name="dgo-arrivals",
+                                   daemon=True)
+            arr.start()
+            try:
+                # serve while arrivals flow: step() is one non-blocking
+                # pump on the pipelined scheduler (one blocking wave on
+                # --no-pipeline); idle ticks yield to the arrival thread
+                while arr.is_alive() or len(sched.queue):
+                    if not sched.step():
+                        time.sleep(0.001)
+            finally:
+                stop.set()
+                arr.join()
+            sched.drain()
+        else:
+            for _ in range(args.restarts * args.waves):
+                submit_next()
+            sched.drain()
+        wall_s = time.perf_counter() - t_start
+    finally:
+        sched.close()
     return sched, handles, wall_s, submitted
 
 
@@ -339,9 +373,29 @@ def serve_dgo(args) -> None:
                        default=float("inf"))
             row = _report(sched, problems, best, wall_s)
             row["rps"] = rps
+            row["offered_rps"] = rps
+            row["achieved_rps"] = row["runs_per_s"]
+            # a point saturates when the queue backlogs faster than the
+            # service drains it: the run then needs a drain tail well
+            # past the arrival window to finish what arrived (a short
+            # tail — the in-flight waves — is normal at any load)
+            row["drain_tail_s"] = round(max(wall_s - args.duration, 0.0), 3)
+            row["saturated"] = wall_s > 1.15 * args.duration
             row["submitted"] = submitted
             sweep.append(row)
-        print(json.dumps({"sweep_rps": points, "sweep": sweep}))
+        unsat = [r["offered_rps"] for r in sweep if not r["saturated"]]
+        achieved = [r["achieved_rps"] for r in sweep
+                    if r["achieved_rps"] is not None]
+        print(json.dumps({
+            "sweep_rps": points,
+            # the saturation knee: the highest offered rate the service
+            # still kept up with, and the throughput ceiling it pinned
+            # at beyond that (the Amdahl-style serial-fraction readout —
+            # see docs/serving-ops.md for reading these)
+            "knee_rps": max(unsat) if unsat else None,
+            "capacity_rps": max(achieved) if achieved else None,
+            "sweep": sweep,
+        }))
         return
 
     sched, handles, wall_s, submitted = _run_serving_loop(
@@ -381,7 +435,15 @@ def main():
                          "(e.g. 10,20,40,80), one open-loop run of "
                          "--duration seconds each; emits per-point "
                          "p50/p95/p99 + lifecycle counters and a final "
-                         "summary JSON line")
+                         "summary JSON line with the saturation knee "
+                         "(knee_rps / capacity_rps)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="serve with the synchronous Scheduler instead of "
+                         "the default PipelinedScheduler (one wave in "
+                         "flight, host blocks on every dispatch)")
+    ap.add_argument("--max-in-flight", type=int, default=2,
+                    help="pipelined scheduler: waves in flight before "
+                         "submission backpressures (2 = double-buffering)")
     ap.add_argument("--capacity", type=int, default=None,
                     help="bound the request queue (admission control "
                          "kicks in at this backlog; None = unbounded)")

@@ -36,13 +36,22 @@ bisection that isolates a poison request in ≤ log2(W) probes; exhausted
 handles fail with their own :class:`DispatchFailed`; non-finite results
 are flagged (``extras["finite"]``) or failed per the scheduler's
 ``on_nonfinite`` policy.  ``runtime.straggler.StragglerPolicy`` can feed
-the scheduler's wave-size choice.  ``launch/serve.py --dgo`` is a thin
+the scheduler's wave-size choice.
+
+:class:`PipelinedScheduler` (``serving/pipeline.py``) is the
+asynchronous variant: a dedicated dispatch worker keeps up to
+``max_in_flight`` waves on device while the calling thread assembles and
+submits the next bucket (``core.solver.submit_wave`` separates the
+asynchronous JAX dispatch from the blocking result fetch), with the same
+fault-tolerance contract and bitwise-identical completions — see
+``docs/architecture.md``.  ``launch/serve.py --dgo`` is a thin
 CLI over this package (open-loop arrival simulation + saturation sweep),
 ``benchmarks/bench_serving.py`` measures bucketed-vs-per-request and
 degraded-mode throughput, and ``tests/test_chaos.py`` drives the whole
 loop through scripted fault plans.
 """
 from repro.serving.metrics import ServingMetrics, percentile
+from repro.serving.pipeline import PipelinedScheduler
 from repro.serving.queue import (
     DeadlineExceeded,
     DispatchFailed,
@@ -55,6 +64,7 @@ from repro.serving.scheduler import Scheduler, warmup
 __all__ = [
     "DeadlineExceeded",
     "DispatchFailed",
+    "PipelinedScheduler",
     "QueueFull",
     "RequestHandle",
     "RequestQueue",

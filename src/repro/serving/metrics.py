@@ -47,6 +47,13 @@ class ServingMetrics:
     padded_slots: int = 0   # inactive padding slots
     busy_s: float = 0.0     # wall seconds inside dispatches
     backoff_s: float = 0.0  # wall seconds slept waiting out retry backoff
+    # pipeline depth accounting (record_inflight, one sample per wave
+    # entering the dispatch stage): the synchronous scheduler always
+    # records depth 1; the pipelined scheduler records how many waves
+    # were in flight the moment it BEGAN assembling each bucket
+    submitted_waves: int = 0   # successfully dispatched waves sampled
+    overlapped_waves: int = 0  # submissions landing behind >= 1 in flight
+    peak_in_flight: int = 0    # deepest observed in-flight depth
 
     def __post_init__(self):
         self._latencies: deque[float] = deque(maxlen=LATENCY_WINDOW)
@@ -83,6 +90,19 @@ class ServingMetrics:
     def record_backoff(self, slept_s: float):
         self.backoff_s += slept_s
 
+    def record_inflight(self, depth: int):
+        """One wave entered the dispatch stage with ``depth`` waves (it
+        included) in flight when its assembly began.  ``overlap_fraction``
+        in the snapshot is the fraction of waves whose host-side assembly
+        and submission ran while another wave was still on device — 0.0
+        for the synchronous scheduler, approaching 1.0 when the pipeline
+        keeps the device continuously busy."""
+        self.submitted_waves += 1
+        if depth > 1:
+            self.overlapped_waves += 1
+        if depth > self.peak_in_flight:
+            self.peak_in_flight = depth
+
     def snapshot(self) -> dict:
         """Everything a serving endpoint reports: request/wave counters,
         bucket fill, latency percentiles, throughput over busy time, and
@@ -107,6 +127,13 @@ class ServingMetrics:
             "backoff_s": self.backoff_s,
             "runs_per_s": (self.completed / self.busy_s
                            if self.busy_s > 0 else None),
+            # pipeline health: how often submissions overlapped an
+            # in-flight wave, and the deepest depth reached (1 == fully
+            # synchronous; see record_inflight)
+            "overlap_fraction": (self.overlapped_waves
+                                 / self.submitted_waves
+                                 if self.submitted_waves else None),
+            "max_in_flight_depth": self.peak_in_flight,
             # percentiles over the LATENCY_WINDOW most recent completions
             # (p99 is the ROADMAP-requested tail metric — BENCH_serving
             # reports it as p99_latency_s, presence-asserted in CI)

@@ -220,21 +220,58 @@ class Scheduler:
             self.metrics_.record_warmup()
         return n
 
-    def run_wave(self) -> int:
-        """Serve one signature bucket; returns the number of requests
-        completed (0 when nothing was poppable — queue empty or every
-        bucket in backoff — or the dispatch failed and was requeued)."""
+    # -- shared retry/bisect state access ----------------------------------
+    # the pipelined scheduler (serving/pipeline.py) discovers failures on
+    # its dispatch-worker thread, so every touch of the _backoff/_bisect
+    # tables goes through these four hooks — the subclass wraps each in
+    # its retry-state lock without duplicating the policy
+
+    def _backoff_snapshot(self) -> dict:
+        """Point-in-time copy of the per-signature backoff table."""
+        return dict(self._backoff)
+
+    def _bisect_limit(self, sig: tuple) -> int | None:
+        """The armed quarantine-probe width for ``sig`` (None = none)."""
+        return self._bisect.get(sig)
+
+    def _note_success(self, sig: tuple) -> None:
+        """A dispatch of ``sig`` succeeded: the bucket recovered."""
+        self._backoff.pop(sig, None)
+        self._bisect.pop(sig, None)
+
+    def _note_failure(self, sig: tuple, n_bucket: int) -> bool:
+        """A dispatch of ``sig`` failed: extend its exponential backoff
+        and arm quarantine bisection when the bucket can still be split.
+        Returns whether it could (splittable => members uncharged)."""
+        fails = self._backoff.get(sig, (0, 0.0))[0] + 1
+        delay = 0.0
+        if self.retry_backoff_s > 0:
+            delay = min(self.backoff_cap_s,
+                        self.retry_backoff_s * (2.0 ** (fails - 1)))
+            delay *= 1.0 + self.backoff_jitter * float(
+                self._jitter_rng.random())
+        self._backoff[sig] = (fails, time.perf_counter() + delay)
+        splittable = self.quarantine and n_bucket > 1
+        if splittable:
+            self._bisect[sig] = (n_bucket + 1) // 2
+        return splittable
+
+    def _next_bucket(self) -> tuple[list[RequestHandle], int, tuple] | None:
+        """Pop + shape the next dispatchable bucket: skip backed-off
+        signatures, apply the armed quarantine-probe limit (excess
+        members requeued), snap the width.  Returns
+        ``(bucket, width, sig)`` or None when nothing is poppable."""
         now = time.perf_counter()
-        blocked = {sig for sig, (_, release) in self._backoff.items()
-                   if release > now}
+        blocked = {sig for sig, (_, release)
+                   in self._backoff_snapshot().items() if release > now}
         width = self.effective_wave_size()
         bucket = self.queue.pop_bucket(width, key=self.signature,
                                        token=self, exclude=blocked)
         self._last_popped = bool(bucket)
         if not bucket:
-            return 0
+            return None
         sig = bucket[0].signature
-        limit = self._bisect.get(sig)
+        limit = self._bisect_limit(sig)
         if limit is not None and len(bucket) > limit:
             # quarantine probe: retry only half of the failed bucket, so
             # a poison request is isolated in at most log2(W) probes
@@ -243,6 +280,39 @@ class Scheduler:
             bucket = bucket[:limit]
             width = self._snap_width(limit)
             self.metrics_.record_bisect()
+        return bucket, width, sig
+
+    def _complete_bucket(self, bucket: list[RequestHandle],
+                         results) -> int:
+        """Terminal bookkeeping for one successful dispatch: apply the
+        fault plan's result corruption, the per-handle non-finite policy,
+        and complete the handles.  Returns the completion count."""
+        if self.faults is not None:
+            results = self.faults.corrupt_results(
+                [h.seq for h in bucket], results)
+        completed = 0
+        for handle, result in zip(bucket, results):
+            if not result.extras.get("finite", True):
+                self.metrics_.record_nonfinite()
+                if self.on_nonfinite == "raise":
+                    handle._fail(NonFiniteResult(
+                        f"request {handle.seq} produced a non-finite "
+                        f"result", result))
+                    self.metrics_.record_failure()
+                    continue
+            handle._complete(result)
+            self.metrics_.record_completion(handle.latency_s)
+            completed += 1
+        return completed
+
+    def run_wave(self) -> int:
+        """Serve one signature bucket; returns the number of requests
+        completed (0 when nothing was poppable — queue empty or every
+        bucket in backoff — or the dispatch failed and was requeued)."""
+        popped = self._next_bucket()
+        if popped is None:
+            return 0
+        bucket, width, sig = popped
         self._dispatches += 1
         seqs = frozenset(h.seq for h in bucket)
         t0 = time.perf_counter()
@@ -262,33 +332,33 @@ class Scheduler:
             self._register_failure(sig, bucket, err)
             return 0
         elapsed = time.perf_counter() - t0
-        self._backoff.pop(sig, None)        # the bucket recovered
-        self._bisect.pop(sig, None)
-        if self.faults is not None:
-            results = self.faults.corrupt_results(
-                [h.seq for h in bucket], results)
-        completed = 0
-        for handle, result in zip(bucket, results):
-            if not result.extras.get("finite", True):
-                self.metrics_.record_nonfinite()
-                if self.on_nonfinite == "raise":
-                    handle._fail(NonFiniteResult(
-                        f"request {handle.seq} produced a non-finite "
-                        f"result", result))
-                    self.metrics_.record_failure()
-                    continue
-            handle._complete(result)
-            self.metrics_.record_completion(handle.latency_s)
-            completed += 1
+        self._note_success(sig)             # the bucket recovered
+        completed = self._complete_bucket(bucket, results)
         self.metrics_.record_wave(len(bucket), width, elapsed)
+        self.metrics_.record_inflight(1)    # synchronous: depth always 1
         self._note_dispatch_time(elapsed)
         return completed
+
+    def step(self) -> bool:
+        """Advance the serving loop by one unit of work; returns whether
+        a bucket was dispatched (successfully or not).  The serving CLI's
+        loop primitive: the synchronous scheduler blocks for one whole
+        wave here, the pipelined scheduler overrides this with a
+        non-blocking assemble-and-submit (``PipelinedScheduler.pump``)."""
+        self.run_wave()
+        return self._last_popped
+
+    def close(self) -> None:
+        """Release scheduler resources.  No-op for the synchronous
+        scheduler; the pipelined scheduler stops and joins its dispatch
+        worker.  Call sites treat both uniformly."""
 
     def backoff_wait_s(self) -> float:
         """Seconds until the earliest backed-off bucket releases (0.0
         when none is pending)."""
         now = time.perf_counter()
-        waits = [release - now for _, release in self._backoff.values()
+        waits = [release - now
+                 for _, release in self._backoff_snapshot().values()
                  if release > now]
         return min(waits) if waits else 0.0
 
@@ -312,17 +382,7 @@ class Scheduler:
         """One failed dispatch of ``sig``'s bucket: extend the bucket's
         exponential backoff, arm quarantine bisection for the retry, and
         requeue/fail the members (see :meth:`_requeue_failed`)."""
-        fails = self._backoff.get(sig, (0, 0.0))[0] + 1
-        delay = 0.0
-        if self.retry_backoff_s > 0:
-            delay = min(self.backoff_cap_s,
-                        self.retry_backoff_s * (2.0 ** (fails - 1)))
-            delay *= 1.0 + self.backoff_jitter * float(
-                self._jitter_rng.random())
-        self._backoff[sig] = (fails, time.perf_counter() + delay)
-        splittable = self.quarantine and len(bucket) > 1
-        if splittable:
-            self._bisect[sig] = (len(bucket) + 1) // 2
+        splittable = self._note_failure(sig, len(bucket))
         self._requeue_failed(bucket, err, charge=not splittable)
 
     def _requeue_failed(self, bucket: list[RequestHandle],
@@ -359,7 +419,7 @@ class Scheduler:
         out["rejected"] = self.queue.rejected
         out["shed"] = self.queue.shed
         out["buckets_in_backoff"] = sum(
-            1 for _, release in self._backoff.values()
+            1 for _, release in self._backoff_snapshot().values()
             if release > time.perf_counter())
         if self.straggler is not None:
             out["straggler_quorum_fraction"] = \

@@ -26,7 +26,8 @@ from repro.core.solver import (
 )
 from repro.runtime.failure import FaultPlan, PoisonError, SimulatedFailure
 from repro.serving import (
-    DeadlineExceeded, DispatchFailed, QueueFull, RequestQueue, Scheduler,
+    DeadlineExceeded, DispatchFailed, PipelinedScheduler, QueueFull,
+    RequestQueue, Scheduler,
 )
 
 pytestmark = pytest.mark.timeout(300)
@@ -96,6 +97,44 @@ def test_chaos_mixed_faults_all_handles_terminate_bitwise(problems):
             continue
         # survivors may have ridden failed/bisected/padded waves — the
         # math must not know: bitwise parity with the fault-free path
+        assert h.error is None, h
+        _assert_bitwise(h, _reference(req))
+    m = sched.metrics()
+    assert m["fault_injections"] == plan.injected > 0
+    assert m["completed"] == 11 and m["failed"] == 1
+
+
+@pytest.mark.timeout(240)
+def test_chaos_mixed_faults_pipelined_scheduler(problems):
+    """The ACCEPTANCE chaos run through the PIPELINED scheduler: faults
+    now surface on two threads (submit-side on the scheduler thread,
+    fetch-side on the dispatch worker), and the same contract holds —
+    every handle terminates, completions are bitwise fault-free."""
+    plan = FaultPlan(seed=7, dispatch_error_rate=0.25, latency_rate=0.25,
+                     latency_s=0.002, error_dispatches={1},
+                     latency_dispatches={3}, max_failures=8)
+    with PipelinedScheduler(wave_size=4, max_in_flight=2, faults=plan,
+                            max_retries=2, retry_backoff_s=0.001,
+                            backoff_cap_s=0.01) as sched:
+        reqs = [SolveRequest(
+            problems["rastrigin" if i % 3 else "quadratic"],
+            seed=100 + i, max_iters=MAX_ITERS) for i in range(12)]
+        handles = [sched.submit(r) for r in reqs]
+        plan.poison_seqs = frozenset({handles[5].seq})
+        plan.nonfinite_seqs = frozenset({handles[8].seq})
+        sched.drain()
+
+    assert all(h.done() for h in handles), "every handle terminates"
+    assert plan.injected_errors >= 1 and plan.injected_poison >= 1
+    poisoned = handles[5]
+    assert isinstance(poisoned.error, DispatchFailed)
+    assert isinstance(poisoned.error.__cause__, PoisonError)
+    corrupted = handles[8]
+    assert corrupted.error is None
+    assert corrupted.result().extras["finite"] is False
+    for i, (h, req) in enumerate(zip(handles, reqs)):
+        if i in (5, 8):
+            continue
         assert h.error is None, h
         _assert_bitwise(h, _reference(req))
     m = sched.metrics()

@@ -490,11 +490,46 @@ def test_cli_src_repro_fallback_resolution(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# markdown: doc snippets obey the same invariants
+# ---------------------------------------------------------------------------
+
+def test_markdown_python_fences_are_linted(tmp_path):
+    write(tmp_path, "docs/guide.md", """\
+        # A guide
+
+        [a prose link](elsewhere.md) and `inline code`.
+
+        ```python
+        from jax.experimental.shard_map import shard_map
+        ```
+
+        ```sh
+        import jax.experimental.shard_map   # shell block: not Python
+        ```
+    """)
+    findings, _ = run(tmp_path, "docs", select="DGL001")
+    assert codes(findings) == ["DGL001"]
+    # line numbers point at the real markdown line, not a fence-local
+    # offset — editors and CI annotations land on the snippet itself
+    assert findings[0].path == "docs/guide.md" and findings[0].line == 6
+
+
+def test_markdown_invalid_snippets_lint_as_empty(tmp_path):
+    write(tmp_path, "docs/frag.md", """\
+        ```python
+        res = solve(problem,        # elided fragment, not valid alone
+        ```
+    """)
+    findings, _ = run(tmp_path, "docs")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # the real tree is clean
 # ---------------------------------------------------------------------------
 
 def test_real_tree_is_clean():
-    findings, _ = lint_paths(["src/repro", "benchmarks", "launch"],
+    findings, _ = lint_paths(["src/repro", "benchmarks", "launch", "docs"],
                              root=REPO_ROOT)
     from tools.dgolint import load_baseline
     new, _stale = match_baseline(findings, load_baseline())

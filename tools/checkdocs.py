@@ -1,0 +1,210 @@
+"""Docs gate: intra-repo markdown link checking + doc/code sync.
+
+Two checks, both stdlib-only (no JAX import — this runs first in the
+CI ``lint`` job, before the package installs):
+
+* **links** — every inline markdown link in README.md, ROADMAP.md and
+  ``docs/`` that targets a repo path must resolve to an existing file
+  (external ``http(s)``/``mailto`` targets and pure ``#anchors`` are
+  skipped; code fences are ignored so exemplar snippets can contain
+  link-shaped text);
+* **api sync** — the contract tables in ``docs/api.md`` must match the
+  snapshot tests in ``tests/test_api.py``: the per-strategy
+  ``SolveResult.extras`` key sets (the ``EXTRAS_CONTRACT`` literal),
+  the ``solve_many`` extras set, and the ``engine_signature``
+  component list (count + the ``"batched"`` family tag).  The tests
+  pin code-vs-contract; this pins docs-vs-contract, so all three move
+  in one change or the build fails.
+
+Usage::
+
+    python -m tools.checkdocs            # check default paths
+    python -m tools.checkdocs README.md docs
+
+Exit codes: 0 clean, 1 findings, 2 usage error.  ``tests/test_docs.py``
+runs the same checks under pytest (plus a live ``engine_signature``
+arity check that needs JAX).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+DEFAULT_PATHS = ["README.md", "ROADMAP.md", "docs"]
+API_DOC = Path("docs") / "api.md"
+TEST_API = Path("tests") / "test_api.py"
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+_TABLE_ROW = re.compile(r"^\|\s*`([^`]+)`[^|]*\|(.+)\|\s*$")
+_LIST_ITEM = re.compile(r"^\d+\.\s+(.*)$")
+
+
+def _doc_lines(path: Path) -> list[tuple[int, str]]:
+    """(lineno, line) pairs with fenced code blocks blanked out."""
+    out = []
+    in_fence = False
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append((i, line))
+    return out
+
+
+# -- link checking ----------------------------------------------------------
+
+def iter_markdown(paths: list[str], root: Path) -> list[Path]:
+    files: list[Path] = []
+    for name in paths:
+        p = root / name
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            raise FileNotFoundError(f"no such file or directory: {name}")
+    return files
+
+
+def check_links(paths: list[str], root: Path) -> list[str]:
+    """Dangling intra-repo link targets, as ``file:line: target``."""
+    failures = []
+    for md in iter_markdown(paths, root):
+        for lineno, line in _doc_lines(md):
+            for target in _LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                base = root if rel.startswith("/") else md.parent
+                if not (base / rel.lstrip("/")).exists():
+                    failures.append(
+                        f"{md.relative_to(root)}:{lineno}: broken link "
+                        f"target {target!r}")
+    return failures
+
+
+# -- api-doc sync -----------------------------------------------------------
+
+def contract_from_tests(root: Path) -> tuple[dict, set]:
+    """(EXTRAS_CONTRACT, solve_many extras set) parsed out of
+    tests/test_api.py without importing it (no JAX needed)."""
+    tree = ast.parse((root / TEST_API).read_text())
+    contract = None
+    solve_many: set | None = None
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name)
+                        and t.id == "EXTRAS_CONTRACT"
+                        for t in node.targets)):
+            contract = ast.literal_eval(node.value)
+        if (isinstance(node, ast.FunctionDef)
+                and node.name == "test_solve_many_extras_contract"):
+            sets = [n for n in ast.walk(node) if isinstance(n, ast.Set)]
+            if len(sets) == 1:
+                solve_many = ast.literal_eval(sets[0])
+    if contract is None:
+        raise ValueError(f"{TEST_API}: EXTRAS_CONTRACT literal not found")
+    if solve_many is None:
+        raise ValueError(f"{TEST_API}: solve_many extras set literal "
+                         f"not found (want exactly one set display in "
+                         f"test_solve_many_extras_contract)")
+    return contract, solve_many
+
+
+def doc_extras_tables(root: Path) -> dict[str, set[str]]:
+    """Backtick-named table rows of docs/api.md -> their key sets."""
+    rows = {}
+    for _, line in _doc_lines(root / API_DOC):
+        m = _TABLE_ROW.match(line)
+        if m:
+            rows[m.group(1)] = set(re.findall(r"`([^`]+)`", m.group(2)))
+    return rows
+
+
+def doc_signature_components(root: Path) -> list[str]:
+    """The numbered engine_signature component list of docs/api.md
+    (first matching numbered list in the document)."""
+    items: list[str] = []
+    for _, line in _doc_lines(root / API_DOC):
+        m = _LIST_ITEM.match(line)
+        if m:
+            if items and line.startswith("1."):
+                break                   # a second list restarts at 1.
+            items.append(m.group(1))
+        elif items and line.strip() == "" and len(items) >= 2:
+            break
+    return items
+
+
+def check_api_doc(root: Path) -> list[str]:
+    failures = []
+    doc = str(API_DOC)
+    try:
+        contract, solve_many = contract_from_tests(root)
+    except (OSError, ValueError, SyntaxError) as e:
+        return [f"{TEST_API}: cannot extract contract: {e}"]
+    rows = doc_extras_tables(root)
+    for name, keys in sorted(contract.items()):
+        if name not in rows:
+            failures.append(f"{doc}: missing extras table row for "
+                            f"strategy `{name}`")
+        elif rows[name] != keys:
+            failures.append(
+                f"{doc}: extras keys for `{name}` are "
+                f"{sorted(rows[name])}, tests/test_api.py pins "
+                f"{sorted(keys)}")
+    if "solve_many" not in rows:
+        failures.append(f"{doc}: missing extras table row for "
+                        f"`solve_many`")
+    elif rows["solve_many"] != solve_many:
+        failures.append(
+            f"{doc}: solve_many extras keys are "
+            f"{sorted(rows['solve_many'])}, tests/test_api.py pins "
+            f"{sorted(solve_many)}")
+    components = doc_signature_components(root)
+    if len(components) != 7:
+        failures.append(f"{doc}: engine_signature component list has "
+                        f"{len(components)} items, the tuple has 7")
+    if not components or "batched" not in components[0]:
+        failures.append(f"{doc}: engine_signature component 1 must name "
+                        f"the \"batched\" family tag")
+    return failures
+
+
+# -- CLI --------------------------------------------------------------------
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.checkdocs",
+        description="Markdown link + api-doc sync checks (stdlib only).")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"markdown files/dirs to link-check (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: cwd)")
+    args = ap.parse_args(argv)
+    root = args.root if args.root is not None else Path.cwd()
+    try:
+        failures = check_links(args.paths or DEFAULT_PATHS, root)
+    except FileNotFoundError as e:
+        print(f"checkdocs: {e}", file=sys.stderr)
+        return 2
+    if (root / API_DOC).exists():
+        failures += check_api_doc(root)
+    else:
+        failures.append(f"{API_DOC}: missing (the api contract doc is "
+                        f"load-bearing; see tools/checkdocs.py)")
+    for f in failures:
+        print(f)
+    print(f"checkdocs: {len(failures)} finding(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

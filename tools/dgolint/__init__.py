@@ -23,11 +23,15 @@ express (they are about THIS codebase's contracts, not Python style):
 
 Everything is stdlib ``ast`` — no JAX import, no third-party deps — so
 the gate runs anywhere, including environments where ruff/jax are not
-installable.
+installable.  Markdown files are linted too: ```python fenced blocks
+are extracted into a line-preserving Python view (prose blanked, line
+numbers intact), so documentation examples obey the same invariants as
+the code they document — a doc snippet importing ``shard_map`` straight
+from ``jax`` is a DGL001 finding like any other.
 
 Usage::
 
-    python -m tools.dgolint src/repro benchmarks launch
+    python -m tools.dgolint src/repro benchmarks launch docs
 
 Suppressions: append ``# dgolint: disable=DGL005`` to the offending
 line (or put the comment alone on the line directly above it).  A
@@ -79,6 +83,34 @@ class Finding:
 
 _SUPPRESS_RE = re.compile(r"#\s*dgolint:\s*disable=([A-Z0-9,\s]+)")
 
+_MD_FENCE_RE = re.compile(r"^\s*(```|~~~)\s*(\S*)")
+
+
+def _markdown_python_view(source: str) -> str:
+    """A line-preserving Python view of a markdown file: the contents
+    of ```python fenced blocks verbatim, every other line (prose,
+    fence markers, non-python fences) blanked.  Line numbers in
+    findings therefore point at the real markdown line, so the same
+    rules (e.g. DGL001: doc examples must use the compat shims, not
+    raw ``jax`` imports) run on documentation snippets unchanged."""
+    out = []
+    fence = None                        # the opener token while inside
+    fence_is_python = False
+    for line in source.splitlines():
+        m = _MD_FENCE_RE.match(line)
+        if m and fence is None:
+            fence = m.group(1)
+            fence_is_python = m.group(2).lower() in ("python", "py")
+            out.append("")
+        elif m and m.group(1) == fence and not m.group(2):
+            fence = None
+            fence_is_python = False
+            out.append("")
+        else:
+            out.append(line if fence is not None and fence_is_python
+                       else "")
+    return "\n".join(out)
+
 
 @dataclasses.dataclass
 class SourceFile:
@@ -93,7 +125,18 @@ class SourceFile:
     @classmethod
     def parse(cls, abspath: Path, relpath: str) -> "SourceFile":
         source = abspath.read_text()
-        tree = ast.parse(source, filename=relpath)
+        if abspath.suffix == ".md":
+            source = _markdown_python_view(source)
+            # a doc snippet that is not valid standalone Python (an
+            # elided fragment) lints as empty rather than failing the
+            # whole run — docs linting is best-effort by design
+            try:
+                tree = ast.parse(source, filename=relpath)
+            except SyntaxError:
+                source = ""
+                tree = ast.parse("", filename=relpath)
+        else:
+            tree = ast.parse(source, filename=relpath)
         return cls(path=relpath, abspath=abspath, source=source,
                    tree=tree, suppressions=_suppression_table(source))
 
@@ -180,7 +223,8 @@ def collect_files(paths: Sequence[str | Path],
             candidates = [resolved]
         else:
             candidates = sorted(
-                f for f in resolved.rglob("*.py")
+                f for pat in ("*.py", "*.md")
+                for f in resolved.rglob(pat)
                 if not (_SKIP_DIRS & set(f.parts)))
         for f in candidates:
             f = f.resolve()

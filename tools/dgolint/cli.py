@@ -18,7 +18,7 @@ from tools.dgolint import (
     save_baseline,
 )
 
-DEFAULT_PATHS = ["src/repro", "benchmarks", "launch"]
+DEFAULT_PATHS = ["src/repro", "benchmarks", "launch", "docs"]
 
 
 def build_parser() -> argparse.ArgumentParser:
