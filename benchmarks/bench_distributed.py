@@ -26,8 +26,10 @@ them) so the dispatch-overhead claim is a column, not an assertion. Emits
 
   PYTHONPATH=src python benchmarks/bench_distributed.py [--fast]
 
-Run standalone it forces an 8-virtual-device CPU mesh (the SNIPPETS
-idiom); under ``benchmarks.run`` it uses whatever devices exist.
+Run standalone it forces a ``DGO_HOST_DEVICES`` (default 8) virtual-device
+CPU mesh; under an explicit ``XLA_FLAGS`` device count — e.g. wrapped by
+``python -m repro.launch.launcher --devices N -- ...`` — it uses whatever
+devices exist.
 """
 from __future__ import annotations
 
@@ -35,9 +37,10 @@ import os
 
 if __name__ == "__main__" and "xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=8"
-                               ).strip()
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ.get("DGO_HOST_DEVICES", "8")).strip()
 
 import time
 
@@ -67,7 +70,14 @@ def run(fast: bool = True):
     from repro.core import cache
     from repro.core.distributed import make_distributed_step
     from repro.core.encoding import decode, encode
-    from repro.core.solver import Batched, Distributed, Problem, Sequential, solve
+    from repro.core.solver import (
+        Batched,
+        Distributed,
+        Fused,
+        Problem,
+        Sequential,
+        solve,
+    )
 
     reps = 5 if fast else 20
     n_dev = jax.device_count()
@@ -181,6 +191,29 @@ def run(fast: bool = True):
     assert np.isclose(float(r_folded.best_f), v_chained, atol=1e-6), \
         (float(r_folded.best_f), v_chained)
 
+    # --- fused engine width: single compilation vs coarse/fine buckets ------
+    # a (3..11)-bit schedule so a coarse bucket exists (resolutions at
+    # <= half the final width run at their own buffer width); same
+    # trajectory either way — asserted bitwise
+    prob_wide = problem.replace(encoding=enc.with_bits(3))
+    x0_f = jnp.asarray(x0, jnp.float32)
+
+    def fused_single():
+        return solve(prob_wide, Fused(max_bits=SCHED_MAX_BITS), x0=x0_f,
+                     max_iters=MAX_ITERS)
+
+    def fused_bucketed():
+        return solve(prob_wide,
+                     Fused(max_bits=SCHED_MAX_BITS, bucketed=True),
+                     x0=x0_f, max_iters=MAX_ITERS)
+
+    t_fused = _median_time(fused_single, reps)
+    t_fused_b = _median_time(fused_bucketed, reps)
+    r_fused, r_fused_b = fused_single(), fused_bucketed()
+    assert float(r_fused.best_f) == float(r_fused_b.best_f), \
+        (float(r_fused.best_f), float(r_fused_b.best_f))
+    assert np.array_equal(r_fused.trace, r_fused_b.trace)
+
     cstats = cache.totals(suffix=".engine")   # engine compilations only
     #         (memo tables like solver.problem are excluded, so these
     #          rows keep meaning "compiled engines" as the notes say)
@@ -238,6 +271,16 @@ def run(fast: bool = True):
          "dispatch-overhead saving of folding the schedule on device "
          "(same trajectory — asserted — so the ratio is pure dispatch/"
          "re-encode overhead)"),
+        ("bench_distributed.fused_single_wall_s", t_fused,
+         "fused engine, 3..11-bit schedule, ONE compilation at max width"),
+        ("bench_distributed.fused_bucketed_wall_s", t_fused_b,
+         "same schedule in TWO width buckets (coarse resolutions at "
+         "their own buffer width; trajectory bitwise-asserted)"),
+        ("bench_distributed.fused_bucketed_over_single",
+         t_fused / t_fused_b,
+         "UNGATED: >1 means the width buckets pay for their extra "
+         "dispatch; tiny shapes on a time-sliced container understate "
+         "the coarse-phase saving"),
         # compilation-cache health (core/cache.py): engines_built should
         # stay flat across PRs for this fixed workload — a jump means a
         # cache key started churning (recompile regression); hits growing

@@ -21,8 +21,9 @@ measures that on a real (CI-sized) zoo model:
 
   PYTHONPATH=src python benchmarks/bench_subspace.py [--fast]
 
-Run standalone it forces an 8-virtual-device CPU mesh (the SNIPPETS
-idiom); under ``benchmarks.run`` it uses whatever devices exist.
+Run standalone it forces a ``DGO_HOST_DEVICES`` (default 8) virtual-device
+CPU mesh; under an explicit ``XLA_FLAGS`` device count (e.g. via
+``repro.launch.launcher --devices N``) it uses whatever devices exist.
 """
 from __future__ import annotations
 
@@ -30,9 +31,10 @@ import os
 
 if __name__ == "__main__" and "xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=8"
-                               ).strip()
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ.get("DGO_HOST_DEVICES", "8")).strip()
 
 import time
 

@@ -67,6 +67,18 @@ GATED = {
         # regress below its committed baseline either way
         "bench_serving.pipelined_over_synchronous": "higher",
     },
+    "scaling": {
+        # mesh-size invariance is a hard correctness property: the
+        # reference trajectory must stay bitwise identical at every
+        # swept virtual-device count (1.0 = match; any drop fails)
+        "bench_scaling.trajectory_bitwise_match": "higher",
+        # the folded-vs-chained dispatch ratio at the reference 8-device
+        # mesh — the one point every sweep profile contains; the per-size
+        # speedup_vs_pe* and parallel_fraction rows are trend-reported
+        # only (virtual devices time-slice the same cores, so cross-size
+        # wall ratios do not transfer)
+        "bench_scaling.pe8_speedup_folded_vs_chained": "higher",
+    },
 }
 
 # REQUIRED metrics per bench family: presence-asserted in the fresh run
@@ -76,6 +88,8 @@ GATED = {
 # criterion consume them)
 REQUIRED = {
     "serving": ["bench_serving.p99_latency_s"],
+    "scaling": ["bench_scaling.pe8_folded_wall_s",
+                "bench_scaling.pe8_wave_runs_per_s"],
 }
 
 

@@ -25,6 +25,13 @@ Shims provided:
 * ``mesh_from_devices(devices, axis_names, *, axis_types=None)`` — the
   ``Mesh(devices, names, axis_types=...)`` constructor kwarg, dropped when
   unsupported.
+* ``distributed_initialize`` / ``process_index`` / ``process_count`` /
+  ``is_multiprocess`` — the multi-process runtime surface.  The names are
+  stable across both supported lines, but the CPU cross-process collectives
+  backend selection (``jax_cpu_collectives_implementation``) and the
+  ``initialize`` kwarg set are not; routing every call site through here
+  keeps the variance in one file (dgolint DGL007 enforces it, the same way
+  DGL001 does for the mesh/shard_map names above).
 """
 from __future__ import annotations
 
@@ -40,8 +47,12 @@ __all__ = [
     "HAS_NATIVE_AXIS_TYPE",
     "abstract_mesh",
     "axis_size",
+    "distributed_initialize",
+    "is_multiprocess",
     "make_mesh",
     "mesh_from_devices",
+    "process_count",
+    "process_index",
     "pure_callback",
     "shard_map",
 ]
@@ -195,3 +206,58 @@ def abstract_mesh(axis_shapes: Sequence[int],
     if _ABSTRACT_MESH_LEGACY:
         return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
     return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+
+
+# ---------------------------------------------------------------------------
+# multi-process runtime
+# ---------------------------------------------------------------------------
+# ``jax.distributed.initialize`` and the process-topology queries keep their
+# names on both supported lines, but two things vary: which kwargs
+# ``initialize`` accepts, and how CPU cross-process collectives are enabled
+# (0.4.37 needs ``jax_cpu_collectives_implementation`` set to "gloo" before
+# the runtime comes up; newer lines rename/default it).  Resolve the kwarg
+# set once; treat the collectives knob as best-effort.
+
+_DIST_INIT_KWARGS = _kwarg_names(jax.distributed.initialize)
+
+
+def distributed_initialize(coordinator_address: str, num_processes: int,
+                           process_id: int, *,
+                           cpu_collectives: str | None = "gloo") -> None:
+    """Version-portable ``jax.distributed.initialize`` for CPU fleets.
+
+    Selects the ``cpu_collectives`` backend when the installed JAX exposes
+    the config option (required for cross-process CPU collectives on
+    0.4.x; a no-op where the option is absent or already defaulted), then
+    brings up the distributed runtime.  Must run before any computation —
+    device state is frozen at first use.
+    """
+    if cpu_collectives is not None:
+        try:
+            jax.config.update("jax_cpu_collectives_implementation",
+                              cpu_collectives)
+        except (AttributeError, ValueError):
+            pass  # option renamed/absent on this line: rely on its default
+    kwargs: dict[str, Any] = {
+        "coordinator_address": coordinator_address,
+        "num_processes": num_processes,
+        "process_id": process_id,
+    }
+    kwargs = {k: v for k, v in kwargs.items()
+              if not _DIST_INIT_KWARGS or k in _DIST_INIT_KWARGS}
+    jax.distributed.initialize(**kwargs)
+
+
+def process_index() -> int:
+    """This process's rank in the fleet (0 for single-process runs)."""
+    return int(jax.process_index())
+
+
+def process_count() -> int:
+    """Number of JAX processes in the fleet (1 for single-process runs)."""
+    return int(jax.process_count())
+
+
+def is_multiprocess() -> bool:
+    """True when the runtime spans more than one process."""
+    return process_count() > 1

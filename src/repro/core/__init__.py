@@ -31,6 +31,7 @@ from repro.core.solver import (
     SolveResult,
     Strategy,
     engine_signature,
+    resolve_mesh,
     result_is_finite,
     solve,
     solve_many,
@@ -51,6 +52,7 @@ __all__ = [
     "SolveResult",
     "Strategy",
     "engine_signature",
+    "resolve_mesh",
     "result_is_finite",
     "solve",
     "solve_many",

@@ -195,21 +195,18 @@ def _engine_tables(cfg: DGOConfig):
     return st, schedule_tables(st.n_vars, st.res_bits, st.lo, st.hi)
 
 
-def make_fused_engine(f: Callable[[jax.Array], jax.Array],
-                      cfg: DGOConfig) -> Callable:
-    """Build ``engine(bits0, val0) -> EngineState``: full DGO in ONE
-    jitted ``lax.while_loop``.
+def _engine_loop(f: Callable[[jax.Array], jax.Array], cfg: DGOConfig, *,
+                 t_max: int | None = None):
+    """The fused engine's while_loop as a resumable ``loop(s0)``.
 
-    Children of the current parent are generated at full buffer width by
-    XOR against the stacked per-resolution pattern tables
-    (``population.schedule_tables`` — the resolution index carried in the
-    loop state gathers its table); decode is one exact matmul against the
-    stacked weight tables; tail children beyond the live population
-    2*n_vars*bits-1 are masked to +inf. This is the engine that the
-    ``fused`` strategy drives and ``clustered`` vmaps; ``kernels/popstep``
-    is its static-shape Pallas counterpart for the sharded path.
+    ``make_fused_engine`` wraps it with the standard initial state; the
+    bucketed variant below also enters it mid-schedule with a carried
+    state.  ``t_max`` overrides the trace-write clip bound (a resumed
+    bucket carries the FULL-length trace buffer so its step indices keep
+    lining up with the single-compilation engine's).
     """
     st, tables = _engine_tables(cfg)
+    cap = st.t_max if t_max is None else t_max
     n_res = tables.n_res
     f_batch = jax.vmap(f)
     child_ids = jnp.arange(st.p_max, dtype=jnp.int32)
@@ -233,7 +230,7 @@ def make_fused_engine(f: Callable[[jax.Array], jax.Array],
         better_ever = new_val < s.best_val
         best_x = jnp.where(better_ever, tables.decode(new_bits, ri), s.best_x)
         best_run = jnp.where(better_ever, new_val, s.best_val)
-        trace = s.trace.at[jnp.clip(s.iters, 0, st.t_max - 1)].set(best_run)
+        trace = s.trace.at[jnp.clip(s.iters, 0, cap - 1)].set(best_run)
         return EngineState(s.res_idx, new_bits, new_val, best_run, best_x,
                            improved, s.it_in_res + 1, s.iters + 1,
                            s.evals + tables.pop[ri], trace)
@@ -257,6 +254,28 @@ def make_fused_engine(f: Callable[[jax.Array], jax.Array],
         stall = jnp.logical_or(~s.improved, s.it_in_res >= st.max_iters)
         return jax.lax.cond(stall, escalate, iterate, s)
 
+    def loop(s0: EngineState) -> EngineState:
+        return jax.lax.while_loop(cond, body, s0)
+
+    return st, tables, loop
+
+
+def make_fused_engine(f: Callable[[jax.Array], jax.Array],
+                      cfg: DGOConfig) -> Callable:
+    """Build ``engine(bits0, val0) -> EngineState``: full DGO in ONE
+    jitted ``lax.while_loop``.
+
+    Children of the current parent are generated at full buffer width by
+    XOR against the stacked per-resolution pattern tables
+    (``population.schedule_tables`` — the resolution index carried in the
+    loop state gathers its table); decode is one exact matmul against the
+    stacked weight tables; tail children beyond the live population
+    2*n_vars*bits-1 are masked to +inf. This is the engine that the
+    ``fused`` strategy drives and ``clustered`` vmaps; ``kernels/popstep``
+    is its static-shape Pallas counterpart for the sharded path.
+    """
+    st, tables, loop = _engine_loop(f, cfg)
+
     def engine(bits0: jax.Array, val0: jax.Array) -> EngineState:
         s0 = EngineState(
             res_idx=jnp.int32(0), bits=bits0,
@@ -265,7 +284,7 @@ def make_fused_engine(f: Callable[[jax.Array], jax.Array],
             improved=jnp.bool_(True), it_in_res=jnp.int32(0),
             iters=jnp.int32(0), evals=jnp.int32(0),
             trace=jnp.full((st.t_max,), val0, jnp.float32))
-        return jax.lax.while_loop(cond, body, s0)
+        return loop(s0)
 
     return engine
 
@@ -285,6 +304,89 @@ def _fused_engine(f: Callable, cfg: DGOConfig):
 def _clustered_engine(f: Callable, cfg: DGOConfig):
     return _ENGINES.get(("clustered", f, cfg),
                         lambda: jax.jit(jax.vmap(make_fused_engine(f, cfg))))
+
+
+# ---------------------------------------------------------------------------
+# bucketed (two-compilation) fused engine: coarse resolutions at their own
+# buffer width
+# ---------------------------------------------------------------------------
+
+def bucket_split(cfg: DGOConfig) -> int:
+    """Default coarse-bucket length: resolutions at most HALF the final
+    one.  Their buffer (and population) width is then <= half the
+    single-compilation engine's, so each coarse iteration touches <= a
+    quarter of the full-width children matrix.  0 or ``n_res`` means no
+    worthwhile split (the bucketed entry points degrade to the plain
+    fused engine)."""
+    res = tuple(cfg.resolutions()) or (cfg.encoding.bits,)
+    return sum(1 for b in res if 2 * b <= res[-1])
+
+
+def make_fused_engine_bucketed(f: Callable[[jax.Array], jax.Array],
+                               cfg: DGOConfig,
+                               n_coarse: int | None = None) -> Callable:
+    """``engine(bits0, val0) -> EngineState`` in TWO compilations.
+
+    The single-compilation engine (``make_fused_engine``) masks every
+    iteration to the maximum buffer width ``2*n_vars*max_bits-1`` even
+    while the schedule is still at coarse resolutions.  This variant
+    splits the schedule at ``n_coarse`` (default: :func:`bucket_split`):
+    the coarse bucket compiles at its own (smaller) width — sharing its
+    compilation with a plain fused engine of the truncated schedule —
+    then a resume program replays the boundary escalation (paper step 5
+    across the two table stacks) and runs the fine bucket, carrying
+    best-so-far, counters and the full-length trace.  The trajectory is
+    bitwise the single-compilation engine's (pinned by tests); ``bits0``
+    must be encoded at the COARSE bucket's width (see
+    ``_bucketed_result``).
+    """
+    res = tuple(cfg.resolutions()) or (cfg.encoding.bits,)
+    if n_coarse is None:
+        n_coarse = bucket_split(cfg)
+    if not 0 < n_coarse < len(res):
+        raise ValueError(
+            f"n_coarse must split the {len(res)}-resolution schedule, "
+            f"got {n_coarse} (no worthwhile split -> use the plain "
+            f"fused engine)")
+    cfg_a = dataclasses.replace(cfg, max_bits=res[n_coarse - 1])
+    cfg_b = dataclasses.replace(
+        cfg, encoding=cfg.encoding.with_bits(res[n_coarse]))
+    st_full = _engine_static(cfg)
+    st_a, tables_a = _engine_tables(cfg_a)
+    _, tables_b, loop_b = _engine_loop(f, cfg_b, t_max=st_full.t_max)
+    engine_a = _fused_engine(f, cfg_a)     # shared with plain fused(cfg_a)
+    ri_a = jnp.int32(n_coarse - 1)
+    r0_b = jnp.int32(0)
+
+    def resume(bits_a, best_val, best_x, iters, evals, trace):
+        # the single-compilation engine's escalate across the bucket
+        # boundary, replayed across the two table stacks (reencode =
+        # decode at the last coarse resolution, encode at the first fine
+        # one), then the fine-bucket while_loop
+        x_edge = tables_a.decode(bits_a, ri_a)
+        bits0 = tables_b.encode(x_edge, r0_b)
+        val2 = f(tables_b.decode(bits0, r0_b))
+        better = val2 < best_val
+        s0 = EngineState(
+            res_idx=jnp.int32(0), bits=bits0, val=val2.astype(jnp.float32),
+            best_val=jnp.where(better, val2, best_val),
+            best_x=jnp.where(better, tables_b.decode(bits0, r0_b), best_x),
+            improved=jnp.bool_(True), it_in_res=jnp.int32(0),
+            iters=iters, evals=evals, trace=trace)
+        return loop_b(s0)
+
+    resume_c = _ENGINES.get(("fused-bucket-fine", f, cfg, n_coarse),
+                            lambda: jax.jit(resume))
+    t_pad = st_full.t_max - st_a.t_max
+
+    def engine(bits0: jax.Array, val0: jax.Array) -> EngineState:
+        sa = engine_a(bits0, val0)
+        trace = jnp.concatenate(
+            [sa.trace, jnp.full((t_pad,), val0, jnp.float32)])
+        return resume_c(sa.bits, sa.best_val, sa.best_x, sa.iters,
+                        sa.evals, trace)
+
+    return engine
 
 
 def _best_bits(best_x: jax.Array, cfg: DGOConfig) -> jax.Array:
@@ -329,6 +431,37 @@ def _fused_result(f: Callable[[jax.Array], jax.Array],
     bits0 = tables.encode(jnp.asarray(x0, jnp.float32), r0)
     val0 = f(tables.decode(bits0, r0))
     state = _fused_engine(f, cfg)(bits0, val0)
+    return _result_from_state(state, cfg)
+
+
+def _bucketed_result(f: Callable[[jax.Array], jax.Array],
+                     cfg: DGOConfig,
+                     x0: jax.Array | None = None,
+                     key: jax.Array | None = None) -> DGOResult:
+    """``_fused_result`` through the two-compilation bucketed engine.
+
+    Bitwise the fused result (the bucket boundary replays the same
+    escalation); schedules with no worthwhile split (:func:`bucket_split`
+    returns 0 or everything) fall back to the plain fused engine.
+    """
+    res = tuple(cfg.resolutions()) or (cfg.encoding.bits,)
+    n_coarse = bucket_split(cfg)
+    if not 0 < n_coarse < len(res):
+        return _fused_result(f, cfg, x0=x0, key=key)
+    enc0 = cfg.encoding
+    if x0 is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        x0 = jax.random.uniform(key, (enc0.n_vars,), minval=enc0.lo,
+                                maxval=enc0.hi)
+    # start bits/value encoded at the COARSE bucket's width — identical
+    # live prefix to the full-width encoding (the tail is exact zeros)
+    cfg_a = dataclasses.replace(cfg, max_bits=res[n_coarse - 1])
+    _, tables_a = _engine_tables(cfg_a)
+    r0 = jnp.int32(0)
+    bits0 = tables_a.encode(jnp.asarray(x0, jnp.float32), r0)
+    val0 = f(tables_a.decode(bits0, r0))
+    state = make_fused_engine_bucketed(f, cfg, n_coarse)(bits0, val0)
     return _result_from_state(state, cfg)
 
 

@@ -65,13 +65,32 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import axis_size, shard_map
+from repro.compat import axis_size, process_index, shard_map
 from repro.core.cache import get_cache
 from repro.core.encoding import Encoding, decode
 from repro.core.population import generate_children, segment_patterns
 from repro.kernels.popstep.ops import backend, population_step_ids
 
 _INNERS = ("fused", "popstep", "jnp")
+
+
+def _place_inputs(mesh: Mesh, *arrays):
+    """Replicate host inputs onto a process-spanning mesh explicitly.
+
+    Single-process meshes let jit place uncommitted arrays itself; under
+    a ``jax.distributed`` fleet (launcher ``--processes K``) each worker
+    must ``device_put`` its (identical) host copy of the request batch
+    onto its own shard of the global device set before the engines run.
+    Replicated spec ``P()``: engines shard *populations*, not requests —
+    every input is full-size on every device.
+    """
+    me = process_index()
+    if all(d.process_index == me for d in mesh.devices.flat):
+        return arrays
+    from jax.sharding import NamedSharding
+
+    sharding = NamedSharding(mesh, P())
+    return tuple(jax.device_put(a, sharding) for a in arrays)
 
 
 def _resolve_inner(inner: str | None) -> str:
@@ -746,8 +765,10 @@ def _run_distributed(f: Callable[[jax.Array], jax.Array],
         engine = _engine_for(f, enc.with_bits(schedule[0]), mesh, pop_axes,
                              max_iters, virtual_block, inner, interpret,
                              tile_p, res_bits=schedule)
+        x0_d, quorum_d = _place_inputs(
+            mesh, jnp.asarray(x0, jnp.float32), quorum_mask)
         best_bits, best_val, best_res, iters, trace = engine(
-            jnp.asarray(x0, jnp.float32), quorum_mask)
+            x0_d, quorum_d)
         iters_h, trace_h, best_res_h = jax.device_get(
             (iters, trace, best_res))
         history = [float(v) for v in trace_h[: int(iters_h) + 1]]
@@ -755,7 +776,7 @@ def _run_distributed(f: Callable[[jax.Array], jax.Array],
         bits = best_bits[: enc.n_vars * b]      # live prefix of the buffer
         return bits, best_val, history, b
 
-    x = jnp.asarray(x0, jnp.float32)
+    (x,) = _place_inputs(mesh, jnp.asarray(x0, jnp.float32))
     history: list[float] = []
     best = None   # (float val, device val, bits, bits-per-var)
     for i, b in enumerate(schedule):
@@ -1255,6 +1276,10 @@ def _submit_batched(f: Callable[[jax.Array], jax.Array],
     # trace[0] is bitwise its per-request solve's (see _parent_vals)
     enc0 = enc.with_bits(schedule[0])
     vals0 = _parent_vals(f, decode(encode(x0s, enc0), enc0))
+    # request batches land on the (possibly process-spanning) mesh here:
+    # one explicit replicated put per wave, shared by both schedule paths
+    x0s, vals0, quorum_mask, active, slot_iters = _place_inputs(
+        mesh, x0s, vals0, quorum_mask, active, slot_iters)
 
     if len(schedule) == 1:
         engine = _batched_engine_for(f, enc0, mesh,

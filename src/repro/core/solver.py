@@ -396,17 +396,26 @@ class Fused(Strategy):
     """Whole optimization (population steps AND resolution schedule) in
     one jitted ``lax.while_loop`` on one device.
 
+    ``bucketed=True`` splits the schedule into a coarse and a fine width
+    bucket compiled separately (``dgo.make_fused_engine_bucketed``):
+    coarse resolutions then iterate at their own smaller buffer width
+    instead of masking the full-width children matrix.  The trajectory is
+    bitwise identical either way; schedules with no worthwhile split run
+    the single compilation.
+
     extras: ``bits``, ``evaluations``.
     """
 
     name: ClassVar[str] = "fused"
     max_bits: int | None = None
     bits_step: int = 2
+    bucketed: bool = False
 
     def _solve(self, problem, *, key, x0, max_iters):
         from repro.core import dgo
         cfg = self._config(problem, max_iters, self.max_bits, self.bits_step)
-        r = dgo._fused_result(problem.jax_fn, cfg, x0=x0, key=key)
+        run = dgo._bucketed_result if self.bucketed else dgo._fused_result
+        r = run(problem.jax_fn, cfg, x0=x0, key=key)
         return SolveResult(best_x=r.x, best_f=r.value,
                            iterations=int(r.iterations), trace=r.trace,
                            extras={"bits": r.bits,
@@ -464,12 +473,76 @@ _DEFAULT_MESH = None
 
 
 def _default_mesh():
-    """All local devices on a ("data",) axis — built once per process."""
+    """All devices on a ("data",) axis — built once per process.
+
+    ``jax.device_count()`` is the *global* count, so under a
+    ``jax.distributed`` fleet (``launch/launcher.py --processes K``) this
+    mesh spans every process automatically — the same launcher parameter
+    that sets the per-process virtual-device count thereby sets the
+    engine mesh geometry end to end.
+    """
     global _DEFAULT_MESH
     if _DEFAULT_MESH is None:
         _DEFAULT_MESH = make_mesh((jax.device_count(),), ("data",),
                                   axis_types=(AxisType.Auto,))
     return _DEFAULT_MESH
+
+
+_MESH_AXIS_NAMES = {1: ("data",), 2: ("data", "model"),
+                    3: ("pod", "data", "model")}
+
+
+def resolve_mesh(mesh=None):
+    """Normalize a mesh-geometry parameter to a concrete ``Mesh``.
+
+    Mesh geometry is a first-class engine parameter (it is a component of
+    every engine cache key and of :func:`engine_signature`); this is the
+    one normalization point.  Accepts:
+
+    * ``None`` — all devices on ``("data",)`` (the shared default mesh);
+    * an ``int`` N — an N-device ``("data",)`` mesh (N must equal the
+      device count; the launcher's ``--devices`` flag is how N devices
+      come to exist);
+    * a shape tuple — ``(data,)``, ``(data, model)`` or
+      ``(pod, data, model)`` with the conventional axis names;
+    * ``((name, size), ...)`` pairs — explicit geometry;
+    * a ``Mesh`` — passed through.
+
+    ``jax.make_mesh`` caches, so equal geometries resolve to the *same*
+    mesh object and compile-cache keys stay stable across calls.
+    """
+    if mesh is None:
+        return _default_mesh()
+    if isinstance(mesh, int):
+        mesh = (mesh,)
+    if isinstance(mesh, (tuple, list)):
+        entries = tuple(mesh)
+        if entries and all(isinstance(e, (tuple, list)) and len(e) == 2
+                           for e in entries):
+            names = tuple(str(n) for n, _ in entries)
+            shape = tuple(int(s) for _, s in entries)
+        elif all(isinstance(e, int) for e in entries):
+            if len(entries) not in _MESH_AXIS_NAMES:
+                raise ValueError(
+                    f"shape-only mesh geometry supports 1-3 axes "
+                    f"{tuple(_MESH_AXIS_NAMES.values())}, got {entries}; "
+                    f"pass ((name, size), ...) pairs for custom axes")
+            names = _MESH_AXIS_NAMES[len(entries)]
+            shape = entries
+        else:
+            raise TypeError(f"bad mesh geometry: {mesh!r}")
+        total = 1
+        for s in shape:
+            total *= s
+        if total != jax.device_count():
+            raise ValueError(
+                f"mesh geometry {tuple(zip(names, shape))} needs {total} "
+                f"devices but {jax.device_count()} exist — launch with "
+                f"`python -m repro.launch.launcher --devices N -- ...` "
+                f"to size the virtual fleet")
+        return make_mesh(shape, names,
+                         axis_types=(AxisType.Auto,) * len(names))
+    return mesh
 
 
 @_register
@@ -505,7 +578,7 @@ class Distributed(Strategy):
 
     def _solve(self, problem, *, key, x0, max_iters):
         from repro.core import distributed
-        mesh = self.mesh if self.mesh is not None else _default_mesh()
+        mesh = resolve_mesh(self.mesh)
         mi = 256 if max_iters is None else max_iters
         enc0 = problem.encoding
         if x0 is None:
@@ -563,7 +636,7 @@ class Batched(Strategy):
 
     def _solve(self, problem, *, key, x0, max_iters):
         from repro.core import distributed
-        mesh = self.mesh if self.mesh is not None else _default_mesh()
+        mesh = resolve_mesh(self.mesh)
         mi = 256 if max_iters is None else max_iters
         enc0 = problem.encoding
         if x0 is None:
@@ -737,7 +810,7 @@ def engine_signature(problem, *, mesh=None, pop_axes=("data",),
     """
     prob = as_problem(problem)
     schedule = _resolution_schedule(prob.encoding, max_bits, bits_step)
-    mesh = mesh if mesh is not None else _default_mesh()
+    mesh = resolve_mesh(mesh)
     enc0 = prob.encoding.with_bits(schedule[0])
     fid = prob.signature if prob.signature is not None else prob.jax_fn
     return ("batched", fid, enc0, mesh, tuple(pop_axes),
@@ -859,7 +932,7 @@ def submit_wave(requests, *, mesh=None, pop_axes=("data",),
     reqs = [_as_request(r) for r in requests]
     if not reqs:
         raise ValueError("submit_wave needs at least one request")
-    mesh = mesh if mesh is not None else _default_mesh()
+    mesh = resolve_mesh(mesh)
     sigs = {engine_signature(req.problem, mesh=mesh, pop_axes=pop_axes,
                              virtual_block=virtual_block,
                              max_bits=max_bits, bits_step=bits_step)
@@ -930,7 +1003,7 @@ def solve_many(requests, *, mesh=None, pop_axes=("data",),
     per-handle policy so one NaN cannot fail its wave-mates).
     """
     reqs = [_as_request(r) for r in requests]
-    mesh = mesh if mesh is not None else _default_mesh()
+    mesh = resolve_mesh(mesh)
     if pad_to is not None and pad_to < 1:
         raise ValueError(f"pad_to must be >= 1, got {pad_to}")
 

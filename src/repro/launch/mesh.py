@@ -1,17 +1,26 @@
-"""Production mesh builders.
+"""Production mesh builders + mesh-geometry helpers.
 
 A function, not a module-level constant: importing this module never touches
-jax device state (the dry-run must set XLA_FLAGS before first jax init).
+jax device state (the dry-run and ``launch/launcher.py`` must set XLA_FLAGS
+before first jax init — device counts here always *derive* from the live
+topology, never hardcode it).
 
 Single pod: (16, 16) = 256 chips, axes (data, model) — v5e pod.
 Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the ``pod``
 axis carries DCN-level data parallelism (and DGO cluster parallelism).
+
+Geometry helpers: ``mesh_geometry`` is the canonical ``((name, size), ...)``
+spelling of a mesh (round-trips through ``repro.core.resolve_mesh``);
+``spans_processes`` / ``replicate_to_mesh`` are the multi-process placement
+surface — under a launcher fleet (``--processes K``) request batches are
+``device_put`` replicated onto each worker's shard of the global mesh.
 """
 from __future__ import annotations
 
 import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.compat import AxisType, make_mesh
+from repro.compat import AxisType, make_mesh, process_index
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -39,3 +48,31 @@ def data_shards(mesh) -> int:
     for a in batch_axes(mesh):
         n *= mesh.shape[a]
     return n
+
+
+def mesh_geometry(mesh) -> tuple[tuple[str, int], ...]:
+    """The mesh's geometry as ``((name, size), ...)`` pairs — the
+    canonical, device-free spelling accepted back by
+    ``repro.core.resolve_mesh`` (and the form bench/CI reports log)."""
+    return tuple((str(name), int(size))
+                 for name, size in mesh.shape.items())
+
+
+def spans_processes(mesh) -> bool:
+    """True when the mesh includes devices owned by another process
+    (a ``jax.distributed`` fleet mesh, e.g. from the launcher's
+    ``--processes K`` mode)."""
+    me = process_index()
+    return any(d.process_index != me for d in mesh.devices.flat)
+
+
+def replicate_to_mesh(x, mesh):
+    """``device_put`` a host batch replicated onto the mesh.
+
+    Single-process meshes let jit pick placement for uncommitted arrays;
+    a fleet mesh needs the transfer stated explicitly so each worker puts
+    its (identical) host copy onto its own shard of the global device
+    set.  Replicated spec: every engine input is full-size on every
+    device; the engines shard *populations*, not requests.
+    """
+    return jax.device_put(x, NamedSharding(mesh, P()))

@@ -20,6 +20,7 @@ PUBLIC_API = [
     "SolveResult",
     "Strategy",
     "engine_signature",
+    "resolve_mesh",
     "result_is_finite",
     "solve",
     "solve_many",

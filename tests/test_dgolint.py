@@ -346,6 +346,48 @@ def test_dgl006_full_triple_with_resolved_interpret_is_clean(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# DGL007 multi-process bypass
+# ---------------------------------------------------------------------------
+
+def test_dgl007_flags_distributed_imports_and_attributes(tmp_path):
+    write(tmp_path, "pkg/bad.py", """\
+        import jax
+        import jax.distributed
+        from jax.distributed import initialize
+        from jax import process_index
+
+        def boot():
+            jax.distributed.initialize("127.0.0.1:9999", 2, 0)
+            return jax.process_count()
+    """)
+    findings, _ = run(tmp_path, "pkg", select="DGL007")
+    assert codes(findings) == ["DGL007"] * 5
+    msgs = " | ".join(f.message for f in findings)
+    assert "repro.compat" in msgs
+    assert "jax.distributed" in msgs
+    assert "process_count" in msgs
+
+
+def test_dgl007_clean_via_compat_and_exempts_compat_itself(tmp_path):
+    write(tmp_path, "pkg/good.py", """\
+        from repro.compat import distributed_initialize, process_index
+
+        def boot(coord):
+            distributed_initialize(coord, 2, 0)
+            return process_index()
+    """)
+    # the shim itself is the one sanctioned site
+    write(tmp_path, "src/repro/compat.py", """\
+        import jax
+
+        def process_index():
+            return int(jax.process_index())
+    """)
+    findings, _ = run(tmp_path, "pkg", "src", select="DGL007")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # suppression + baseline mechanics
 # ---------------------------------------------------------------------------
 
@@ -477,7 +519,7 @@ def test_cli_list_rules(capsys):
     assert cli_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for code in ("DGL001", "DGL002", "DGL003", "DGL004", "DGL005",
-                 "DGL006"):
+                 "DGL006", "DGL007"):
         assert code in out
 
 

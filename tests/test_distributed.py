@@ -256,6 +256,65 @@ def test_compressed_dp_gradients_close_to_exact():
     assert json.loads(out.splitlines()[-1])["ok"]
 
 
+_TRAJECTORY_CODE = """
+    import jax, jax.numpy as jnp, json
+    from repro.core.solver import Distributed, solve
+    res = solve("rastrigin", strategy=Distributed(max_bits=11),
+                x0=jnp.asarray([3.1, -2.2]), max_iters=48)
+    print(json.dumps({"n_dev": jax.device_count(),
+                      "best_f": float(res.best_f),
+                      "history": [float(v) for v in
+                                  res.extras["history"]]}))
+"""
+
+
+def test_16_device_mesh_trajectory_matches_8_device_bitwise():
+    """Mesh-size invariance at the PR-10 scale-out sizes: the default
+    (launcher-sized) mesh at 16 virtual devices reproduces the 8-device
+    trajectory bit for bit — shard chunking must not leak into results."""
+    r8 = json.loads(run_with_devices(_TRAJECTORY_CODE, n=8)
+                    .splitlines()[-1])
+    r16 = json.loads(run_with_devices(_TRAJECTORY_CODE, n=16)
+                     .splitlines()[-1])
+    assert (r8["n_dev"], r16["n_dev"]) == (8, 16)
+    assert r16["best_f"] == r8["best_f"]
+    assert r16["history"] == r8["history"]
+
+
+def test_resolve_mesh_geometries_and_signature_pinning():
+    """resolve_mesh accepts counts/shapes/name-size pairs, rejects
+    geometry that cannot tile the device count, and distinct geometries
+    produce distinct engine_signatures (the compile-cache key carries
+    the mesh)."""
+    out = run_with_devices("""
+        import jax, json
+        import pytest
+        from repro.core.solver import (Problem, engine_signature,
+                                       resolve_mesh)
+        from repro.launch.mesh import mesh_geometry
+        assert mesh_geometry(resolve_mesh()) == (("data", 8),)
+        assert mesh_geometry(resolve_mesh(8)) == (("data", 8),)
+        assert mesh_geometry(resolve_mesh((4, 2))) == (("data", 4),
+                                                       ("model", 2))
+        assert mesh_geometry(resolve_mesh((("pod", 2), ("data", 4)))) \\
+            == (("pod", 2), ("data", 4))
+        # geometry-equal resolves give the same (cached) Mesh object,
+        # so compile-cache keys that carry the mesh stay stable
+        assert resolve_mesh(8) is resolve_mesh(8)
+        with pytest.raises(ValueError):
+            resolve_mesh(3)          # 3 does not match 8 devices
+        with pytest.raises(ValueError):
+            resolve_mesh((5, 2))
+        prob = Problem.get("rastrigin", n=2)
+        sig_flat = engine_signature(prob, mesh=resolve_mesh(8))
+        sig_grid = engine_signature(prob, mesh=resolve_mesh((4, 2)))
+        assert sig_flat != sig_grid
+        assert sig_flat == engine_signature(prob, mesh=resolve_mesh(8))
+        print(json.dumps({"ok": True}))
+    """)
+    assert json.loads(out.splitlines()[-1])["ok"]
+
+
 def test_subspace_dgo_train_step_descends():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, json

@@ -78,6 +78,61 @@ def test_distributed_schedule_folding_improves_resolution():
     assert np.isclose(float(fine.best_f), float(fused.best_f), atol=1e-4)
 
 
+@pytest.mark.parametrize("pname,n,start", [
+    ("rastrigin", 2, (3.1, -2.2)),
+    ("ackley", 5, (2.0, -4.0, 1.0, 0.5, -3.0)),
+    ("quadratic", 9, (5.0,) * 9),
+])
+def test_fused_bucketed_matches_single_compilation_bitwise(pname, n, start):
+    """Fused(bucketed=True) splits the schedule into coarse/fine width
+    buckets (two compilations, smaller coarse buffers) — the trajectory
+    must be BITWISE identical to the one-compilation engine."""
+    prob = Problem.get(pname, n=n)
+    prob = prob.replace(encoding=prob.encoding.with_bits(5))
+    x0 = jnp.asarray(start)
+    a = solve(prob, Fused(max_bits=13), x0=x0, max_iters=MAX_ITERS)
+    b = solve(prob, Fused(max_bits=13, bucketed=True), x0=x0,
+              max_iters=MAX_ITERS)
+    assert float(a.best_f) == float(b.best_f)
+    assert np.array_equal(np.asarray(a.best_x), np.asarray(b.best_x))
+    assert np.array_equal(np.asarray(a.trace), np.asarray(b.trace))
+    for k in ("bits", "evaluations"):
+        assert np.array_equal(np.asarray(a.extras[k]),
+                              np.asarray(b.extras[k])), k
+
+
+def test_bucket_split_and_bucketed_engine_validation():
+    from repro.core.dgo import (DGOConfig, bucket_split,
+                                make_fused_engine_bucketed)
+    prob = Problem.get("quadratic", n=2)
+
+    def cfg(bits, max_bits):
+        return DGOConfig(encoding=prob.encoding.with_bits(bits),
+                         max_bits=max_bits,
+                         max_iters_per_resolution=8)
+
+    # schedule (3,5,7,9,11): coarse = widths at <= half the final (3,5)
+    assert bucket_split(cfg(3, 11)) == 2
+    # (7,9,11): nothing at <= 5.5 -> no coarse bucket
+    assert bucket_split(cfg(7, 11)) == 0
+    for bad in (0, 5, -1):
+        with pytest.raises(ValueError):
+            make_fused_engine_bucketed(prob.fn, cfg(3, 11), n_coarse=bad)
+
+
+def test_fused_bucketed_degenerate_schedule_falls_back():
+    """A schedule with no coarse bucket (or a single resolution) runs the
+    plain fused engine — same result object, no error."""
+    prob = Problem.get("quadratic", n=2)
+    prob = prob.replace(encoding=prob.encoding.with_bits(7))
+    x0 = jnp.asarray([4.0, -3.0])
+    a = solve(prob, Fused(max_bits=11), x0=x0, max_iters=MAX_ITERS)
+    b = solve(prob, Fused(max_bits=11, bucketed=True), x0=x0,
+              max_iters=MAX_ITERS)
+    assert float(a.best_f) == float(b.best_f)
+    assert np.array_equal(np.asarray(a.trace), np.asarray(b.trace))
+
+
 def _chained_reference(prob, schedule, x0, max_iters, strategy_kw=None):
     """The removed Python-level chaining loop, reconstructed as a test
     oracle: one fixed-resolution solve() per resolution, re-encoding the

@@ -19,7 +19,11 @@ express (they are about THIS codebase's contracts, not Python style):
   substrate (no wall-clock or unseeded RNG decisions);
 * DGL005 — lock discipline on the serving thread boundary;
 * DGL006 — the kernels package triple (``kernel.py``/``ref.py``/
-  ``ops.py``) and guarded ``pallas_call`` backend selection.
+  ``ops.py``) and guarded ``pallas_call`` backend selection;
+* DGL007 — multi-process runtime APIs (``jax.distributed``,
+  ``jax.process_index``/``jax.process_count``) go through the
+  ``repro.compat`` shims, which pin the gloo cpu-collectives config
+  before ``initialize`` and keep the 0.4/0.5 kwarg drift in one file.
 
 Everything is stdlib ``ast`` — no JAX import, no third-party deps — so
 the gate runs anywhere, including environments where ruff/jax are not
@@ -63,7 +67,7 @@ __all__ = [
 class Finding:
     """One rule violation at a source location."""
 
-    code: str          # "DGL001" ... "DGL006"
+    code: str          # "DGL001" ... "DGL007"
     path: str          # repo-relative, forward slashes
     line: int          # 1-based
     col: int           # 0-based

@@ -695,6 +695,81 @@ class KernelTripleRule(Rule):
                     f"kernel.py/ref.py/ops.py triple")
 
 
+# ---------------------------------------------------------------------------
+# DGL007 — multi-process JAX APIs go through repro.compat
+# ---------------------------------------------------------------------------
+
+_MULTIPROC_LEAVES = {"process_index", "process_count"}
+
+
+class MultiProcessBypassRule(Rule):
+    """Multi-process runtime APIs must be reached via ``repro.compat``.
+
+    ``jax.distributed.initialize`` grew/renamed kwargs across the 0.4/0.5
+    matrix and needs the gloo cpu-collectives config set BEFORE it runs;
+    ``jax.process_index``/``jax.process_count`` exist everywhere but the
+    repo routes them through ``repro.compat`` so single-process callers
+    never import distributed machinery.  Flags (a) any import of
+    ``jax.distributed`` (module or from-import), and (b) attribute
+    chains rooted at ``jax`` reaching ``distributed`` or the process
+    topology calls — everywhere except ``src/repro/compat.py``.
+    """
+
+    code = "DGL007"
+    name = "multiprocess-bypass"
+    rationale = ("jax.distributed / process-topology APIs are only "
+                 "touched through src/repro/compat.py (same policy as "
+                 "DGL001; the gloo collectives config must precede "
+                 "initialize)")
+
+    def _exempt(self, src: SourceFile) -> bool:
+        return src.path.endswith("repro/compat.py")
+
+    def check_file(self, src: SourceFile) -> Iterable[Finding]:
+        if self._exempt(src):
+            return
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == "jax.distributed" or mod.startswith(
+                        "jax.distributed."):
+                    yield Finding(
+                        self.code, src.path, node.lineno, node.col_offset,
+                        f"import from '{mod}' bypasses repro.compat — use "
+                        f"repro.compat.distributed_initialize / "
+                        f"process_index / process_count")
+                elif mod == "jax":
+                    for alias in node.names:
+                        if (alias.name == "distributed"
+                                or alias.name in _MULTIPROC_LEAVES):
+                            yield Finding(
+                                self.code, src.path, node.lineno,
+                                node.col_offset,
+                                f"import of '{alias.name}' from 'jax' "
+                                f"bypasses repro.compat — use the "
+                                f"'repro.compat' multi-process shims")
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if (alias.name == "jax.distributed"
+                            or alias.name.startswith("jax.distributed.")):
+                        yield Finding(
+                            self.code, src.path, node.lineno,
+                            node.col_offset,
+                            f"import of '{alias.name}' bypasses "
+                            f"repro.compat")
+            elif isinstance(node, ast.Attribute):
+                full = dotted_name(node)
+                # match the chain exactly once: at the 'jax.distributed'
+                # root, or at a process-topology leaf hanging off jax
+                if full == "jax.distributed" or (
+                        full and full.startswith("jax.")
+                        and node.attr in _MULTIPROC_LEAVES):
+                    yield Finding(
+                        self.code, src.path, node.lineno, node.col_offset,
+                        f"attribute use '{full}' bypasses repro.compat — "
+                        f"use the 'repro.compat' multi-process shims")
+
+
 def ALL_RULES() -> list[Rule]:
     return [
         CompatBypassRule(),
@@ -703,4 +778,5 @@ def ALL_RULES() -> list[Rule]:
         NondeterminismRule(),
         LockDisciplineRule(),
         KernelTripleRule(),
+        MultiProcessBypassRule(),
     ]
